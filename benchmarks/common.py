@@ -1,0 +1,34 @@
+"""Shared benchmark utilities."""
+
+import json
+import os
+import time
+
+import jax
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts")
+
+
+def ensure_x64():
+    jax.config.update("jax_enable_x64", True)
+
+
+def timeit(fn, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_artifact(name: str, obj):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, name), "w") as f:
+        json.dump(obj, f, indent=1, default=str)

@@ -1,0 +1,85 @@
+"""Paper Fig. 3a: multi-device scaling of the eigensolver.
+
+The container exposes one physical core, so fake-device wall-times carry no
+speedup signal; what IS measurable and decisive for scaling is the paper's
+own argument (§III-A): per-device work (nnz, flops, bytes) and the per-
+iteration communication volume (1 all-gather + 2 scalar psums + 1 k-psum).
+This benchmark partitions the suite across G in {1,2,4,8} shards in an
+8-fake-device subprocess, verifies eigenvalue agreement across G, and
+reports per-device work + wire bytes + a v5e time model per G.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit, save_artifact
+
+_SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.sparse import suite_matrix
+from repro.core import FDF
+from repro.core.partition import nnz_balanced_splits, partition_matrix
+from repro.core.distributed import topk_eigs_sharded
+
+out = []
+for mid in ("WK", "KRON"):
+    csr = suite_matrix(mid, values="normalized", scale=0.125)
+    devs = np.array(jax.devices())
+    base_vals = None
+    for g in (1, 2, 4, 8):
+        mesh = Mesh(devs[:g].reshape(g), ("data",))
+        import time
+        r = topk_eigs_sharded(csr, 8, mesh, policy=FDF, reorth="full", num_iters=16, seed=2)
+        t0 = time.perf_counter()
+        r = topk_eigs_sharded(csr, 8, mesh, policy=FDF, reorth="full", num_iters=16, seed=2)
+        wall = time.perf_counter() - t0
+        vals = np.asarray(r.eigenvalues, dtype=np.float64)
+        if base_vals is None:
+            base_vals = vals
+        pm = partition_matrix(csr, g)
+        splits = nnz_balanced_splits(csr.indptr, g)
+        per_nnz = np.diff(csr.indptr[splits]).max()
+        n_pad = pm.n_pad
+        # per-iteration wire bytes per device (ring all-gather of x + psums)
+        ag_bytes = (g - 1) * n_pad * 4
+        out.append(dict(matrix=mid, n=csr.n, nnz=csr.nnz, g=g,
+                        max_shard_nnz=int(per_nnz), n_pad=int(n_pad),
+                        allgather_bytes_per_iter=int(ag_bytes),
+                        wall_s=wall,
+                        max_abs_dev_from_g1=float(np.abs(vals - base_vals).max())))
+print("JSON:" + json.dumps(out))
+"""
+
+
+def run():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+                          env=env, timeout=2400)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("JSON:")][-1]
+    rows = json.loads(line[5:])
+    for r in rows:
+        # v5e model: compute-side bytes shrink ~1/G; wire grows with (G-1)/G
+        t_mem = (r["max_shard_nnz"] * 12 + 6 * r["n_pad"] * 4) / 819e9
+        t_wire = r["allgather_bytes_per_iter"] / 50e9
+        r["v5e_model_iter_s"] = t_mem + t_wire
+        emit(
+            f"fig3a/{r['matrix']}/g{r['g']}", r["wall_s"] * 1e6,
+            f"shard_nnz={r['max_shard_nnz']} wire/iter={r['allgather_bytes_per_iter']} "
+            f"v5e_iter={r['v5e_model_iter_s']*1e6:.1f}us dev_from_g1={r['max_abs_dev_from_g1']:.2e}",
+        )
+    save_artifact("fig3a_multidev.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Paper Fig. 4: L2 reconstruction error vs execution time per precision
+policy.  Reproduces the paper's FFF / FDF / DDD frontier exactly (true f64 on
+CPU) and extends it with the TPU-native ladder (BFF/HFF bf16/f16 storage,
+FCF/BCF compensated-f32 compute) — the DESIGN.md §3 hardware adaptation.
+
+Methodology: each (matrix, policy) runs the thick-restart solver until the
+Ritz residual stalls at the policy's own floating-point floor (or converges
+to 1e-9) — so the reported error measures PRECISION, not Krylov truncation.
+A fixed-m solve (the paper's configuration) is reported alongside."""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, ensure_x64, save_artifact
+
+
+def run(matrices=("WB-TA", "FL", "WK", "KRON"), k=8, scale=0.125, m_mult=3):
+    ensure_x64()
+    from repro.core import BCF, BFF, DDD, FCF, FDF, FFF, HFF, make_operator, topk_eigs
+    from repro.core.metrics import reconstruction_error
+    from repro.sparse import suite_matrix
+
+    from repro.core.restarted import topk_eigs_restarted
+
+    rows = []
+    for mid in matrices:
+        csr = suite_matrix(mid, values="normalized", scale=scale)
+        for pol in (FFF, FDF, DDD, BFF, HFF, FCF, BCF):
+            op = make_operator(csr, "coo", dtype=pol.storage)
+            t0 = time.perf_counter()
+            r = topk_eigs_restarted(op, k, policy=pol, m=m_mult * k, tol=1e-9,
+                                    max_restarts=12)
+            wall = time.perf_counter() - t0
+            err = reconstruction_error(op, r.eigenvalues, r.eigenvectors, accum_dtype=jnp.float64)
+            rows.append(dict(matrix=mid, policy=pol.name, k=k, wall_s=wall, l2_err=float(err),
+                             mode="restarted_floor"))
+            emit(f"fig4/{mid}/{pol.name}", wall * 1e6, f"l2={err:.3e} (policy floor)")
+            if pol.name in ("FFF", "FDF", "DDD"):
+                # the paper's configuration: fixed subspace, no restarts
+                t0 = time.perf_counter()
+                rf = topk_eigs(op, k, policy=pol, reorth="full", num_iters=m_mult * k)
+                wallf = time.perf_counter() - t0
+                errf = reconstruction_error(op, rf.eigenvalues, rf.eigenvectors,
+                                            accum_dtype=jnp.float64)
+                rows.append(dict(matrix=mid, policy=pol.name, k=k, wall_s=wallf,
+                                 l2_err=float(errf), mode="fixed_m"))
+                emit(f"fig4fix/{mid}/{pol.name}", wallf * 1e6, f"l2={errf:.3e} (paper config)")
+    # aggregate paper claims: storage-precision gain from the floors
+    # (geometric mean); FDF-vs-DDD error and time at the paper's fixed-m config
+    import numpy as _np
+
+    def gmean(v):
+        return float(_np.exp(_np.mean(_np.log(_np.maximum(v, 1e-300)))))
+
+    floors = {p: gmean([x["l2_err"] for x in rows
+                        if x["policy"] == p and x["mode"] == "restarted_floor"])
+              for p in ("FFF", "FDF", "DDD", "BFF", "HFF", "FCF", "BCF")}
+    fixed = {p: [x for x in rows if x["policy"] == p and x["mode"] == "fixed_m"]
+             for p in ("FFF", "FDF", "DDD")}
+    agg = {"floors": floors}
+    if all(fixed.values()):
+        fdf_fix = gmean([x["l2_err"] for x in fixed["FDF"]])
+        ddd_fix = gmean([x["l2_err"] for x in fixed["DDD"]])
+        t_fdf = float(np.mean([x["wall_s"] for x in fixed["FDF"]]))
+        t_ddd = float(np.mean([x["wall_s"] for x in fixed["DDD"]]))
+        agg["claims"] = dict(
+            fdf_vs_fff_accuracy=floors["FFF"] / floors["FDF"],
+            fdf_vs_ddd_err_fixed_m=fdf_fix / max(ddd_fix, 1e-300),
+            ddd_vs_fdf_time_fixed_m=t_ddd / max(t_fdf, 1e-300),
+        )
+        emit("fig4/claims", 0.0,
+             f"FDF_floor_improvement_over_FFF={agg['claims']['fdf_vs_fff_accuracy']:.1f}x "
+             f"(paper: 12x) FDF_vs_DDD_err@fixed_m={agg['claims']['fdf_vs_ddd_err_fixed_m']:.2f}x "
+             f"(paper: 1.4x) DDD_vs_FDF_time@fixed_m="
+             f"{agg['claims']['ddd_vs_fdf_time_fixed_m']:.2f}x (paper: 1.5x)")
+    save_artifact("fig4_precision.json", {"rows": rows, "aggregate": agg})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

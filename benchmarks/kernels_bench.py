@@ -1,0 +1,56 @@
+"""Kernel-level roofline: arithmetic intensity + VMEM working set for each
+Pallas kernel, plus measured wall time of the jnp reference path (interpret
+mode timing is meaningless — TPU is the target, see DESIGN.md §4)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, ensure_x64, save_artifact, timeit
+
+
+def run():
+    ensure_x64()
+    from repro.kernels import ref
+    from repro.sparse import suite_matrix, to_device_ell
+
+    rows = []
+    csr = suite_matrix("WK", values="unit", scale=0.25)
+    ell = to_device_ell(csr, dtype=jnp.float32)
+    n = ell.val.shape[0]
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
+
+    # spmv_ell: bytes = val + col + gathered x + y; flops = 2*nnz_slots
+    slots = ell.val.size
+    bytes_ = slots * (4 + 4 + 4) + n * 4
+    flops = 2 * slots
+    t = timeit(lambda: ref.spmv_ell_ref(ell.val, ell.col, x).block_until_ready())
+    vmem_kib = (8 * 512 * (4 + 4) + n * 4 + 8 * 4) / 1024
+    rows.append(dict(kernel="spmv_ell", flops=flops, bytes=bytes_,
+                     intensity=flops / bytes_, ref_wall_s=t, vmem_tile_kib=vmem_kib,
+                     v5e_bound_us=bytes_ / 819e9 * 1e6))
+    emit("kernels/spmv_ell", t * 1e6,
+         f"AI={flops/bytes_:.3f} v5e_mem_bound={bytes_/819e9*1e6:.1f}us vmem={vmem_kib:.0f}KiB")
+
+    a = jnp.asarray(np.random.default_rng(1).standard_normal(1 << 20), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(2).standard_normal(1 << 20), jnp.float32)
+    t = timeit(lambda: ref.mixed_dot_ref(a, b, accum_dtype=jnp.float32).block_until_ready())
+    bytes_ = 2 * a.size * 4
+    rows.append(dict(kernel="mixed_dot", flops=2 * a.size, bytes=bytes_,
+                     intensity=2 * a.size / bytes_, ref_wall_s=t,
+                     v5e_bound_us=bytes_ / 819e9 * 1e6))
+    emit("kernels/mixed_dot", t * 1e6, f"AI=0.25 v5e_mem_bound={bytes_/819e9*1e6:.1f}us")
+
+    w, v, vp = a, b, jnp.roll(a, 1)
+    t = timeit(lambda: ref.lanczos_update_ref(w, v, vp, jnp.float32(0.5), jnp.float32(0.2))[0].block_until_ready())
+    bytes_fused = 4 * a.size * 4  # 3 reads + 1 write, norm fused (vs 6x unfused)
+    rows.append(dict(kernel="lanczos_update", flops=5 * a.size, bytes=bytes_fused,
+                     ref_wall_s=t, v5e_bound_us=bytes_fused / 819e9 * 1e6,
+                     note="fusion saves 2 passes vs separate axpy+axpy+norm"))
+    emit("kernels/lanczos_update", t * 1e6,
+         f"v5e_mem_bound={bytes_fused/819e9*1e6:.1f}us fused_saves=33%_of_passes")
+    save_artifact("kernels_bench.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

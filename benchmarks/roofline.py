@@ -1,0 +1,259 @@
+"""Roofline analysis per (arch x shape x mesh) — EXPERIMENTS.md §Roofline.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Three terms per cell, in seconds per train/serve step:
+
+  compute    = FLOPs_per_device / 197e12
+  memory     = HBM_bytes_per_device / 819e9
+  collective = wire_bytes_per_device / 50e9
+
+FLOPs/bytes come from an *analytic* per-architecture model (below) because
+``compiled.cost_analysis()`` counts while-loop bodies once (layer scan,
+grad-accumulation scan, attention/CE chunk scans), undercounting by the trip
+product; the HLO numbers are still recorded and cross-checked (the analytic
+per-body value must exceed the HLO body count).  Collective wire bytes use
+the analytic schedule (DP/FSDP gradient reduction, TP/SP per-layer
+all-reduces or AG+RS, EP all-to-all), cross-checked against the dry-run's
+per-op collective inventory (op types and counts parsed from the optimized
+HLO prove the schedule exists as modeled).
+
+MODEL_FLOPS is 6*N*D (dense) / 6*N_active*D (MoE) per the assignment;
+the useful-compute ratio divides it by the analytic executed total
+(which includes remat recompute, attention, dispatch and CE overheads).
+"""
+
+import glob
+import json
+import math
+import os
+from typing import Dict
+
+from .common import ARTIFACTS, emit, save_artifact
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30
+
+
+# --------------------------------------------------------------------------
+# analytic per-arch model
+# --------------------------------------------------------------------------
+
+def _cfg(arch):
+    from repro.configs import get_config
+
+    return get_config(arch)
+
+
+def layer_matmul_params(cfg) -> Dict[str, float]:
+    """Per-layer matmul parameter counts, split by role."""
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.hd
+    attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * d
+    out = {"attn": attn, "mlp": 3 * d * f, "moe_active": 0.0, "rec": 0.0, "ssd": 0.0}
+    if cfg.n_experts:
+        out["moe_active"] = cfg.moe_top_k * 3 * d * f + (3 * d * f if cfg.dense_residual else 0)
+        out["moe_total"] = cfg.n_experts * 3 * d * f + (3 * d * f if cfg.dense_residual else 0)
+        out["mlp"] = 0.0
+    if cfg.family == "hybrid_rglru":
+        w = cfg.lru_width or d
+        out["rec"] = 2 * d * w + w * d + 2 * w * w
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        out["ssd"] = d * (2 * di + 2 * cfg.ssm_state + cfg.n_ssm_heads) + di * d
+        out["attn"] = 0.0
+        out["mlp"] = 0.0
+    return out
+
+
+def analytic_cell(arch: str, shape_name: str, num_devices: int, accum: int = 1) -> Dict:
+    """Per-device flops / HBM bytes / wire bytes for one step of this cell."""
+    from repro.configs import SHAPES
+    from repro.launch.dryrun import estimate_param_count, plan_cell
+
+    cfg = _cfg(arch)
+    shape = SHAPES[shape_name]
+    cfg_planned, optimizer, n_params = plan_cell(cfg, shape, num_devices)
+    d = cfg.d_model
+    lm = layer_matmul_params(cfg)
+    pat = {"hybrid_rglru": ("rec", "rec", "attn")}.get(cfg.family)
+    model_axis = 16
+    dp_axis = num_devices // model_axis  # pod*data
+    tokens_global = shape.global_batch * (1 if shape.mode == "decode" else shape.seq_len)
+    tokens_dev = tokens_global / dp_axis  # seq/act sharding spreads the rest
+
+    # ---- forward flops per token (x2 per matmul param) ----
+    if cfg.family == "hybrid_rglru":
+        n_attn = cfg.n_layers // 3
+        n_rec = cfg.n_layers - n_attn
+        layer_flops = 2 * (n_rec * (lm["rec"] + 3 * d * cfg.d_ff) + n_attn * (lm["attn"] + 3 * d * cfg.d_ff))
+        attn_layers = n_attn
+    elif cfg.family == "ssm":
+        layer_flops = 2 * cfg.n_layers * lm["ssd"]
+        attn_layers = 0
+    elif cfg.family == "encdec":
+        layer_flops = 2 * (cfg.n_enc_layers * (lm["attn"] + lm["mlp"]) +
+                           cfg.n_layers * (2 * lm["attn"] + lm["mlp"]))
+        attn_layers = cfg.n_enc_layers + 2 * cfg.n_layers
+    else:
+        per = lm["attn"] + (lm["moe_active"] if cfg.n_experts else lm["mlp"])
+        layer_flops = 2 * cfg.n_layers * per
+        attn_layers = cfg.n_layers
+    head_flops = 2 * d * cfg.vocab_padded  # lm head (+embedding one-hot matmul)
+
+    # attention score/AV flops per token: 4 * heads * hd * context
+    if shape.mode == "train":
+        ctx = shape.seq_len / 2
+    elif shape.mode == "prefill":
+        ctx = shape.seq_len / 2
+    else:
+        ctx = min(shape.seq_len, cfg.window or shape.seq_len)
+    if cfg.window:
+        ctx = min(ctx, cfg.window)
+    attn_flops = 4 * cfg.n_heads * cfg.hd * ctx * attn_layers  # per token, all attn layers
+    # ssd intra-chunk term: ~2 * chunk * (heads*hd + 2*state) per token
+    if cfg.family == "ssm":
+        attn_flops = 2 * cfg.ssm_chunk * (cfg.d_inner + 2 * cfg.ssm_state) + \
+            2 * cfg.ssm_state * cfg.d_inner  # inter-chunk state update
+    if cfg.family == "hybrid_rglru":
+        attn_flops = 4 * cfg.n_heads * cfg.hd * min(ctx, cfg.window or ctx) * attn_layers
+
+    fwd_per_token = layer_flops + attn_flops + head_flops
+    if shape.mode == "train":
+        # fwd + full-remat recompute + bwd = 4x fwd-equivalent matmul work
+        flops_dev = 4 * fwd_per_token * tokens_dev / model_axis
+        mode_factor = "4x (fwd+remat+bwd)"
+    else:
+        flops_dev = fwd_per_token * tokens_dev / model_axis
+        mode_factor = "1x"
+
+    # ---- HBM bytes per device ----
+    pbytes = 4 if optimizer == "adamw" else 2
+    params_dev = n_params * pbytes / num_devices  # FSDP x TP fully sharded
+    if shape.mode == "train":
+        opt_touch = params_dev * (5 if optimizer == "adamw" else 2.5)  # p,g,m,v r/w
+        # weights touched fwd + recompute + bwd (per microbatch)
+        weight_traffic = 3 * params_dev * accum
+        act_traffic = 8 * tokens_dev * d * 2 / model_axis * cfg.n_layers
+        kv_traffic = 4 * tokens_dev * cfg.n_kv_heads * cfg.hd * 2 * attn_layers
+        bytes_dev = opt_touch + weight_traffic + act_traffic + kv_traffic
+    elif shape.mode == "prefill":
+        bytes_dev = params_dev + 8 * tokens_dev * d * 2 / model_axis * cfg.n_layers
+    else:  # decode: weights + cache
+        cache_len = min(shape.seq_len, cfg.window or shape.seq_len)
+        if cfg.family == "ssm":
+            cache_bytes = shape.global_batch * cfg.n_layers * cfg.n_ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+        elif cfg.family == "hybrid_rglru":
+            n_attn = cfg.n_layers // 3
+            cache_bytes = shape.global_batch * (
+                n_attn * cache_len * cfg.n_kv_heads * cfg.hd * 2 * 2
+                + (cfg.n_layers - n_attn) * (cfg.lru_width or d) * 4
+            )
+        else:
+            cache_bytes = (shape.global_batch * cfg.n_layers * cache_len *
+                           cfg.n_kv_heads * cfg.hd * 2 * 2)
+        # cache fully sharded (batch over dp, heads/seq over model); 1.5x for
+        # read + partial rewrite of the updated slot region
+        bytes_dev = params_dev + 1.5 * cache_bytes / num_devices
+
+    # ---- collective wire bytes per device ----
+    act_bf16 = 2
+    if shape.mode == "train":
+        # FSDP: AG params fwd + AG params bwd-recompute + RS grads
+        fsdp = 3 * params_dev
+        # TP/SP per layer: AG + RS of the (tokens_dev x d) boundary, fwd+bwd+remat
+        tpsp = 3 * 2 * cfg.n_layers * tokens_dev * d * act_bf16 / model_axis * (model_axis - 1) / model_axis
+        ep = 0.0
+        if cfg.n_experts:
+            ep = 3 * 2 * cfg.n_layers * tokens_dev * d * act_bf16 * cfg.moe_top_k / model_axis
+        # DP gradient all-reduce across pods rides the FSDP reduce-scatter
+        wire_dev = fsdp + tpsp + ep
+    elif shape.mode == "prefill":
+        flips = 2 if cfg.n_heads % model_axis == 0 else 1
+        wire_dev = params_dev + flips * cfg.n_layers * tokens_dev * d * act_bf16 / model_axis
+    else:
+        # decode: per-layer TP all-reduce on (B,1,d) + (EP a2a)
+        b = shape.global_batch
+        wire_dev = 2 * cfg.n_layers * (b / dp_axis) * d * act_bf16
+        if cfg.n_experts:
+            wire_dev += 2 * cfg.n_layers * (b / dp_axis) * d * act_bf16 * cfg.moe_top_k
+
+    n_eff = (
+        n_params - cfg.vocab_padded * d * (1 if cfg.tie_embeddings else 2)
+        if not cfg.n_experts
+        else estimate_active_params(cfg)
+    )
+    # 6*N*D for training (fwd+bwd), 2*N*D for inference modes
+    model_flops_global = (6 if shape.mode == "train" else 2) * n_eff * tokens_global
+    return dict(
+        optimizer=optimizer,
+        n_params=n_params,
+        flops_dev=flops_dev,
+        bytes_dev=bytes_dev,
+        wire_dev=wire_dev,
+        model_flops_dev=model_flops_global / num_devices,
+        mode_factor=mode_factor,
+        tokens_dev=tokens_dev,
+    )
+
+
+def estimate_active_params(cfg) -> int:
+    lm = layer_matmul_params(cfg)
+    per = lm["attn"] + lm["moe_active"]
+    return int(cfg.n_layers * per)
+
+
+# --------------------------------------------------------------------------
+# merge with dry-run artifacts
+# --------------------------------------------------------------------------
+
+def run(dryrun_dir: str = None):
+    dryrun_dir = dryrun_dir or os.path.join(os.path.dirname(ARTIFACTS), "artifacts", "dryrun")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        arch, shp = rec["arch"], rec["shape"]
+        ana = analytic_cell(arch, shp, rec["num_devices"], rec.get("accum_steps", 1))
+        t_c = ana["flops_dev"] / PEAK_FLOPS
+        t_m = ana["bytes_dev"] / HBM_BW
+        t_x = ana["wire_dev"] / ICI_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])[0]
+        ma = rec.get("memory_analysis", {})
+        temp = ma.get("temp_size_in_bytes", 0)
+        args = ma.get("argument_size_in_bytes", 0)
+        adj_temp = max(0, temp - rec.get("cpu_upcast_artifact_bytes", 0))
+        fits = (adj_temp + args) <= HBM_PER_CHIP
+        useful = ana["model_flops_dev"] / max(ana["flops_dev"], 1.0)
+        frac = max(t_c, 1e-12) / max(t_c, t_m, t_x)  # roofline fraction of the step
+        lever = {
+            "compute": "raise MFU: larger per-device tiles / fewer remat recomputes",
+            "memory": "cut HBM traffic: fuse vector ops, larger CE chunks, bf16 opt state",
+            "collective": "overlap or shrink collectives: 2D-shard boundary, fp8 grads, wider ICI axis",
+        }[dom]
+        row = dict(
+            arch=arch, shape=shp, mesh=rec["mesh"], devices=rec["num_devices"],
+            mode=rec["mode"], optimizer=ana["optimizer"],
+            compute_s=t_c, memory_s=t_m, collective_s=t_x, dominant=dom,
+            roofline_fraction=frac, useful_compute_ratio=useful,
+            model_flops_dev=ana["model_flops_dev"], analytic_flops_dev=ana["flops_dev"],
+            hlo_flops_body=rec.get("cost_analysis", {}).get("flops"),
+            hbm_args_gib=args / 2**30, hbm_temp_gib=temp / 2**30,
+            hbm_temp_tpu_adjusted_gib=adj_temp / 2**30, fits_16gib=bool(fits),
+            collective_counts=rec.get("collectives", {}).get("counts", {}),
+            measured_coll_bytes_once=rec.get("collectives", {}).get("total_bytes", 0),
+            lever=lever,
+        )
+        rows.append(row)
+        emit(
+            f"roofline/{arch}/{shp}/{rec['num_devices']}", t_c * 1e6 + t_m * 1e6 + t_x * 1e6,
+            f"c={t_c*1e3:.2f}ms m={t_m*1e3:.2f}ms x={t_x*1e3:.2f}ms dom={dom} "
+            f"useful={useful:.2f} fits={fits}",
+        )
+    save_artifact("roofline.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

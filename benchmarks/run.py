@@ -1,0 +1,54 @@
+"""Benchmark entry point: one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (see common.emit) and writes
+JSON artifacts under artifacts/.
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        fig2_speedup,
+        fig3a_multidev,
+        fig3b_reorth,
+        fig4_precision,
+        kernels_bench,
+        table1_suite,
+    )
+
+    sections = [
+        ("table1_suite", table1_suite.run),
+        ("fig2_speedup", fig2_speedup.run),
+        ("fig3a_multidev", fig3a_multidev.run),
+        ("fig3b_reorth", fig3b_reorth.run),
+        ("fig4_precision", fig4_precision.run),
+        ("kernels_bench", kernels_bench.run),
+    ]
+    # roofline runs only when dry-run artifacts exist
+    import glob
+    import os
+
+    from .common import ARTIFACTS
+
+    if glob.glob(os.path.join(ARTIFACTS, "dryrun", "*.json")):
+        from . import roofline
+
+        sections.append(("roofline", roofline.run))
+
+    failures = []
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, str(e)))
+    if failures:
+        print("FAILED SECTIONS:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

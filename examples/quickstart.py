@@ -1,0 +1,37 @@
+"""Quickstart: Top-K eigenpairs of a sparse graph matrix in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # enables the paper's f64 compute (FDF/DDD)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FDF, make_operator, topk_eigs
+from repro.core.metrics import eigsh_reference, pairwise_orthogonality_deg, reconstruction_error
+from repro.sparse import generate
+
+
+def main():
+    # a power-law web graph, symmetric-normalized adjacency (spectrum in [-1, 1])
+    csr = generate("web", n=1 << 14, avg_deg=8.0, seed=0, values="normalized")
+    print(f"matrix: n={csr.n:,} nnz={csr.nnz:,}")
+
+    op = make_operator(csr, impl="coo", dtype=jnp.float32)
+    result = topk_eigs(op, k=8, policy=FDF, reorth="full", num_iters=32)
+
+    print("top-8 |eigenvalues|:", np.asarray(result.eigenvalues))
+    err = reconstruction_error(op, result.eigenvalues, result.eigenvectors, accum_dtype=jnp.float64)
+    print(f"mean L2 reconstruction error ||Mx - λx||: {err:.2e}")
+    print(f"mean pairwise eigenvector angle: {pairwise_orthogonality_deg(result.eigenvectors):.2f}°")
+
+    ref_vals, _ = eigsh_reference(csr, 8)  # ARPACK — the paper's CPU baseline
+    print("ARPACK agrees to:", float(np.abs(np.asarray(result.eigenvalues) - ref_vals).max()))
+    print(f"solver wall time: {result.wall_time_s:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

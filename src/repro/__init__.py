@@ -1,0 +1,2 @@
+"""repro: mixed-precision multi-device Top-K sparse eigensolver framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,40 @@
+"""Architecture registry: --arch <id> -> (CONFIG, SMOKE).
+
+All 10 assigned architectures (exact dims from the public assignment) plus
+the paper's own eigensolver configs (paper_eigensolver.py).
+"""
+
+from . import (
+    arctic_480b,
+    codeqwen1_5_7b,
+    mamba2_130m,
+    mixtral_8x7b,
+    phi3_medium_14b,
+    qwen1_5_32b,
+    qwen2_vl_72b,
+    qwen3_0_6b,
+    recurrentgemma_2b,
+    seamless_m4t_medium,
+)
+from .shapes import SHAPES, ShapeSpec, applicable, input_specs
+
+ARCHS = {
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "qwen3-0.6b": qwen3_0_6b,
+    "phi3-medium-14b": phi3_medium_14b,
+    "codeqwen1.5-7b": codeqwen1_5_7b,
+    "qwen1.5-32b": qwen1_5_32b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "arctic-480b": arctic_480b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "mamba2-130m": mamba2_130m,
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = ARCHS[arch]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+__all__ = ["ARCHS", "get_config", "SHAPES", "ShapeSpec", "applicable", "input_specs"]

@@ -1,0 +1,22 @@
+"""qwen3-0.6b: qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]
+
+Exact assigned config (full) + reduced same-family smoke config.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, d_ff=3072,
+    vocab=151936, head_dim=128, qk_norm=True, rope_theta=1e6,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, attn_chunk=32, compute_dtype=jnp.float32,
+)

@@ -1,0 +1,16 @@
+"""Core: the paper's Top-K sparse eigensolver (Lanczos + Jacobi)."""
+
+from .eigensolver import EigResult, topk_eigs
+from .jacobi import jacobi_eigh, jacobi_eigh_host, tridiag_to_dense
+from .lanczos import LanczosResult, lanczos_tridiag
+from .operators import (
+    ChunkedOperator,
+    DenseOperator,
+    HvpOperator,
+    LinearOperator,
+    SparseOperator,
+    make_operator,
+)
+from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
+from .precision import BCF, BFF, DDD, FCF, FDF, FFF, HFF, POLICIES, PrecisionPolicy
+from .restarted import topk_eigs_restarted

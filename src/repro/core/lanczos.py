@@ -1,0 +1,152 @@
+"""Phase 1 of the paper's eigensolver: the Lanczos algorithm (Algorithm 1).
+
+Builds a Krylov basis V = [v_1 .. v_m] of a symmetric operator and the
+tridiagonal matrix T = tridiag(beta, alpha, beta) whose eigenpairs
+approximate the Top-K eigenpairs of the operator.
+
+Mixed precision follows the paper exactly (§III-A): the basis V and the
+carried vectors are kept in ``policy.storage``; SpMV accumulation and the
+alpha / beta / re-orthogonalization reductions run in ``policy.compute``.
+
+Re-orthogonalization modes:
+  * ``"none"`` — plain three-term recurrence;
+  * ``"half"`` — the paper's scheme (Alg. 1 lines 12-21): the new vector is
+    re-orthogonalized against every *other* stored Lanczos vector
+    (alternating parity), matching their quoted O(n K^2 / 2) cost;
+  * ``"full"`` — classical full re-orthogonalization against all stored
+    vectors (beyond-paper reference point).
+
+The loop body is generic over an ``Ops`` record so the same code runs
+single-device (plain reductions) and multi-device (psum reductions inside
+``shard_map`` — see ``core/distributed.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .precision import PrecisionPolicy, compensated_sum
+
+__all__ = ["LanczosResult", "lanczos_tridiag", "make_local_ops", "Ops"]
+
+
+class LanczosResult(NamedTuple):
+    alpha: jax.Array  # (m,) compute dtype — diagonal of T
+    beta: jax.Array  # (m-1,) compute dtype — off-diagonal of T
+    basis: jax.Array  # (m, n) storage dtype — Lanczos vectors (V), row-major
+
+
+@dataclasses.dataclass(frozen=True)
+class Ops:
+    """Arithmetic kernel set; distributed variants psum the reductions."""
+
+    matvec: Callable[[jax.Array], jax.Array]  # storage-in, compute-out
+    dot: Callable[[jax.Array, jax.Array], jax.Array]  # compute-dtype scalar
+    gram: Callable[[jax.Array, jax.Array], jax.Array]  # (m,n)@(n,) -> (m,)
+
+
+def _local_reduce(x: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    if policy.compensated:
+        return compensated_sum(x.reshape(-1), policy.compute)
+    return jnp.sum(x)
+
+
+def make_local_ops(matvec: Callable, policy: PrecisionPolicy) -> Ops:
+    """Single-device ops: plain reductions in the compute dtype."""
+
+    def dot(a, b):
+        return _local_reduce(a.astype(policy.compute) * b.astype(policy.compute), policy)
+
+    def gram(vs, u):
+        return vs.astype(policy.compute) @ u.astype(policy.compute)
+
+    return Ops(matvec=matvec, dot=dot, gram=gram)
+
+
+def _reorth_mask(m: int, i: jax.Array, mode: str, dtype) -> jax.Array:
+    """Mask over stored vector indices j (0-based) used for re-orth at step i."""
+    j = jnp.arange(m)
+    stored = j <= i  # vectors written so far (includes current v_i)
+    if mode == "none":
+        return jnp.zeros((m,), dtype)
+    if mode == "half":
+        # Paper's parity scheme (Alg. 1 lines 13-18): re-orthogonalize
+        # against the odd-indexed (1-based) half of the basis.  Cost: the
+        # paper's quoted O(n K^2 / 2).
+        return (stored & (j % 2 == 0)).astype(dtype)
+    if mode == "half_alt":
+        # Variant: alternate the parity with the step index (both halves
+        # cleaned on consecutive steps).  Empirically less stable -- see
+        # EXPERIMENTS.md SReorth.
+        return (stored & (j % 2 == i % 2)).astype(dtype)
+    if mode in ("full", "full2"):
+        return stored.astype(dtype)
+    raise ValueError(f"unknown reorth mode {mode!r}")
+
+
+@partial(jax.jit, static_argnames=("ops", "num_iters", "policy", "reorth"))
+def _lanczos_jit(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str):
+    return _lanczos_loop(v1, ops, num_iters, policy, reorth)
+
+
+def _lanczos_loop(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str):
+    m = num_iters
+    n = v1.shape[0]
+    cdt, sdt = policy.compute, policy.storage
+    tiny = jnp.asarray(jnp.finfo(cdt).tiny * 1e3, cdt)
+
+    v1 = v1.astype(cdt)
+    v1 = v1 / jnp.sqrt(ops.dot(v1, v1))
+
+    basis0 = jnp.zeros((m, n), sdt)
+    alphas0 = jnp.zeros((m,), cdt)
+    betas0 = jnp.zeros((m,), cdt)
+
+    def body(i, carry):
+        basis, alphas, betas, v_prev, w, beta_prev = carry
+        # --- normalize the incoming vector (paper lines 5-7) ---
+        v = jnp.where(i == 0, v1, w / jnp.maximum(beta_prev, tiny))
+        basis = jax.lax.dynamic_update_slice(basis, v.astype(sdt)[None, :], (i, 0))
+        # --- projection (line 9): SpMV in compute precision ---
+        u = ops.matvec(v.astype(sdt)).astype(cdt)
+        # --- alpha (line 10): sync point A ---
+        alpha = ops.dot(v, u)
+        alphas = alphas.at[i].set(alpha)
+        # --- three-term recurrence (line 11) ---
+        u = u - alpha * v - beta_prev * v_prev
+        # --- re-orthogonalization (lines 12-21): sync point C ---
+        if reorth != "none":
+            mask = _reorth_mask(m, i, reorth, cdt)
+            passes = 2 if reorth == "full2" else 1  # CGS2: "twice is enough"
+            for _ in range(passes):
+                coeffs = ops.gram(basis, u.astype(sdt)) * mask  # (m,)
+                u = u - coeffs @ basis.astype(cdt)
+        # --- beta (line 6, next iteration): sync point B ---
+        beta = jnp.sqrt(jnp.maximum(ops.dot(u, u), 0.0))
+        betas = betas.at[i].set(beta)
+        return (basis, alphas, betas, v, u, beta)
+
+    init = (basis0, alphas0, betas0, jnp.zeros((n,), cdt), jnp.zeros((n,), cdt), jnp.zeros((), cdt))
+    basis, alphas, betas, _, _, _ = jax.lax.fori_loop(0, m, body, init)
+    return LanczosResult(alpha=alphas, beta=betas[: m - 1], basis=basis)
+
+
+def lanczos_tridiag(
+    matvec: Callable,
+    v1: jax.Array,
+    num_iters: int,
+    policy: PrecisionPolicy,
+    reorth: str = "half",
+    ops: Optional[Ops] = None,
+    jit: bool = True,
+) -> LanczosResult:
+    """Run ``num_iters`` Lanczos steps. See module docstring."""
+    policy = policy.effective()
+    ops = ops or make_local_ops(matvec, policy)
+    fn = _lanczos_jit if jit else _lanczos_loop
+    return fn(v1, ops, num_iters, policy, reorth)

@@ -1,0 +1,180 @@
+"""Linear operators consumed by the eigensolver.
+
+The paper's solver is matrix-driven (sparse SpMV), but the Lanczos phase only
+needs ``y = A @ x``; we expose that as a small operator protocol so the same
+solver runs on:
+
+  * explicit sparse matrices (COO segment-sum path, or the Pallas ELL/BSR
+    kernels — the paper's case);
+  * chunk-streamed matrices whose triplets live in **host** memory and are
+    staged to the device chunk-by-chunk (the paper's out-of-core unified
+    memory mode, DESIGN.md §3.4);
+  * matrix-free Hessian/GGN-vector products of a model loss — the framework
+    integration (spectral monitoring of training, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from ..sparse.formats import CSR, DeviceCOO, DeviceELL, to_device_coo, to_device_ell
+from .precision import PrecisionPolicy
+
+__all__ = [
+    "LinearOperator",
+    "DenseOperator",
+    "SparseOperator",
+    "ChunkedOperator",
+    "HvpOperator",
+    "make_operator",
+]
+
+
+class LinearOperator:
+    """Protocol: symmetric square operator with policy-aware matvec."""
+
+    n: int
+
+    def matvec(self, x: jax.Array, accum_dtype=None) -> jax.Array:
+        raise NotImplementedError
+
+    def bound_matvec(self, policy: PrecisionPolicy) -> Callable:
+        acc = policy.compute
+
+        def mv(x):
+            return self.matvec(x, accum_dtype=acc)
+
+        return mv
+
+
+@dataclasses.dataclass
+class DenseOperator(LinearOperator):
+    a: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[0]
+
+    def matvec(self, x, accum_dtype=None):
+        acc = accum_dtype or x.dtype
+        return self.a.astype(acc) @ x.astype(acc)
+
+
+@dataclasses.dataclass
+class SparseOperator(LinearOperator):
+    """Explicit sparse matrix; ``impl`` picks the SpMV engine."""
+
+    mat: object  # DeviceCOO | DeviceELL
+    impl: str = "coo"  # "coo" | "ell" | "ell_kernel" | "bsr_kernel"
+
+    @property
+    def n(self) -> int:
+        if isinstance(self.mat, tuple):  # blocked-ELL: (val, bcol, n_rows)
+            return int(self.mat[2])
+        return self.mat.n_rows
+
+    def matvec(self, x, accum_dtype=None):
+        if self.impl in ("coo", "ell"):
+            return self.mat.matvec(x, accum_dtype=accum_dtype)
+        if self.impl == "ell_kernel":
+            from ..kernels import ops as kops
+
+            return kops.spmv_ell(self.mat, x, accum_dtype=accum_dtype)
+        if self.impl == "bsr_kernel":
+            from ..kernels import ops as kops
+
+            return kops.spmv_bsr(self.mat, x, accum_dtype=accum_dtype)  # mat = (val,bcol,n)
+        raise ValueError(f"unknown SpMV impl {self.impl!r}")
+
+
+class ChunkedOperator(LinearOperator):
+    """Out-of-core SpMV: COO triplets stay in host NumPy; each matvec streams
+    fixed-size chunks to the device and accumulates partial products.
+
+    This reproduces the paper's unified-memory out-of-core mode: at any moment
+    only ``chunk_nnz`` non-zeros are device-resident.  On a real TPU the
+    staging is host-DRAM -> HBM DMA; here the same code path exercises the
+    chunking logic.
+    """
+
+    def __init__(self, csr: CSR, chunk_nnz: int = 1 << 20, dtype=jnp.float32):
+        self.n = csr.n
+        self._dtype = dtype
+        row = np.repeat(np.arange(csr.n, dtype=np.int32), csr.row_nnz())
+        self._chunks = []
+        nnz = csr.nnz
+        for lo in range(0, nnz, chunk_nnz):
+            hi = min(lo + chunk_nnz, nnz)
+            pad = chunk_nnz - (hi - lo)
+            self._chunks.append(
+                (
+                    np.pad(row[lo:hi], (0, pad)),
+                    np.pad(csr.indices[lo:hi], (0, pad)),
+                    np.pad(csr.data[lo:hi], (0, pad)).astype(np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32),
+                )
+            )
+        self.num_chunks = len(self._chunks)
+
+    def matvec(self, x, accum_dtype=None):
+        acc = accum_dtype or self._dtype
+
+        @jax.jit
+        def partial_spmv(row, col, val, x, y):
+            prod = val.astype(acc) * jnp.take(x, col).astype(acc)
+            return y + jax.ops.segment_sum(prod, row, num_segments=self.n)
+
+        y = jnp.zeros((self.n,), acc)
+        for row, col, val in self._chunks:  # host loop = the UM page stream
+            y = partial_spmv(
+                jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype=self._dtype), x, y
+            )
+        return y
+
+
+class HvpOperator(LinearOperator):
+    """Matrix-free Hessian-vector product of ``loss(params)`` (framework
+    integration of the paper's solver; see training/spectral.py)."""
+
+    def __init__(self, loss_fn: Callable, params, ggn: bool = False):
+        self._loss = loss_fn
+        self._params = params
+        flat, unravel = jax.flatten_util.ravel_pytree(params)
+        self._flat0 = flat
+        self._unravel = unravel
+        self.n = flat.shape[0]
+
+        def hvp(v):
+            # reverse-over-reverse: H v = d/dp <grad(loss)(p), v>.  (Forward-
+            # over-reverse is cheaper but jvp does not compose with the
+            # custom_vjp embedding lookup in the model zoo.)
+            def gv(flat_p):
+                g = jax.flatten_util.ravel_pytree(jax.grad(loss_fn)(unravel(flat_p)))[0]
+                return jnp.vdot(g, v)
+
+            return jax.grad(gv)(flat)
+
+        self._hvp = jax.jit(hvp)
+
+    def matvec(self, x, accum_dtype=None):
+        y = self._hvp(x.astype(self._flat0.dtype))
+        return y.astype(accum_dtype) if accum_dtype else y
+
+
+def make_operator(csr: CSR, impl: str = "coo", dtype=jnp.float32) -> LinearOperator:
+    if impl == "coo":
+        return SparseOperator(to_device_coo(csr, dtype=dtype), impl="coo")
+    if impl in ("ell", "ell_kernel"):
+        return SparseOperator(to_device_ell(csr, dtype=dtype), impl=impl)
+    if impl == "bsr_kernel":
+        from ..kernels.spmv_bsr import blocked_ell_from_csr
+
+        return SparseOperator(blocked_ell_from_csr(csr, dtype=dtype), impl=impl)
+    if impl == "chunked":
+        return ChunkedOperator(csr, dtype=dtype)
+    raise ValueError(f"unknown operator impl {impl!r}")

@@ -1,0 +1,149 @@
+"""Mixed-precision policies for the Top-K sparse eigensolver.
+
+The paper (Sgherzi et al., 2022, §III-A / §IV-D) parameterizes the solver by a
+*dtype triple* — the precision in which vectors are **stored**, the precision
+in which the numerically critical reductions (the ``alpha`` dot products, the
+``beta`` L2 norms and the re-orthogonalization coefficients) are **computed**,
+and the precision of the **output** eigencomponents.  Their headline result is
+that FDF (store f32 / compute f64 / output f32) is 50% faster than DDD and 12x
+more accurate than FFF.
+
+TPU adaptation (see DESIGN.md §3): TPUs have no fast f64, so the TPU-native
+ladder is shifted one rung down — bf16/f16 storage with f32 compute — and the
+"extra accumulator width" role of f64 is played by *compensated* (Neumaier)
+f32 summation, exposed here as ``compensated=True`` policies.  The f64 paths
+remain available on CPU (JAX x64) and are used to reproduce the paper's
+Fig. 4 exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PrecisionPolicy",
+    "FFF",
+    "FDF",
+    "DDD",
+    "BFF",
+    "HFF",
+    "FCF",
+    "BCF",
+    "POLICIES",
+    "x64_enabled",
+]
+
+
+def x64_enabled() -> bool:
+    return bool(jax.config.read("jax_enable_x64"))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """(storage, compute, output) dtype triple, the paper's precision knob.
+
+    Attributes:
+      name: short id, e.g. ``"FDF"``.
+      storage: dtype in which the Lanczos basis V and carried vectors are kept.
+      compute: dtype in which SpMV accumulation and the alpha/beta/reorth
+        reductions are performed (the paper's "intermediate operations").
+      output: dtype of the returned eigenvalues/eigenvectors.
+      compensated: if True, scalar reductions additionally use Neumaier
+        compensated summation in the ``compute`` dtype (TPU-native analogue
+        of the paper's f64 accumulation; beyond-paper feature).
+    """
+
+    name: str
+    storage: Any
+    compute: Any
+    output: Any
+    compensated: bool = False
+
+    def effective(self) -> "PrecisionPolicy":
+        """Downgrade f64 members to f32 when x64 is disabled (with a note)."""
+        if x64_enabled():
+            return self
+
+        def _eff(dt):
+            return jnp.float32 if jnp.dtype(dt) == jnp.dtype(jnp.float64) else dt
+
+        if (
+            jnp.dtype(self.storage) == jnp.dtype(jnp.float64)
+            or jnp.dtype(self.compute) == jnp.dtype(jnp.float64)
+            or jnp.dtype(self.output) == jnp.dtype(jnp.float64)
+        ):
+            return dataclasses.replace(
+                self,
+                name=self.name + "(x32!)",
+                storage=_eff(self.storage),
+                compute=_eff(self.compute),
+                output=_eff(self.output),
+            )
+        return self
+
+    def short(self) -> str:
+        return self.name
+
+
+# Paper's three configurations (their §IV-D, Fig. 4).
+FFF = PrecisionPolicy("FFF", jnp.float32, jnp.float32, jnp.float32)
+FDF = PrecisionPolicy("FDF", jnp.float32, jnp.float64, jnp.float32)
+DDD = PrecisionPolicy("DDD", jnp.float64, jnp.float64, jnp.float64)
+
+# TPU-native ladder (DESIGN.md §3): bf16/f16 storage, f32 compute; the
+# compensated variants recover the wide-accumulator role of f64.
+BFF = PrecisionPolicy("BFF", jnp.bfloat16, jnp.float32, jnp.float32)
+HFF = PrecisionPolicy("HFF", jnp.float16, jnp.float32, jnp.float32)
+FCF = PrecisionPolicy("FCF", jnp.float32, jnp.float32, jnp.float32, compensated=True)
+BCF = PrecisionPolicy("BCF", jnp.bfloat16, jnp.float32, jnp.float32, compensated=True)
+
+POLICIES = {p.name: p for p in (FFF, FDF, DDD, BFF, HFF, FCF, BCF)}
+
+
+def compensated_sum(x: jax.Array, dtype) -> jax.Array:
+    """Neumaier (improved Kahan) compensated summation of a 1-D array.
+
+    Sequential over ``x`` in chunks: each chunk is summed natively (one rounding
+    per chunk) and chunk totals are combined with Neumaier compensation.  This
+    bounds the error like a ~2x-wider accumulator at a small bandwidth cost —
+    the TPU stand-in for the paper's f64 accumulation.
+    """
+    x = x.astype(dtype)
+    n = x.shape[0]
+    chunk = 256
+    pad = (-n) % chunk
+    xp = jnp.pad(x, (0, pad))
+    parts = xp.reshape(-1, chunk).sum(axis=1)  # one native sum per chunk
+
+    def body(carry, p):
+        s, c = carry
+        t = s + p
+        # Neumaier: pick compensation direction by magnitude.
+        comp = jnp.where(
+            jnp.abs(s) >= jnp.abs(p), (s - t) + p, (p - t) + s
+        )
+        return (t, c + comp), None
+
+    (s, c), _ = jax.lax.scan(body, (jnp.zeros((), dtype), jnp.zeros((), dtype)), parts)
+    return s + c
+
+
+def reduce_sum(x: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    """Policy-directed sum reduction (the paper's alpha/beta accumulators)."""
+    if policy.compensated:
+        return compensated_sum(x.reshape(-1), policy.compute)
+    return jnp.sum(x.astype(policy.compute))
+
+
+def dot(a: jax.Array, b: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    """Mixed-precision dot product: storage-dtype inputs, compute-dtype accum."""
+    prod = a.astype(policy.compute) * b.astype(policy.compute)
+    return reduce_sum(prod, policy)
+
+
+def norm2(a: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    return jnp.sqrt(dot(a, a, policy))

@@ -1,0 +1,1 @@
+from .sharding import DEFAULT_RULES, hint, logical_spec, named_sharding, sharding_ctx

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused Lanczos three-term recurrence + norm.
+
+Between two SpMVs the paper performs (Alg. 1 lines 6/11):
+
+    u      = w - alpha * v - beta * v_prev     (vector update)
+    beta'  = ||u||_2                           (next normalization)
+
+Executed separately these are 4 full memory passes over n-length vectors
+(read w/v/v_prev + write u, then read u again for the norm).  This kernel
+fuses them into a single pass — the squared-norm partial is accumulated
+across the sequential TPU grid while the update tile is still in VMEM.
+This is a beyond-paper optimization targeting the memory roofline term of
+the solver (EXPERIMENTS.md §Perf-eigensolver).
+
+Scalars (alpha, beta) arrive as (1,)-shaped operands pinned to every grid
+step; outputs are the updated vector (storage dtype) and a (1,) f32
+squared norm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lanczos_update_kernel_call"]
+
+
+def _kernel(alpha_ref, beta_ref, w_ref, v_ref, vp_ref, u_ref, nrm_ref, *, accum_dtype):
+    i = pl.program_id(0)
+    acc = accum_dtype
+    alpha = alpha_ref[0].astype(acc)
+    beta = beta_ref[0].astype(acc)
+    u = w_ref[...].astype(acc) - alpha * v_ref[...].astype(acc) - beta * vp_ref[...].astype(acc)
+    u_ref[...] = u.astype(u_ref.dtype)
+    part = jnp.sum(u * u)
+
+    @pl.when(i == 0)
+    def _init():
+        nrm_ref[0] = part
+
+    @pl.when(i != 0)
+    def _acc():
+        nrm_ref[0] = nrm_ref[0] + part
+
+
+@functools.partial(jax.jit, static_argnames=("block", "accum_dtype", "interpret"))
+def lanczos_update_kernel_call(
+    w: jax.Array,
+    v: jax.Array,
+    v_prev: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+    *,
+    block: int = 4096,
+    accum_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Returns (u (n,) w.dtype, norm_sq (1,) accum_dtype)."""
+    n = w.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"length {n} not divisible by block {block}")
+    alpha = jnp.reshape(alpha, (1,)).astype(accum_dtype)
+    beta = jnp.reshape(beta, (1,)).astype(accum_dtype)
+    return pl.pallas_call(
+        functools.partial(_kernel, accum_dtype=accum_dtype),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # alpha
+            pl.BlockSpec((1,), lambda i: (0,)),  # beta
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((1,), accum_dtype),
+        ],
+        interpret=interpret,
+    )(alpha, beta, w, v, v_prev)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: mixed-precision dot product / squared norm.
+
+The alpha and beta reductions are the accuracy-critical synchronization
+points of the paper's Lanczos (Alg. 1 lines 6/10); the paper computes them
+in f64 while storing vectors in f32.  TPUs have no fast f64, so this kernel
+offers the TPU-native ladder (DESIGN.md §3.1):
+
+  * inputs in any storage dtype (bf16 / f16 / f32),
+  * per-tile products and sums in ``accum_dtype`` (f32),
+  * optional Neumaier compensation *across tiles* — the sequential TPU grid
+    makes the cross-tile accumulation a genuine running sum, so carrying a
+    compensation term recovers most of the accuracy a 2x-wider accumulator
+    would give (the stand-in for the paper's f64).
+
+Output layout: (2,) f32 = (sum, compensation); callers take ``out.sum()``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mixed_dot_kernel_call"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, accum_dtype, compensated):
+    i = pl.program_id(0)
+    part = jnp.sum(a_ref[...].astype(accum_dtype) * b_ref[...].astype(accum_dtype))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = part
+        o_ref[1] = jnp.zeros((), accum_dtype)
+
+    @pl.when(i != 0)
+    def _acc():
+        s = o_ref[0]
+        if compensated:
+            t = s + part
+            comp = jnp.where(jnp.abs(s) >= jnp.abs(part), (s - t) + part, (part - t) + s)
+            o_ref[0] = t
+            o_ref[1] = o_ref[1] + comp
+        else:
+            o_ref[0] = s + part
+
+
+@functools.partial(jax.jit, static_argnames=("block", "accum_dtype", "compensated", "interpret"))
+def mixed_dot_kernel_call(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: int = 4096,
+    accum_dtype=jnp.float32,
+    compensated: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (2,) accum_dtype (sum, compensation); dot = out.sum()."""
+    n = a.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"length {n} not divisible by block {block}")
+    return pl.pallas_call(
+        functools.partial(_kernel, accum_dtype=accum_dtype, compensated=compensated),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), accum_dtype),
+        interpret=interpret,
+    )(a, b)

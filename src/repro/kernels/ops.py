@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
+the compilation target) and False on real TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sparse.formats import DeviceELL
+from .lanczos_update import lanczos_update_kernel_call
+from .mixed_dot import mixed_dot_kernel_call
+from .spmv_bsr import blocked_ell_from_csr, spmv_bsr_kernel_call
+from .spmv_ell import spmv_ell_kernel_call
+
+__all__ = ["default_interpret", "spmv_ell", "spmv_bsr", "mixed_dot", "lanczos_update"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmv_ell(mat: DeviceELL, x: jax.Array, accum_dtype=None, **kw) -> jax.Array:
+    """SpMV through the Pallas ELL kernel; returns (n_rows,) in accum dtype."""
+    acc = jnp.dtype(accum_dtype or jnp.float32)
+    # The Pallas gather path needs a real dtype accumulator supported on TPU;
+    # f64 accumulation (CPU-only validation) falls back to the jnp reference.
+    if acc == jnp.dtype(jnp.float64):
+        return mat.matvec(x, accum_dtype=acc)
+    kw.setdefault("interpret", default_interpret())
+    y = spmv_ell_kernel_call(mat.val, mat.col, x, accum_dtype=acc, **kw)
+    return y[: mat.n_rows]
+
+
+def spmv_bsr(blocked, x: jax.Array, accum_dtype=None, **kw) -> jax.Array:
+    """SpMV through the blocked-ELL (MXU) kernel.
+
+    ``blocked``: (val, bcol, n_rows) from ``blocked_ell_from_csr``.
+    """
+    val, bcol, n_rows = blocked
+    acc = jnp.dtype(accum_dtype or jnp.float32)
+    if acc == jnp.dtype(jnp.float64):
+        # jnp fallback for CPU f64 validation
+        nbr, slots, bs, _ = val.shape
+        xs = x[: nbr * bs].reshape(nbr, bs) if x.shape[0] >= nbr * bs else jnp.pad(
+            x, (0, nbr * bs - x.shape[0])).reshape(nbr, bs)
+        gathered = jnp.take(xs, bcol, axis=0)  # (nbr, slots, bs)
+        y = jnp.einsum("rsij,rsj->ri", val.astype(acc), gathered.astype(acc))
+        return y.reshape(-1)[:n_rows]
+    kw.setdefault("interpret", default_interpret())
+    xpad = x
+    nbr, slots, bs, _ = val.shape
+    if x.shape[0] < nbr * bs:
+        xpad = jnp.pad(x, (0, nbr * bs - x.shape[0]))
+    y = spmv_bsr_kernel_call(val, bcol, xpad, accum_dtype=acc, **kw)
+    return y[:n_rows]
+
+
+def mixed_dot(a: jax.Array, b: jax.Array, accum_dtype=None, compensated: bool = False, **kw) -> jax.Array:
+    acc = jnp.dtype(accum_dtype or jnp.float32)
+    if acc == jnp.dtype(jnp.float64):
+        return jnp.sum(a.astype(acc) * b.astype(acc))
+    kw.setdefault("interpret", default_interpret())
+    out = mixed_dot_kernel_call(a, b, accum_dtype=acc, compensated=compensated, **kw)
+    return out.sum()
+
+
+def lanczos_update(w, v, v_prev, alpha, beta, accum_dtype=None, **kw):
+    acc = jnp.dtype(accum_dtype or jnp.float32)
+    if acc == jnp.dtype(jnp.float64):
+        from .ref import lanczos_update_ref
+
+        return lanczos_update_ref(w, v, v_prev, alpha, beta, accum_dtype=acc)
+    kw.setdefault("interpret", default_interpret())
+    u, nrm = lanczos_update_kernel_call(w, v, v_prev, alpha, beta, accum_dtype=acc, **kw)
+    return u, nrm[0]

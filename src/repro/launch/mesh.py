@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before the first jax device query.
+
+Mesh topology (v5e pods, 256 chips each):
+  single pod : (data=16, model=16)            — 256 chips
+  two pods   : (pod=2, data=16, model=16)     — 512 chips; the 'pod' axis
+               carries only data parallelism (gradient all-reduce crosses
+               DCN, everything else stays inside a pod's ICI)
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_flat_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_flat_mesh(n: int | None = None, axis: str = "data"):
+    """1-axis mesh over the first n devices (eigensolver + tests)."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))

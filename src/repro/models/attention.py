@@ -1,0 +1,304 @@
+"""Attention layers: GQA/MHA with RoPE / M-RoPE, qk-norm, QKV bias,
+sliding-window & local masks, cross-attention, and a KV-cached decode path.
+
+The training/prefill path uses *online-softmax chunked attention* (a
+flash-attention-style lax.scan over KV chunks).  This keeps the live score
+tensor at (B, H, S, chunk) instead of (B, H, S, S) — the difference between
+fitting and not fitting prefill_32k on a v5e — and is the pure-JAX analogue
+of the memory-hierarchy blocking a Pallas flash kernel would do (the MXU
+einsums inside each chunk are already ideal XLA fusion targets).
+
+GQA is computed in grouped form (no materialized head-replication of K/V).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .common import Leaf, ModelConfig, apply_rope, dense_init, rms_norm
+
+__all__ = ["init_attention", "attention", "decode_attention", "AttnCache"]
+
+_NEG = -1e30
+
+
+class AttnCache(NamedTuple):
+    """KV cache, optionally int8-quantized.
+
+    ``k``/``v`` are bf16 (scales None) or int8 with per-(batch, slot, head)
+    f32 scales — KV quantization halves-to-quarters serving HBM, the lever
+    that fits MHA archs (qwen1.5-32b: 5.5 TB of bf16 KV at batch 128 x 32k)
+    on a pod.  Dequantization happens tile-wise inside the attention chunk
+    scan, so no full-width bf16 copy ever materializes.
+    """
+
+    k: jax.Array  # (B, W, KV, D) bf16 | int8
+    v: jax.Array  # (B, W, KV, D)
+    slot_pos: jax.Array  # (B, W) int32 absolute position per slot, -1 = empty
+    k_scale: Optional[jax.Array] = None  # (B, W, KV) f32 when int8
+    v_scale: Optional[jax.Array] = None
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(batch, slot, head) symmetric int8. x: (..., D) -> (int8, f32 scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-10)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _deq(x: jax.Array, scale: Optional[jax.Array]):
+    if scale is None:
+        return x.astype(jnp.float32)
+    return x.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def init_attention(key, cfg: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), ("embed", "qkv"), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), ("embed", "qkv"), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), ("embed", "qkv"), cfg.param_dtype),
+        "wo": dense_init(ks[3], (h * hd, d), ("qkv", "embed"), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Leaf(jnp.zeros((h * hd,), cfg.param_dtype), ("qkv",))
+        p["bk"] = Leaf(jnp.zeros((kv * hd,), cfg.param_dtype), ("qkv",))
+        p["bv"] = Leaf(jnp.zeros((kv * hd,), cfg.param_dtype), ("qkv",))
+    if cfg.qk_norm:
+        p["q_norm"] = Leaf(jnp.zeros((hd,), cfg.param_dtype), (None,))
+        p["k_norm"] = Leaf(jnp.zeros((hd,), cfg.param_dtype), (None,))
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, pos, rope: bool = True):
+    b, s, _ = x.shape
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.compute_dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(h, hd)
+        k = k + p["bk"].astype(dt).reshape(kv, hd)
+        v = v + p["bv"].astype(dt).reshape(kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if rope:
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, pos if pos.ndim == 2 else pos, cfg.rope_theta, cfg.mrope_sections)
+    # heads shard over 'model' when divisible; otherwise the higher-priority
+    # head axis abstains and 'act_seq' picks up 'model' (sequence-parallel
+    # attention for awkward head counts, e.g. recurrentgemma's 10 heads).
+    q = hint(q, "batch", "act_seq", "act_heads", None)
+    k = hint(k, "batch", "act_seq", "act_kv_heads", None)
+    v = hint(v, "batch", "act_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def _chunked_gqa(q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int], chunk: int,
+                 k_scale=None, v_scale=None):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D) bf16 or int8 (with per-(B,S,KV)
+    f32 scales); positions: (B, Sq) / (B, Skv).  Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh  # GQA group size
+    scale = d ** -0.5
+    chunk = min(chunk, skv)
+    if skv % chunk:  # pad KV to a chunk multiple; padded slots mask via pos=-1
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        skv += pad
+    nc = skv // chunk
+
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32) * scale
+    kc = k.reshape(b, nc, chunk, kvh, d)
+    vc = v.reshape(b, nc, chunk, kvh, d)
+    pc = kv_pos.reshape(b, nc, chunk)
+    ksc = k_scale.reshape(b, nc, chunk, kvh) if k_scale is not None else jnp.zeros((b, nc, chunk, 0))
+    vsc = v_scale.reshape(b, nc, chunk, kvh) if v_scale is not None else jnp.zeros((b, nc, chunk, 0))
+    quantized = k_scale is not None
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def step(carry, inp):
+        # rematerialized (flash-attention style): backward recomputes the
+        # (B,Sq,KV,G,C) score tile from q/k instead of stashing one per chunk
+        m, l, acc = carry  # (B,Sq,KV,G), (B,Sq,KV,G), (B,Sq,KV,G,D)
+        kj, vj, pj, ksj, vsj = inp  # (B,C,KV,D) x2, (B,C), (B,C,KV) x2
+
+        def compute(carry):
+            m, l, acc = carry
+            kjf = _deq(kj, ksj) if quantized else kj.astype(jnp.float32)
+            vjf = _deq(vj, vsj) if quantized else vj.astype(jnp.float32)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kjf)
+            msk = jnp.ones((b, sq, chunk), bool)
+            if causal:
+                msk &= pj[:, None, :] <= q_pos[:, :, None]
+            if window is not None:
+                msk &= pj[:, None, :] > (q_pos[:, :, None] - window)
+            msk &= pj[:, None, :] >= 0  # empty cache slots
+            s = jnp.where(msk[:, :, None, None, :], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bqkgc,bckd->bqkgd", p, vjf)
+            return m_new, l_new, acc_new
+
+        # skip chunks that are fully masked for every query this device holds
+        # (causal upper triangle / outside the sliding window / empty slots):
+        # on TPU lax.cond executes one branch, reclaiming the ~2x causal
+        # masking waste of dense chunked attention (hillclimb C3).
+        live = pj >= 0
+        if causal:
+            live &= pj <= q_pos.max()
+        if window is not None:
+            live &= pj > q_pos.min() - window
+        any_live = jnp.any(live)
+        return jax.lax.cond(any_live, compute, lambda c: c, (m, l, acc)), None
+
+    m0 = jnp.full((b, sq, kvh, g), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc.transpose(1, 0, 2),
+         ksc.transpose(1, 0, 2, 3), vsc.transpose(1, 0, 2, 3)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_override: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+):
+    """Full-sequence attention (training / prefill / encoder).
+
+    ``kv_override`` = (k, v, kv_pos) enables cross-attention (decoder side).
+    """
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    pos2d = pos if pos.ndim == 2 else pos[0]
+    q, k, v = _project_qkv(p, cfg, x, pos, rope=kv_override is None or cfg.family != "encdec")
+    if kv_override is not None:
+        k, v, kv_pos = kv_override
+    else:
+        kv_pos = pos2d
+    out = _chunked_gqa(q, k, v, pos2d, kv_pos, causal=causal, window=window, chunk=cfg.attn_chunk)
+    out = hint(out, "batch", "seq", "act_heads", None)
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"].astype(dt)
+    return hint(y, "batch", "seq", "act_embed")
+
+
+def project_kv_only(p, cfg: ModelConfig, x: jax.Array):
+    """K/V projection of encoder output for cross-attention (no RoPE)."""
+    b, s, _ = x.shape
+    dt = cfg.compute_dtype
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = (x.astype(dt) @ p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (x.astype(dt) @ p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    return k, v
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> AttnCache:
+    dtype = dtype or (jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.compute_dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    int8 = jnp.dtype(dtype) == jnp.dtype(jnp.int8)
+    return AttnCache(
+        k=jnp.zeros((batch, max_len, kv, hd), dtype),
+        v=jnp.zeros((batch, max_len, kv, hd), dtype),
+        slot_pos=jnp.full((batch, max_len), -1, jnp.int32),
+        k_scale=jnp.zeros((batch, max_len, kv), jnp.float32) if int8 else None,
+        v_scale=jnp.zeros((batch, max_len, kv), jnp.float32) if int8 else None,
+    )
+
+
+def decode_attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, d)
+    pos: jax.Array,  # (B, 1) or (3, B, 1) absolute position of the new token
+    cache: AttnCache,
+    *,
+    window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+):
+    """Single-token attention against a (ring-buffered) KV cache.
+
+    Windowed archs keep ``max_len == window`` and overwrite slots modulo the
+    window — this is what makes long_500k decode O(window), not O(seq).
+    Returns (y (B,1,d), new cache).
+    """
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    pos2d = pos if pos.ndim == 2 else pos[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos, rope=cross_kv is None)
+    k_scale = v_scale = None
+    if cross_kv is not None:
+        k, v, kv_pos = cross_kv
+        new_cache = cache
+    else:
+        w = cache.k.shape[1]
+        # Decode batches advance in lockstep (slot identical across rows), so
+        # the cache write is ONE dynamic_update_slice at a scalar slot — the
+        # per-row vmap'd update lowers to scatter, which costs a full second
+        # cache copy under SPMD (hillclimb B3, EXPERIMENTS.md §Perf).
+        slot0 = pos2d[0, 0] % w
+        zero = jnp.zeros((), slot0.dtype)
+
+        def upd(buf, new):  # new: (B, 1, ...) -> write column `slot0`
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (zero, slot0) + (zero,) * (buf.ndim - 2)
+            )
+
+
+        if cache.k_scale is not None:  # int8 cache: quantize the new K/V
+            kq, ks = quantize_kv(k_new)
+            vq, vs = quantize_kv(v_new)
+            new_cache = AttnCache(
+                k=upd(cache.k, kq), v=upd(cache.v, vq),
+                slot_pos=jax.lax.dynamic_update_slice(cache.slot_pos, pos2d, (zero, slot0)),
+                k_scale=upd(cache.k_scale, ks), v_scale=upd(cache.v_scale, vs),
+            )
+            k_scale, v_scale = new_cache.k_scale, new_cache.v_scale
+        else:
+            new_cache = AttnCache(
+                k=upd(cache.k, k_new),
+                v=upd(cache.v, v_new),
+                slot_pos=jax.lax.dynamic_update_slice(cache.slot_pos, pos2d, (zero, slot0)),
+            )
+        k, v, kv_pos = new_cache.k, new_cache.v, new_cache.slot_pos
+    out = _chunked_gqa(
+        q, k, v, pos2d, kv_pos,
+        causal=cross_kv is None,  # cross-attention sees the whole encoder
+        window=window, chunk=min(cfg.attn_chunk, k.shape[1]),
+        k_scale=k_scale, v_scale=v_scale,
+    )
+    b = x.shape[0]
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"].astype(dt)
+    return y, new_cache

@@ -1,0 +1,193 @@
+"""Shared model substrate: config, param machinery, norms, RoPE / M-RoPE.
+
+Parameters are built as trees of ``Leaf(value, axes)`` where ``axes`` are the
+*logical* sharding axes (distributed/sharding.py); ``split_tree`` separates
+them into a plain value tree (what apply-functions consume) and an axes tree
+(what the launcher turns into NamedShardings and the checkpointer stores as
+layout metadata).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ModelConfig",
+    "Leaf",
+    "split_tree",
+    "dense_init",
+    "rms_norm",
+    "apply_rope",
+    "make_positions",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all 10 assigned architectures (see configs/)."""
+
+    name: str
+    family: str  # dense | moe | hybrid_rglru | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # attention flavor
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: Optional[int] = None  # sliding-window (mixtral SWA / rg local attn)
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_group_size: int = 512
+    dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    # hybrid (recurrentgemma)
+    block_pattern: Tuple[str, ...] = ()
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 64
+    # encoder-decoder
+    n_enc_layers: int = 0
+    frontend: Optional[str] = None  # 'audio' | 'vision' (stub: embeddings given)
+    # numerics / execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    remat: str = "full"  # 'none' | 'full'
+    scan_layers: bool = True
+    vocab_round: int = 128
+    # attention micro-tiling (online-softmax KV chunk)
+    attn_chunk: int = 1024
+    kv_cache_dtype: str = "bf16"  # 'bf16' | 'int8' (quantized serving cache)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // self.vocab_round) * self.vocab_round
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def params_count_note(self) -> str:
+        return f"{self.name}: {self.n_layers}L d={self.d_model}"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Leaf:
+    """Parameter leaf with logical sharding axes metadata."""
+
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), (self.axes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+def split_tree(tree):
+    """Tree of Leaf -> (values tree, axes tree)."""
+    leaves_with_path = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Leaf))
+    values = jax.tree.map(lambda l: l.value, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    del leaves_with_path
+    return values, axes
+
+
+def dense_init(key, shape, axes, dtype, scale: Optional[float] = None) -> Leaf:
+    """Truncated-normal fan-in init with logical axes."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    v = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * s
+    return Leaf(v.astype(dtype), tuple(axes))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with f32 statistics but no full-width f32 copy of x.
+
+    The mean-square runs as an einsum with f32 accumulation: bf16 x bf16
+    products are exact in f32, so the statistic matches the classic
+    upcast-everything formulation to accumulation order.  Keeping x itself
+    in bf16 matters structurally: if the first use of the residual stream
+    were ``x.astype(f32)``, XLA hoists that convert out of the backward
+    layer loop and materializes an f32 copy of the *entire* saved
+    activation stack (measured: +7 GiB/device on qwen3-0.6b train_4k —
+    EXPERIMENTS.md §Perf).
+    """
+    var = (
+        jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)[..., None]
+        / x.shape[-1]
+    )
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)  # (B,S,1): tiny in any dtype
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def _rope_freqs(hd_half: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(hd_half, dtype=jnp.float32) / hd_half))
+
+
+def apply_rope(
+    x: jax.Array,
+    pos: jax.Array,
+    theta: float,
+    sections: Optional[Tuple[int, int, int]] = None,
+) -> jax.Array:
+    """Rotary embedding, half-split convention.
+
+    x: (B, S, H, D).  pos: (B, S) int32, or (3, B, S) for M-RoPE where the
+    three planes are (temporal, height, width) position ids and ``sections``
+    partitions the D/2 frequency slots among them (qwen2-vl).
+    """
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = _rope_freqs(half, theta)  # (half,)
+    if sections is None:
+        angles = pos.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    else:
+        assert pos.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        secs = []
+        off = 0
+        for i, w in enumerate(sections):
+            secs.append(pos[i].astype(jnp.float32)[..., None] * freqs[off : off + w])
+            off += w
+        assert off == half, f"mrope sections {sections} must sum to {half}"
+        angles = jnp.concatenate(secs, axis=-1)  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def make_positions(batch: int, seq: int, offset=0, mrope: bool = False) -> jax.Array:
+    p = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    p = jnp.broadcast_to(p, (batch, seq))
+    if mrope:
+        return jnp.broadcast_to(p[None], (3, batch, seq))
+    return p

@@ -1,0 +1,125 @@
+"""MLP blocks: SwiGLU, GELU, and token-choice top-K MoE.
+
+The MoE uses GShard/Switch-style capacity-based dispatch expressed entirely
+as einsums (dispatch/combine one-hots), which partitions cleanly: tokens are
+grouped along the batch*seq dim (groups sharded over ('pod','data')), experts
+are sharded over 'model' (expert parallelism).  When the expert count does
+not divide the model axis (mixtral: 8 experts on a 16-wide axis) the rule
+engine falls back to tensor-parallel experts (d_ff over 'model') — see
+distributed/sharding.py.
+
+Routing is standard top-k softmax gating with capacity dropping (tokens over
+capacity fall through on the residual path) and an auxiliary load-balancing
+loss (Switch §2.2), returned to the trainer.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .common import Leaf, ModelConfig, dense_init
+
+__all__ = ["init_mlp", "mlp", "init_moe", "moe"]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None, d_in=None):
+    d, f = d_in or cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], (d, f), ("embed", "mlp"), cfg.param_dtype),
+        "wg": dense_init(ks[1], (d, f), ("embed", "mlp"), cfg.param_dtype),
+        "wo": dense_init(ks[2], (f, d), ("mlp", "embed"), cfg.param_dtype),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    h = hint(h, "batch", "seq", "act_mlp")
+    return hint(h @ p["wo"].astype(dt), "batch", "seq", "act_embed")
+
+
+def init_moe(key, cfg: ModelConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), ("embed", None), jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), ("expert", "embed", "moe_mlp"), cfg.param_dtype),
+        "wg": dense_init(ks[2], (e, d, f), ("expert", "embed", "moe_mlp"), cfg.param_dtype),
+        "wo": dense_init(ks[3], (e, f, d), ("expert", "moe_mlp", "embed"), cfg.param_dtype),
+    }
+    if cfg.dense_residual:  # arctic: dense MLP in parallel with the MoE
+        p["dense"] = init_mlp(ks[4], cfg)
+    return p
+
+
+def moe(p, cfg: ModelConfig, x: jax.Array, dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux load-balance loss scalar).
+
+    ``dropless=True`` (serving): capacity = 4x the fair share (vs the
+    training capacity factor ~1.25), so drops are negligible without the
+    quadratic (group, group) dispatch tensor a cap == group_size would cost
+    — capacity-based MoE otherwise skews between the batched training pass
+    and single-token decode (a real train/serve consistency hazard; see
+    DESIGN.md §5).  Groups smaller than ~2x experts use full capacity
+    (single-token decode: exactness is free there).
+    """
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    gs = min(cfg.moe_group_size, b * s)
+    ng = (b * s) // gs
+    assert ng * gs == b * s, f"tokens {b*s} % group {gs}"
+    if dropless:
+        cap = gs if gs <= 2 * e else min(gs, int(gs * k / e * 4.0) + 1)
+    else:
+        cap = min(gs, int(gs * k / e * cfg.capacity_factor) + 1)
+
+    xt = x.reshape(ng, gs, d)
+    xt = hint(xt, "batch", None, "act_embed")
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (ng, gs, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k routing with capacity: iteratively take the argmax k times.
+    gates = jnp.zeros_like(probs)
+    rem = probs
+    for _ in range(k):
+        idx = jnp.argmax(rem, axis=-1)
+        oh = jax.nn.one_hot(idx, e, dtype=probs.dtype)
+        gates = gates + rem * oh
+        rem = rem * (1.0 - oh)
+    mask = gates > 0.0
+
+    # capacity assignment: position of each token within its expert's queue
+    pos_in_e = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # (ng, gs, e)
+    keep = mask & (pos_in_e < cap)
+    gates = jnp.where(keep, gates, 0.0)
+    denom = jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    gates = gates / denom  # renormalize kept top-k weights
+
+    # dispatch/combine one-hots (GShard): (ng, gs, e, cap)
+    cap_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, -1), cap, dtype=dt)
+    dispatch = cap_oh  # bool-ish
+    combine = gates[..., None].astype(dt) * cap_oh
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt.astype(dt))  # (ng,e,cap,d)
+    xe = hint(xe, "batch", "act_expert", None, None)
+    hg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dt)))
+    hi = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", hg * hi, p["wo"].astype(dt))
+    ye = hint(ye, "batch", "act_expert", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye).reshape(b, s, d)
+
+    # Switch aux loss: e * sum_e (fraction routed to e) * (mean router prob e)
+    frac = mask.astype(jnp.float32).mean(axis=(0, 1)) / k
+    imp = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac * imp)
+
+    if cfg.dense_residual:
+        y = y + mlp(p["dense"], cfg, x)
+    return hint(y, "batch", "seq", "act_embed"), aux

@@ -1,0 +1,629 @@
+"""Model zoo top level: init / forward / prefill / decode for all families.
+
+Families (DESIGN.md §5):
+  dense | moe | vlm    — uniform decoder stack (attention + MLP/MoE),
+  hybrid_rglru         — RecurrentGemma pattern (rec, rec, local-attn),
+  ssm                  — Mamba-2 SSD stack,
+  encdec               — encoder + decoder with cross-attention (seamless).
+
+Layer parameters are stacked on a leading 'layers' axis and the stack is a
+``lax.scan`` (+ optional full remat), which keeps HLO size O(1) in depth —
+required for the 512-device dry-run of 80-layer models.  Heterogeneous
+patterns scan over *superblocks* (one pattern period) with any remainder
+layers unrolled.
+
+The modality frontends of [audio]/[vlm] archs are stubs per the assignment:
+``batch["frames"]`` carries precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .attention import (
+    AttnCache,
+    _project_qkv,
+    attention,
+    decode_attention,
+    init_attention,
+    init_cache,
+    project_kv_only,
+)
+from .common import Leaf, ModelConfig, make_positions, rms_norm
+from .mlp import init_mlp, init_moe, mlp, moe
+from .rglru import init_rglru_block, init_rglru_state, rglru_block, rglru_decode_step
+from .ssd import init_ssd_block, init_ssd_state, ssd_block, ssd_decode_step
+
+__all__ = [
+    "init_model",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+    "DecodeState",
+]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _norm_leaf(cfg):
+    return Leaf(jnp.zeros((cfg.d_model,), jnp.float32), (None,))
+
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind in ("dense", "attn_local", "enc"):
+        return {"n1": _norm_leaf(cfg), "attn": init_attention(ks[0], cfg),
+                "n2": _norm_leaf(cfg), "mlp": init_mlp(ks[1], cfg)}
+    if kind == "moe":
+        return {"n1": _norm_leaf(cfg), "attn": init_attention(ks[0], cfg),
+                "n2": _norm_leaf(cfg), "moe": init_moe(ks[1], cfg)}
+    if kind == "rec":
+        return {"n1": _norm_leaf(cfg), "rec": init_rglru_block(ks[0], cfg),
+                "n2": _norm_leaf(cfg), "mlp": init_mlp(ks[1], cfg)}
+    if kind == "ssd":
+        return {"n1": _norm_leaf(cfg), "ssd": init_ssd_block(ks[0], cfg)}
+    if kind == "dec":
+        return {"n1": _norm_leaf(cfg), "attn": init_attention(ks[0], cfg),
+                "nx": _norm_leaf(cfg), "xattn": init_attention(ks[1], cfg),
+                "n2": _norm_leaf(cfg), "mlp": init_mlp(ks[2], cfg)}
+    raise ValueError(kind)
+
+
+def _stacked_init(key, cfg: ModelConfig, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, kind))(keys)
+    return jax.tree.map(
+        lambda l: Leaf(l.value, ("layers",) + l.axes),
+        blocks,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.family == "hybrid_rglru":
+        return cfg.block_pattern or ("rec", "rec", "attn_local")
+    if cfg.family == "ssm":
+        return ("ssd",)
+    if cfg.family == "moe":
+        return ("moe",)
+    if cfg.family == "encdec":
+        return ("dec",)
+    return ("dense",)
+
+
+def init_model(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    vp = cfg.vocab_padded
+    params: Dict[str, Any] = {
+        "embed": Leaf(
+            (jax.random.normal(ks[0], (vp, cfg.d_model), jnp.float32) * 0.02).astype(cfg.param_dtype),
+            ("vocab", "embed"),
+        ),
+        "final_norm": _norm_leaf(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Leaf(
+            (jax.random.normal(ks[1], (cfg.d_model, vp), jnp.float32) * 0.02).astype(cfg.param_dtype),
+            ("embed", "vocab"),
+        )
+    if cfg.family == "encdec":
+        params["enc"] = _stacked_init(ks[2], cfg, "enc", cfg.n_enc_layers)
+        params["enc_norm"] = _norm_leaf(cfg)
+        params["blocks"] = {"dec_0": _stacked_init(ks[3], cfg, "dec", cfg.n_layers)}
+        params["rem"] = []
+        return params
+
+    pat = _pattern(cfg)
+    n_full, rem = divmod(cfg.n_layers, len(pat))
+    params["blocks"] = {
+        f"{kind}_{i}": _stacked_init(jax.random.fold_in(ks[4], i), cfg, kind, n_full)
+        for i, kind in enumerate(pat)
+    }
+    params["rem"] = [
+        _init_block(jax.random.fold_in(ks[5], i), cfg, pat[i]) for i in range(rem)
+    ]
+    return params
+
+
+# --------------------------------------------------------------------------
+# sequence forward (training / prefill / encoder)
+# --------------------------------------------------------------------------
+
+def _block_seq(p, cfg: ModelConfig, kind: str, x, pos, enc_ctx=None, collect: bool = False):
+    """One residual block, full-sequence. Returns (x, aux, side).
+
+    ``side``: with collect=True — (k, v) for attention kinds, the final
+    recurrent state for rec/ssd kinds; else ().  ``collect`` also marks the
+    serving path, which runs the MoE dropless (see mlp.moe).
+    """
+    side: Any = ()
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe", "attn_local", "enc", "dec"):
+        window = cfg.window if kind not in ("enc", "dec") else None
+        causal = kind != "enc"
+        h = rms_norm(x, p["n1"], cfg.rms_eps)
+        if collect:
+            _, k, v = _project_qkv(p["attn"], cfg, h, pos)
+            side = (k, v)
+        x = x + attention(p["attn"], cfg, h, pos, causal=causal, window=window)
+        if kind == "dec":
+            enc_out, enc_pos = enc_ctx
+            hx = rms_norm(x, p["nx"], cfg.rms_eps)
+            k, v = project_kv_only(p["xattn"], cfg, enc_out)
+            x = x + attention(
+                p["xattn"], cfg, hx, pos if pos.ndim == 2 else pos[0],
+                causal=False, kv_override=(k, v, enc_pos),
+            )
+        h2 = rms_norm(x, p["n2"], cfg.rms_eps)
+        if kind == "moe":
+            y, aux = moe(p["moe"], cfg, h2, dropless=collect)
+        else:
+            y = mlp(p["mlp"], cfg, h2)
+        x = x + y
+    elif kind == "rec":
+        h = rms_norm(x, p["n1"], cfg.rms_eps)
+        y, st = rglru_block(p["rec"], cfg, h)
+        if collect:
+            side = st
+        x = x + y
+        h2 = rms_norm(x, p["n2"], cfg.rms_eps)
+        x = x + mlp(p["mlp"], cfg, h2)
+    elif kind == "ssd":
+        h = rms_norm(x, p["n1"], cfg.rms_eps)
+        y, st = ssd_block(p["ssd"], cfg, h)
+        if collect:
+            side = st
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, aux, side
+
+
+def _run_stack(params, cfg: ModelConfig, x, pos, enc_ctx=None, collect: bool = False):
+    """Scan the (super-)block stack. Returns (x, aux_sum, (side_stacks, rem_sides))."""
+    pat = _pattern(cfg)
+
+    def superblock(x, block_params):
+        auxes = jnp.zeros((), jnp.float32)
+        sides = {}
+        for i, kind in enumerate(pat):
+            key = f"{kind}_{i}"
+            x, aux, side = _block_seq(block_params[key], cfg, kind, x, pos, enc_ctx, collect)
+            auxes = auxes + aux
+            sides[key] = side
+        # sequence parallelism at the layer boundary: the scan carry (== the
+        # remat-saved activation stack) lives seq-sharded over 'model'.
+        # (Hillclimb A2 tried exempting hybrid blocks: refuted, +1.2 GiB
+        # collectives — see EXPERIMENTS.md §Perf.)
+        x = hint(x, "batch", "act_seq", "act_embed")
+        return x, (auxes, sides)
+
+    fn = superblock
+    if cfg.remat == "dots":
+        # save matmul outputs so backward skips recompute.  Hillclimb C1
+        # REFUTED this for qwen3-0.6b: the inner attention/CE checkpoints
+        # own the dominant recompute, so body FLOPs dropped only ~3% while
+        # temp grew 4.85 -> 48.7 GiB.  Kept as an option for memory-rich,
+        # attention-light configs.
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    elif cfg.remat != "none":
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, (auxes, side_stacks) = jax.lax.scan(lambda c, p_: fn(c, p_), x, params["blocks"])
+    aux_sum = auxes.sum()
+
+    rem_sides = []
+    for i, bp in enumerate(params.get("rem", [])):
+        x, aux, side = _block_seq(bp, cfg, pat[i], x, pos, enc_ctx, collect)
+        aux_sum = aux_sum + aux
+        rem_sides.append(side)
+    return x, aux_sum, (side_stacks, rem_sides)
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    """Embedding lookup as a one-hot contraction with a custom VJP.
+
+    Forward: a gather from a vocab-sharded table forces the SPMD partitioner
+    into involuntary full rematerialization (replicates the table); the
+    one-hot einsum contracts over the sharded vocab axis cleanly (a psum
+    over 'model') and runs on the MXU.  Exact: each row sums a single term.
+
+    Backward: AD of the one-hot matmul upcasts the (B,S,V) one-hot to f32
+    (XLA hoists the convert -> multi-GB buffer); the custom VJP instead
+    recomputes the one-hot in bf16 and lets the table-gradient einsum
+    accumulate bf16 x bf16 -> f32, which is exact per product.
+    """
+    dt = cfg.compute_dtype
+    vp = cfg.vocab_padded
+
+    @jax.custom_vjp
+    def lookup(table, toks):
+        oh = jax.nn.one_hot(toks, vp, dtype=dt)
+        return oh @ table.astype(dt)
+
+    def fwd(table, toks):
+        return lookup(table, toks), toks
+
+    def bwd(toks, dy):
+        oh = jax.nn.one_hot(toks, vp, dtype=dt)
+        d_table = jnp.einsum("bsv,bsd->vd", oh, dy, preferred_element_type=jnp.float32)
+        return d_table, None
+
+    lookup.defvjp(fwd, bwd)
+    return hint(lookup(params["embed"], tokens), "batch", "seq", "act_embed")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    dt = cfg.compute_dtype
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:  # mask padded vocab slots
+        pad = cfg.vocab_padded - cfg.vocab
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab,)), jnp.full((pad,), -1e30)]).astype(jnp.float32)
+        logits = logits + mask
+    return hint(logits, "batch", "seq", "act_vocab")
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Encoder stack over stub frame embeddings. Returns (enc_out, enc_pos)."""
+    b, s_src = frames.shape[:2]
+    enc_pos = make_positions(b, s_src)
+    x = hint(frames.astype(cfg.compute_dtype), "batch", "seq", "act_embed")
+
+    def enc_block(x, p):
+        x, _, _ = _block_seq(p, cfg, "enc", x, enc_pos)
+        return x, None
+
+    fn = enc_block
+    if cfg.remat != "none":
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(fn, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.rms_eps), enc_pos
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """batch: tokens (B,S) [, frames, positions] -> (logits (B,S,Vp), aux)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    enc_ctx = None
+    if cfg.family == "encdec":
+        enc_ctx = _encode(params, cfg, batch["frames"])
+    x = _embed(params, cfg, tokens)
+    if cfg.family == "vlm" and batch.get("frames") is not None:
+        # vision stub: precomputed patch embeddings prefix the text tokens
+        x = jnp.concatenate([batch["frames"].astype(cfg.compute_dtype), x], axis=1)
+    pos = batch.get("positions")
+    if pos is None:
+        pos = make_positions(b, x.shape[1], mrope=cfg.mrope_sections is not None)
+    x, aux, _ = _run_stack(params, cfg, x, pos, enc_ctx)
+    return _logits(params, cfg, x), {"moe_aux": aux}
+
+
+def _backbone(params, cfg: ModelConfig, batch):
+    """Everything up to (but not including) the LM head. Returns (x, aux)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    enc_ctx = None
+    if cfg.family == "encdec":
+        enc_ctx = _encode(params, cfg, batch["frames"])
+    x = _embed(params, cfg, tokens)
+    if cfg.family == "vlm" and batch.get("frames") is not None:
+        x = jnp.concatenate([batch["frames"].astype(cfg.compute_dtype), x], axis=1)
+    pos = batch.get("positions")
+    if pos is None:
+        pos = make_positions(b, x.shape[1], mrope=cfg.mrope_sections is not None)
+    x, aux, _ = _run_stack(params, cfg, x, pos, enc_ctx)
+    return x, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE aux). Labels < 0 are masked.
+
+    Memory shape: the backbone output stays *sequence*-sharded over 'model'
+    (matching the layer boundaries), so the f32 logits live as
+    (B_loc, S/16, V) per device and the whole CE tail is rematerialized —
+    no (B, S, V) buffer ever exists.  The label logit comes from a one-hot
+    contraction (a take_along_axis over a sharded axis would all-gather
+    the logits).
+    """
+    x, aux = _backbone(params, cfg, batch)
+    labels = batch["labels"]
+    b, s, d = x.shape
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def ce_chunk_fn(xc, lc):
+        logits = _logits(params, cfg, xc)  # (B,C,Vp) f32, vocab-sharded
+        valid = lc >= 0
+        lbl = jnp.maximum(lc, 0)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        oh = jax.nn.one_hot(lbl, cfg.vocab_padded, dtype=logits.dtype)
+        label_logit = jnp.sum(logits * oh, axis=-1)
+        nll = (lse - label_logit) * valid
+        return jnp.sum(nll).astype(jnp.float32), jnp.sum(valid).astype(jnp.int32)
+
+    chunk = min(512, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s += pad
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        nll, n = ce_chunk_fn(*inp)
+        return (tot + nll, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xc, lc)
+    )
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss + aux_weight * aux, {"ce": loss, "moe_aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (serving)
+# --------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    step: jax.Array  # () int32 — absolute position of the NEXT token
+    layers: Any  # dict: per-pattern-kind stacked layer states
+    rem: Any  # remainder-layer states (tuple)
+    cross: Any  # encdec: (k_stack, v_stack, enc_pos) or None
+
+
+def _layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("dense", "moe", "attn_local", "dec"):
+        w = min(max_len, cfg.window) if cfg.window else max_len
+        return init_cache(cfg, batch, w)
+    if kind == "rec":
+        return init_rglru_state(cfg, batch)
+    if kind == "ssd":
+        return init_ssd_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, step: int = 0, enc_len: int = 1
+) -> DecodeState:
+    pat = _pattern(cfg)
+    n_full, rem = divmod(cfg.n_layers, len(pat))
+    stack = lambda st, n: jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), st)
+    layers = {
+        f"{kind}_{i}": stack(_layer_state(cfg, kind, batch, max_len), n_full)
+        for i, kind in enumerate(pat)
+    }
+    rem_states = tuple(_layer_state(cfg, pat[i], batch, max_len) for i in range(rem))
+    cross = None
+    if cfg.family == "encdec":
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        # cross K/V placeholders (filled by prefill); enc_len sizes the
+        # encoder context the dry-run assumes
+        cross = (
+            jnp.zeros((cfg.n_layers, batch, enc_len, kv, hd), cfg.compute_dtype),
+            jnp.zeros((cfg.n_layers, batch, enc_len, kv, hd), cfg.compute_dtype),
+            jnp.zeros((batch, enc_len), jnp.int32),
+        )
+    return DecodeState(step=jnp.asarray(step, jnp.int32), layers=layers, rem=rem_states, cross=cross)
+
+
+def _layer_state_axes(cfg: ModelConfig, kind: str):
+    """Logical sharding axes mirroring _layer_state's structure."""
+    if kind in ("dense", "moe", "attn_local", "dec"):
+        sc = ("batch", "cache_seq", "act_kv_heads") if cfg.kv_cache_dtype == "int8" else None
+        return AttnCache(
+            k=("batch", "cache_seq", "act_kv_heads", None),
+            v=("batch", "cache_seq", "act_kv_heads", None),
+            slot_pos=("batch", "cache_seq"),
+            k_scale=sc,
+            v_scale=sc,
+        )
+    if kind == "rec":
+        from .rglru import RGLRUState
+
+        return RGLRUState(h=("batch", "act_ssm_inner"), conv=("batch", None, "act_ssm_inner"))
+    if kind == "ssd":
+        from .ssd import SSDState
+
+        return SSDState(h=("batch", "ssm_heads", None, None), conv=("batch", None, "act_ssm_inner"))
+    raise ValueError(kind)
+
+
+def decode_state_axes(cfg: ModelConfig) -> DecodeState:
+    """Logical-axes tree matching init_decode_state (for in_shardings)."""
+    pat = _pattern(cfg)
+    n_full, rem = divmod(cfg.n_layers, len(pat))
+    prepend = lambda st: jax.tree.map(
+        lambda a: ("layers",) + a, st, is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "_fields")
+    )
+    layers = {
+        f"{kind}_{i}": prepend(_layer_state_axes(cfg, kind)) for i, kind in enumerate(pat)
+    }
+    rem_axes = tuple(_layer_state_axes(cfg, pat[i]) for i in range(rem))
+    cross = None
+    if cfg.family == "encdec":
+        cross = (
+            ("layers", "batch", None, "act_kv_heads", None),
+            ("layers", "batch", None, "act_kv_heads", None),
+            ("batch", None),
+        )
+    return DecodeState(step=(), layers=layers, rem=rem_axes, cross=cross)
+
+
+def _block_decode(p, cfg, kind, x, pos, state, cross_kv=None):
+    if kind in ("dense", "moe", "attn_local", "dec"):
+        window = cfg.window if kind != "dec" else None
+        h = rms_norm(x, p["n1"], cfg.rms_eps)
+        y, state = decode_attention(p["attn"], cfg, h, pos, state, window=window)
+        x = x + y
+        if kind == "dec":
+            hx = rms_norm(x, p["nx"], cfg.rms_eps)
+            yx, _ = decode_attention(p["xattn"], cfg, hx, pos, state, cross_kv=cross_kv)
+            x = x + yx
+        h2 = rms_norm(x, p["n2"], cfg.rms_eps)
+        if kind == "moe":
+            y2, _ = moe(p["moe"], cfg, h2, dropless=True)  # serving: no drops
+        else:
+            y2 = mlp(p["mlp"], cfg, h2)
+        x = x + y2
+    elif kind == "rec":
+        h = rms_norm(x, p["n1"], cfg.rms_eps)
+        y, state = rglru_decode_step(p["rec"], cfg, h, state)
+        x = x + y
+        h2 = rms_norm(x, p["n2"], cfg.rms_eps)
+        x = x + mlp(p["mlp"], cfg, h2)
+    elif kind == "ssd":
+        h = rms_norm(x, p["n1"], cfg.rms_eps)
+        y, state = ssd_decode_step(p["ssd"], cfg, h, state)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, state
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens: jax.Array):
+    """One serving step: tokens (B, 1) -> (logits (B, vocab_padded), state')."""
+    b = tokens.shape[0]
+    pos = make_positions(b, 1, offset=state.step, mrope=cfg.mrope_sections is not None)
+    x = _embed(params, cfg, tokens)
+    pat = _pattern(cfg)
+
+    if cfg.family == "encdec":
+        ck, cv, cpos = state.cross
+
+        def scan_fn(x, scanned):
+            bp, st, k, v = scanned
+            x, st2 = _block_decode(bp, cfg, "dec", x, pos, st, cross_kv=(k, v, cpos))
+            return x, st2
+
+        x, new_caches = jax.lax.scan(
+            scan_fn, x, (params["blocks"]["dec_0"], state.layers["dec_0"], ck, cv)
+        )
+        new_layer_states = {"dec_0": new_caches}
+    else:
+
+        def scan_fn(x, scanned):
+            bp, st = scanned
+            new_states = {}
+            for i, kind in enumerate(pat):
+                key = f"{kind}_{i}"
+                x, new_states[key] = _block_decode(bp[key], cfg, kind, x, pos, st[key])
+            return x, new_states
+
+        x, new_layer_states = jax.lax.scan(scan_fn, x, (params["blocks"], state.layers))
+
+    new_rem = []
+    for i, (bp, st) in enumerate(zip(params.get("rem", []), state.rem)):
+        x, st2 = _block_decode(bp, cfg, pat[i], x, pos, st)
+        new_rem.append(st2)
+
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, DecodeState(
+        step=state.step + 1, layers=new_layer_states, rem=tuple(new_rem), cross=state.cross
+    )
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def _fill_cache(cache: AttnCache, k, v, pos2d):
+    """Place projected prompt K/V into a (ring) cache — scatter-free.
+
+    Position p lives at slot p % w, so the last `take` positions form a
+    cyclic shift: pad-to-w + roll covers every case without advanced-index
+    scatter (which the SPMD partitioner can only realize by replicating the
+    whole cache — measured at +hundreds of GB on 32k MHA prefills).
+    """
+    s = k.shape[1]
+    w = cache.k.shape[1]
+    take = min(w, s)
+    shift = (s - take) % w
+
+    def place(buf, new, fill):
+        new = new[:, s - take :].astype(buf.dtype)
+        if take < w:
+            pad = [(0, 0)] * new.ndim
+            pad[1] = (0, w - take)
+            new = jnp.pad(new, pad, constant_values=fill)
+        return jnp.roll(new, shift, axis=1) if shift else new
+
+    if cache.k_scale is not None:  # int8 cache: quantize the prompt K/V
+        from .attention import quantize_kv
+
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return AttnCache(
+            k=place(cache.k, kq, 0), v=place(cache.v, vq, 0),
+            slot_pos=place(cache.slot_pos, pos2d, -1),
+            k_scale=place(cache.k_scale, ks, 0), v_scale=place(cache.v_scale, vs, 0),
+        )
+    return AttnCache(
+        k=place(cache.k, k, 0),
+        v=place(cache.v, v, 0),
+        slot_pos=place(cache.slot_pos, pos2d, -1),
+    )
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Run the prompt; build the decode state. Returns (state, last_logits)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    enc_ctx = None
+    cross = None
+    if cfg.family == "encdec":
+        enc_out, enc_pos = _encode(params, cfg, batch["frames"])
+        enc_ctx = (enc_out, enc_pos)
+        k_stack, v_stack = jax.vmap(
+            lambda p: project_kv_only(p["xattn"], cfg, enc_out)
+        )(params["blocks"]["dec_0"])
+        cross = (k_stack, v_stack, enc_pos)
+    x = _embed(params, cfg, tokens)
+    if cfg.family == "vlm" and batch.get("frames") is not None:
+        x = jnp.concatenate([batch["frames"].astype(cfg.compute_dtype), x], axis=1)
+    s = x.shape[1]
+    pos = batch.get("positions")
+    if pos is None:
+        pos = make_positions(b, s, mrope=cfg.mrope_sections is not None)
+    pos2d = pos if pos.ndim == 2 else pos[0]
+    x, _, (side_stacks, rem_sides) = _run_stack(params, cfg, x, pos, enc_ctx, collect=True)
+    # logits for the LAST position only (full-prompt logits at 32k x 100k
+    # vocab would be tens of GB of f32)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, -1]
+
+    state = init_decode_state(cfg, b, max_len, step=s)
+    pat = _pattern(cfg)
+    new_layers = {}
+    for i, kind in enumerate(pat):
+        key = f"{kind}_{i}"
+        side = side_stacks[key]  # stacked over layers
+        if kind in ("dense", "moe", "attn_local", "dec"):
+            k_st, v_st = side  # (L, B, S, KV, D)
+            new_layers[key] = jax.vmap(lambda c, k, v: _fill_cache(c, k, v, pos2d))(
+                state.layers[key], k_st, v_st
+            )
+        else:
+            new_layers[key] = side  # recurrent states, already stacked
+    new_rem = []
+    for i, side in enumerate(rem_sides):
+        if pat[i] in ("dense", "moe", "attn_local", "dec"):
+            new_rem.append(_fill_cache(state.rem[i], side[0], side[1], pos2d))
+        else:
+            new_rem.append(side)
+    return (
+        DecodeState(step=jnp.asarray(s, jnp.int32), layers=new_layers, rem=tuple(new_rem), cross=cross),
+        logits,
+    )

@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [gate branch: W_gate -> GeLU] * [rec branch: W_rec -> causal
+depthwise conv1d(4) -> RG-LRU] -> W_out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(L) * r_t)       c = 8, L learnable
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form uses ``jax.lax.associative_scan`` over the (a, b) linear
+recurrence — O(log S) depth, MXU/VPU friendly, and the natural TPU analogue
+of the CUDA linear-scan kernels the Griffin paper uses.  The decode form is
+the O(1) single-step update carrying h.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .common import Leaf, ModelConfig, dense_init
+
+__all__ = ["init_rglru_block", "rglru_block", "rglru_decode_step", "RGLRUState"]
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, W) recurrence state
+    conv: jax.Array  # (B, cw-1, W) conv tail
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d, w, cw = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = exp(-c*softplus(L)) lands in [0.9, 0.999).
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # inverse softplus
+    return {
+        "w_gate": dense_init(ks[0], (d, w), ("embed", "lru"), cfg.param_dtype),
+        "w_rec": dense_init(ks[1], (d, w), ("embed", "lru"), cfg.param_dtype),
+        "w_out": dense_init(ks[2], (w, d), ("lru", "embed"), cfg.param_dtype),
+        # gate weights shard on the OUTPUT width only: contracting over a
+        # 'model'-sharded input width costs two f32 all-reduces per layer
+        # (hillclimb A3, EXPERIMENTS.md §Perf)
+        "w_a": dense_init(ks[3], (w, w), (None, "lru"), cfg.param_dtype, scale=0.0),
+        "w_x": dense_init(ks[4], (w, w), (None, "lru"), cfg.param_dtype, scale=0.0),
+        "b_a": Leaf(jnp.zeros((w,), jnp.float32), (None,)),
+        "b_x": Leaf(jnp.zeros((w,), jnp.float32), (None,)),
+        "lam": Leaf(lam, (None,)),
+        "conv_w": Leaf(
+            jax.random.normal(ks[6], (cw, w), jnp.float32) * (1.0 / cw), ("conv", "lru")
+        ),
+        "conv_b": Leaf(jnp.zeros((w,), jnp.float32), (None,)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array = None):
+    """Depthwise causal conv1d; x: (B,S,W), w: (cw,W). tail: (B,cw-1,W)."""
+    cw = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(cw))
+    return y + b
+
+
+def _gates(p, xr: jax.Array):
+    """Returns (log_a (B,S,W) f32, gated input (B,S,W) f32)."""
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * xf)
+    return log_a, b
+
+
+def rglru_block(p, cfg: ModelConfig, x: jax.Array):
+    """Sequence form. x: (B,S,d) -> ((B,S,d), final RGLRUState)."""
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    xr = x @ p["w_rec"].astype(dt)
+    xr = hint(xr, "batch", "act_seq", None)
+    conv_tail = xr[:, -(cfg.conv_width - 1) :, :]  # raw inputs: decode conv state
+    xr = _causal_conv(xr, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    log_a, b = _gates(p, xr)
+    # The recurrence is elementwise across the LRU width: shard the f32
+    # gate/state tensors over 'model' so each device scans its channel slice
+    # (without this the (B,S,W) f32 intermediates replicate per device).
+    log_a = hint(log_a, "batch", "act_seq", None)
+    b = hint(b, "batch", "act_seq", None)
+    # associative linear recurrence: h_t = a_t h_{t-1} + b_t
+    a = jnp.exp(log_a)
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hint(h, "batch", "act_seq", None)
+    y = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    state = RGLRUState(h=h[:, -1], conv=conv_tail)
+    return hint(y, "batch", "seq", "act_embed"), state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), cfg.compute_dtype),
+    )
+
+
+def rglru_decode_step(p, cfg: ModelConfig, x: jax.Array, state: RGLRUState) -> Tuple[jax.Array, RGLRUState]:
+    """Single-token form. x: (B,1,d) -> (B,1,d); O(1) in sequence length."""
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    xr = x @ p["w_rec"].astype(dt)  # (B,1,W)
+    conv_in = jnp.concatenate([state.conv, xr], axis=1)  # (B,cw,W)
+    w = p["conv_w"].astype(dt)
+    xr_c = sum(conv_in[:, i : i + 1, :] * w[i] for i in range(w.shape[0])) + p["conv_b"].astype(dt)
+    log_a, b = _gates(p, xr_c)
+    h = jnp.exp(log_a[:, 0]) * state.h + b[:, 0]
+    y = (h[:, None, :].astype(dt) * gate) @ p["w_out"].astype(dt)
+    return y, RGLRUState(h=h, conv=conv_in[:, 1:, :])

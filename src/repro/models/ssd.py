@@ -1,0 +1,179 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+The SSD form computes the selective-SSM recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;   y_t = C_t . h_t + D x_t
+
+in *chunks*: within a chunk the input-output map is an attention-like
+lower-triangular matmul (MXU-friendly — this is the core reason SSD maps
+well to TPU); across chunks a lax.scan carries the (H, P, N) state.  This is
+the standard "minimal SSD" algorithm, expressed so only one chunk's
+(L x L) decay matrix is ever live.
+
+Decode is the O(1) recurrence update.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .common import Leaf, ModelConfig, dense_init, rms_norm
+
+__all__ = ["init_ssd_block", "ssd_block", "ssd_decode_step", "SSDState", "init_ssd_state"]
+
+
+class SSDState(NamedTuple):
+    h: jax.Array  # (B, H, P, N) SSM state
+    conv: jax.Array  # (B, cw-1, conv_dim) conv tail
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.n_ssm_heads
+    p = cfg.ssm_headdim
+    n = cfg.ssm_state
+    conv_dim = di + 2 * n  # conv over (x, B, C)
+    return di, h, p, n, conv_dim
+
+
+def init_ssd_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, h, p, n, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * di + 2 * n + h  # z, x, B, C, dt
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        ks[3], (h,), jnp.float32, jnp.log(1e-3), jnp.log(1e-1)))))
+    return {
+        "w_in": dense_init(ks[0], (d, in_dim), ("embed", "ssm_inner"), cfg.param_dtype),
+        "w_out": dense_init(ks[1], (di, d), ("ssm_inner", "embed"), cfg.param_dtype),
+        "conv_w": Leaf(
+            jax.random.normal(ks[2], (cfg.conv_width, conv_dim), jnp.float32) / cfg.conv_width,
+            ("conv", "ssm_inner"),
+        ),
+        "conv_b": Leaf(jnp.zeros((conv_dim,), jnp.float32), (None,)),
+        "a_log": Leaf(jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)), ("ssm_heads",)),
+        "dt_bias": Leaf(dt_bias, ("ssm_heads",)),
+        "d_skip": Leaf(jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "out_norm": Leaf(jnp.zeros((di,), jnp.float32), (None,)),
+    }
+
+
+def _split_proj(p, cfg: ModelConfig, u: jax.Array):
+    """u: (B,S,d) -> z (B,S,di), xbc (B,S,conv_dim), dt (B,S,H) pre-softplus."""
+    di, h, _, n, conv_dim = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    zxbcdt = u.astype(dt_) @ p["w_in"].astype(dt_)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim :]
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); a: (H,) negative;
+    b, c: (B,S,N) (single group, broadcast over heads).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, nh, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, nh, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, nh).transpose(1, 0, 2, 3)
+    bc = b.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(hprev, inp):
+        xj, dtj, bj, cj = inp  # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        da = dtj * a  # (B,L,H)
+        dac = jnp.cumsum(da, axis=1)  # inclusive
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(dac_i - dac_j) dt_j x_j
+        scores = jnp.einsum("bin,bjn->bij", cj, bj)
+        decay = jnp.exp(dac[:, :, None, :] - dac[:, None, :, :])  # (B,L,L,H)
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        y = jnp.einsum("bij,bijh,bjh,bjhp->bihp", scores, decay, dtj, xj)
+        # + contribution of the incoming state
+        y = y + jnp.einsum("bin,bhpn->bihp", cj, hprev) * jnp.exp(dac)[..., None]
+        # state update to end of chunk
+        dec_end = jnp.exp(dac[:, -1:, :] - dac)  # (B,L,H)
+        hnew = hprev * jnp.exp(dac[:, -1])[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhpn", bj, dtj * dec_end, xj
+        )
+        return hnew, y
+
+    h0 = h0 if h0 is not None else jnp.zeros((bsz, nh, p, n), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, p)
+    return y, hf
+
+
+def ssd_block(p, cfg: ModelConfig, u: jax.Array):
+    """Sequence form. u: (B,S,d) -> ((B,S,d), final SSDState)."""
+    from .rglru import _causal_conv  # same depthwise causal conv
+
+    di, nh, hp, n, conv_dim = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    z, xbc, dtp = _split_proj(p, cfg, u)
+    conv_tail = xbc[:, -(cfg.conv_width - 1) :, :]  # decode conv state
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)))
+    x = xbc[..., :di]
+    b = xbc[..., di : di + n]
+    c = xbc[..., di + n :]
+    bsz, s = x.shape[:2]
+    xh = x.reshape(bsz, s, nh, hp).astype(jnp.float32)
+    xh = hint(xh, "batch", "seq", "act_heads", None)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    # ragged sequences: pad to a chunk multiple with dt=0 steps (identity
+    # recurrence: no decay, no input) so the final state is untouched.
+    s_pad = (-s) % cfg.ssm_chunk
+    if s_pad:
+        pad3 = lambda t: jnp.pad(t, ((0, 0), (0, s_pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, b, c = pad3(xh), pad3(dt), pad3(b), pad3(c)
+    y, hf = _ssd_chunked(xh, dt, a, b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    if s_pad:
+        y = y[:, :s]
+    y = y.reshape(bsz, s, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.rms_eps)
+    out = hint(y @ p["w_out"].astype(dt_), "batch", "seq", "act_embed")
+    return out, SSDState(h=hf, conv=conv_tail)
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int) -> SSDState:
+    di, nh, hp, n, conv_dim = _dims(cfg)
+    return SSDState(
+        h=jnp.zeros((batch, nh, hp, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), cfg.compute_dtype),
+    )
+
+
+def ssd_decode_step(p, cfg: ModelConfig, u: jax.Array, state: SSDState) -> Tuple[jax.Array, SSDState]:
+    """Single-token form: O(1) state update. u: (B,1,d)."""
+    di, nh, hp, n, conv_dim = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    z, xbc, dtp = _split_proj(p, cfg, u)
+    conv_in = jnp.concatenate([state.conv, xbc], axis=1)  # (B,cw,conv_dim)
+    w = p["conv_w"].astype(dt_)
+    xbc_c = sum(conv_in[:, i : i + 1, :] * w[i] for i in range(w.shape[0])) + p["conv_b"].astype(dt_)
+    xbc_c = jax.nn.silu(xbc_c)
+    x = xbc_c[..., :di].reshape(-1, nh, hp).astype(jnp.float32)  # (B,H,P)
+    b = xbc_c[:, 0, di : di + n].astype(jnp.float32)  # (B,N)
+    c = xbc_c[:, 0, di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # (B,H)
+    h = state.h * da[..., None, None] + jnp.einsum("bh,bn,bhp->bhpn", dt, b, x)
+    y = jnp.einsum("bn,bhpn->bhp", c, h) + x * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.rms_eps)
+    return y @ p["w_out"].astype(dt_), SSDState(h=h, conv=conv_in[:, 1:, :])

@@ -1,0 +1,14 @@
+from .formats import CSR, DeviceCOO, DeviceELL, csr_from_coo, to_device_coo, to_device_ell
+from .generate import SUITE, generate, suite_matrix
+
+__all__ = [
+    "CSR",
+    "DeviceCOO",
+    "DeviceELL",
+    "csr_from_coo",
+    "to_device_coo",
+    "to_device_ell",
+    "SUITE",
+    "generate",
+    "suite_matrix",
+]

@@ -1,0 +1,173 @@
+"""Sparse matrix containers used by the eigensolver.
+
+Host-side construction is NumPy (CSR); device-side compute formats are:
+
+* ``DeviceCOO``  — (row, col, val) triplets, the pure-jnp ``segment_sum`` SpMV
+  reference path; also the per-shard format of the distributed solver.
+* ``DeviceELL``  — row-tiled ELLPACK (uniform width, padded), the layout the
+  Pallas TPU kernel consumes (DESIGN.md §4).
+
+All device containers are registered pytrees so they can cross ``jit`` /
+``shard_map`` boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CSR", "DeviceCOO", "DeviceELL", "csr_from_coo", "to_device_coo", "to_device_ell"]
+
+
+@dataclasses.dataclass
+class CSR:
+    """Host-side CSR (NumPy). Always square, symmetric matrices here."""
+
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (nnz,) int32
+    data: np.ndarray  # (nnz,) float64
+    shape: Tuple[int, int]
+
+    @property
+    def n(self) -> int:
+        return self.shape[0]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def to_scipy(self):
+        import scipy.sparse as sp
+
+        return sp.csr_matrix((self.data, self.indices, self.indptr), shape=self.shape)
+
+    def toarray(self) -> np.ndarray:
+        return self.to_scipy().toarray()
+
+
+def csr_from_coo(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, n: int, sum_dups: bool = True
+) -> CSR:
+    """Build CSR from COO triplets (NumPy), summing duplicates."""
+    import scipy.sparse as sp
+
+    m = sp.coo_matrix((vals, (rows, cols)), shape=(n, n))
+    if sum_dups:
+        m.sum_duplicates()
+    m = m.tocsr()
+    m.sort_indices()
+    return CSR(
+        indptr=m.indptr.astype(np.int64),
+        indices=m.indices.astype(np.int32),
+        data=m.data.astype(np.float64),
+        shape=(n, n),
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceCOO:
+    """Device COO triplets; SpMV = segment_sum(val * x[col], row)."""
+
+    row: jax.Array  # (nnz,) int32, sorted by row
+    col: jax.Array  # (nnz,) int32
+    val: jax.Array  # (nnz,) storage dtype
+    n_rows: int  # static
+    n_cols: int  # static
+
+    def tree_flatten(self):
+        return (self.row, self.col, self.val), (self.n_rows, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        row, col, val = children
+        return cls(row, col, val, *aux)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.val.shape[0])
+
+    def matvec(self, x: jax.Array, accum_dtype=None) -> jax.Array:
+        """SpMV with accumulation in ``accum_dtype`` (mixed-precision knob)."""
+        acc = accum_dtype or self.val.dtype
+        prod = self.val.astype(acc) * jnp.take(x, self.col).astype(acc)
+        return jax.ops.segment_sum(prod, self.row, num_segments=self.n_rows)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceELL:
+    """Uniform-width ELLPACK, row-major, padded.
+
+    ``val[r, s]`` / ``col[r, s]``: s-th stored entry of row r.  Padding slots
+    have ``val == 0`` and ``col == 0`` (they contribute 0).  Rows are padded to
+    a multiple of ``row_tile`` and the width to a multiple of ``slot_tile`` so
+    the Pallas kernel's BlockSpec grid divides evenly.
+    """
+
+    val: jax.Array  # (rows_padded, width) storage dtype
+    col: jax.Array  # (rows_padded, width) int32
+    n_rows: int  # logical rows (static)
+    n_cols: int  # static
+
+    def tree_flatten(self):
+        return (self.val, self.col), (self.n_rows, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        val, col = children
+        return cls(val, col, *aux)
+
+    @property
+    def width(self) -> int:
+        return int(self.val.shape[1])
+
+    def matvec(self, x: jax.Array, accum_dtype=None) -> jax.Array:
+        acc = accum_dtype or self.val.dtype
+        gathered = jnp.take(x, self.col).astype(acc)  # (rows_padded, width)
+        y = (self.val.astype(acc) * gathered).sum(axis=1)
+        return y[: self.n_rows]
+
+
+def to_device_coo(csr: CSR, dtype=jnp.float32) -> DeviceCOO:
+    n = csr.n
+    row = np.repeat(np.arange(n, dtype=np.int32), csr.row_nnz())
+    return DeviceCOO(
+        row=jnp.asarray(row),
+        col=jnp.asarray(csr.indices, dtype=jnp.int32),
+        val=jnp.asarray(csr.data, dtype=dtype),
+        n_rows=n,
+        n_cols=n,
+    )
+
+
+def to_device_ell(
+    csr: CSR, dtype=jnp.float32, row_tile: int = 8, slot_tile: int = 128
+) -> DeviceELL:
+    """Convert CSR to uniform-width padded ELL (kernel layout)."""
+    n = csr.n
+    nnz_per_row = csr.row_nnz()
+    width = int(max(1, nnz_per_row.max()))
+    width = -(-width // slot_tile) * slot_tile
+    rows_pad = -(-n // row_tile) * row_tile
+
+    val = np.zeros((rows_pad, width), dtype=np.float64)
+    col = np.zeros((rows_pad, width), dtype=np.int32)
+    # Vectorized fill: position of each nnz within its row.
+    pos = np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], nnz_per_row)
+    rix = np.repeat(np.arange(n), nnz_per_row)
+    val[rix, pos] = csr.data
+    col[rix, pos] = csr.indices
+    return DeviceELL(
+        val=jnp.asarray(val, dtype=dtype),
+        col=jnp.asarray(col),
+        n_rows=n,
+        n_cols=n,
+    )

@@ -1,0 +1,152 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (no optax, per the
+offline environment).  Optimizer state is a pytree shaped like the params, so
+it inherits the params' NamedShardings (FSDP'd m/v — ZeRO-style)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "OptState", "init_opt_state", "adamw_update", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any  # first moment (params-shaped, f32)
+    v: Any  # second moment
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_at(cfg: OptConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+class FactoredState(NamedTuple):
+    """Adafactor-style second-moment factorization (Shazeer & Stern 2018).
+
+    For an N-D parameter (..., n, m) the second moment is stored as row/col
+    running means (..., n) and (..., m) instead of the full (..., n, m) —
+    the lever that fits a 480B-parameter optimizer state on one pod
+    (AdamW's full f32 m+v for arctic-480b needs 5.8 TB > a 4 TB v5e pod).
+    """
+
+    step: jax.Array
+    vr: Any  # row second moments (or full v for vectors/scalars)
+    vc: Any  # col second moments (None-shaped zeros for vectors)
+
+
+def init_factored_state(params) -> FactoredState:
+    def rows(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        return (
+            jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if p.ndim >= 2
+            else jnp.zeros((), jnp.float32)
+        )
+
+    return FactoredState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(rows, params),
+        vc=jax.tree.map(cols, params),
+    )
+
+
+def adafactor_update(grads, state: FactoredState, params, cfg: OptConfig) -> Tuple[Any, FactoredState, dict]:
+    """Adafactor (no momentum, fixed beta2) with update clipping."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    b2 = cfg.b2
+    lr = lr_at(cfg, step)
+
+    def upd_slice(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr2 = b2 * vr + (1 - b2) * g2.mean(axis=-1)
+            vc2 = b2 * vc + (1 - b2) * g2.mean(axis=-2)
+            denom = vr2.mean(axis=-1, keepdims=True)
+            vhat = (vr2 / jnp.maximum(denom, 1e-30))[..., None] * vc2[..., None, :]
+            u = g / (jnp.sqrt(vhat) + cfg.eps)
+        else:
+            vr2 = b2 * vr + (1 - b2) * g2
+            vc2 = vc
+            u = g / (jnp.sqrt(vr2) + cfg.eps)
+        # update clipping by RMS (Adafactor's d=1.0 rule)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        new_p = p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), vr2, vc2
+
+    def upd(p, g, vr, vc):
+        # Stacked-layer (or expert) leaves: scan the update over the leading
+        # axis so the f32 temporaries are one slice, not the whole stack —
+        # at 480B params the difference between ~10 GiB and ~0.3 GiB of
+        # optimizer scratch per device.
+        if p.ndim >= 3 and p.shape[0] > 1:
+            def body(_, sl):
+                return None, upd_slice(*sl)
+
+            _, (np_, vr2, vc2) = jax.lax.scan(body, None, (p, g, vr, vc))
+            return np_, vr2, vc2
+        return upd_slice(p, g, vr, vc)
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    vr = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    vc = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, FactoredState(step=step, vr=vr, vc=vc), {"grad_norm": gnorm, "lr": lr}
+
+
+def adamw_update(grads, state: OptState, params, cfg: OptConfig) -> Tuple[Any, OptState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = lr_at(cfg, step)
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, OptState(step=step, m=m, v=v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,51 @@
+"""Spectral monitoring of training — the framework integration of the paper.
+
+The paper's contribution is a distributed mixed-precision Top-K eigensolver.
+In an ML fleet the same solver runs *matrix-free* on the loss Hessian (the
+HVP operator): top-K curvature eigenvalues diagnose sharpness, LR stability
+(lambda_max vs 2/eta), and loss-landscape conditioning.  This module wires
+``core.lanczos`` to the model zoo through ``core.operators.HvpOperator`` —
+every one of the 10 assigned architectures can be probed (DESIGN.md §6).
+
+The mixed-precision policy applies unchanged: Lanczos vectors are stored in
+the policy's storage dtype while the alpha/beta reductions accumulate wide —
+on a params-sized vector (up to 72B entries) that storage halving is exactly
+the paper's memory argument transplanted to the Hessian domain.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.eigensolver import topk_eigs
+from ..core.operators import HvpOperator
+from ..core.precision import FFF, PrecisionPolicy
+from ..models.common import ModelConfig
+from ..models.model import loss_fn
+
+__all__ = ["hessian_topk"]
+
+
+def hessian_topk(
+    params,
+    cfg: ModelConfig,
+    batch: Dict,
+    k: int = 4,
+    policy: PrecisionPolicy = FFF,
+    num_iters: int | None = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """Top-K |eigenvalues| of the Hessian of the batch loss at ``params``."""
+
+    def scalar_loss(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    op = HvpOperator(scalar_loss, params)
+    res = topk_eigs(op, k, policy=policy, reorth="full", num_iters=num_iters or max(2 * k, 8),
+                    seed=seed)
+    return np.asarray(res.eigenvalues, dtype=np.float64)

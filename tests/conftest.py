@@ -1,0 +1,31 @@
+"""Shared pytest config.
+
+x64 is enabled process-wide so the paper's f64 compute policies (FDF/DDD)
+are real f64 on this CPU container.  Device count stays 1 here — multi-device
+tests spawn subprocesses with XLA_FLAGS (see test_distributed.py), and the
+512-device dry-run is exercised via launch/dryrun.py only, per its contract.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+# Lock the platform at 1 device NOW: repro.launch.dryrun sets
+# XLA_FLAGS=--xla_force_host_platform_device_count=512 at import (its
+# documented contract), and tests import its pure helpers.  Device count
+# binds at first backend query, so this call makes later flag changes inert.
+assert len(jax.devices()) >= 1
+
+import numpy as np
+import pytest
+
+from repro.sparse import generate
+
+
+@pytest.fixture(scope="session")
+def web_csr():
+    return generate("web", 2048, 8.0, seed=7, values="unit")
+
+
+@pytest.fixture(scope="session")
+def norm_csr():
+    return generate("web", 2048, 8.0, seed=7, values="normalized")

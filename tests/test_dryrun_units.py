@@ -1,0 +1,101 @@
+"""Unit tests for dry-run machinery that don't need 512 devices:
+HLO collective parsing, CPU-artifact heuristic, cell planning, shape specs."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.launch.dryrun import (
+    accum_steps_for,
+    collective_bytes,
+    cpu_upcast_artifact_bytes,
+    estimate_param_count,
+    plan_cell,
+)
+
+
+def test_collective_parser():
+    hlo = """
+      %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups=...
+      %ar.1 = f32[1024]{0} all-reduce-start(%y), to_apply=%sum
+      %rs = f32[64,32]{1,0} reduce-scatter(%z)
+      %cp = bf16[16]{0} collective-permute(%w)
+      %a2a = s8[4,4]{1,0} all-to-all(%v)
+    """
+    out = collective_bytes(hlo)
+    assert out["counts"] == {"all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+                             "collective-permute": 1, "all-to-all": 1}
+    assert out["bytes_by_op"]["all-gather"] == 8 * 128 * 2
+    assert out["bytes_by_op"]["all-reduce"] == 1024 * 4 * 2  # ring factor 2
+    assert out["bytes_by_op"]["all-to-all"] == 16
+
+
+def test_cpu_artifact_heuristic():
+    big = "999999,1024"  # ~4 GB in f32
+    hlo = f"%a = bf16[{big}] p()\n%b = f32[{big}] convert(%a)\n%c = f32[2,2] p()"
+    n = cpu_upcast_artifact_bytes(hlo)
+    assert n == 0  # ndim < 3 excluded
+    big3 = "64,4096,4096"
+    hlo = f"%a = bf16[{big3}] p()\n%b = f32[{big3}] convert(%a)"
+    assert cpu_upcast_artifact_bytes(hlo) == 64 * 4096 * 4096 * 4
+
+
+def test_param_count_estimates_sane():
+    # cross-check against known public sizes (loose bands)
+    bands = {
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "phi3-medium-14b": (12e9, 16e9),
+        "codeqwen1.5-7b": (6e9, 8.5e9),
+        "qwen1.5-32b": (30e9, 36e9),
+        "mixtral-8x7b": (44e9, 50e9),
+        "arctic-480b": (430e9, 520e9),
+        "qwen2-vl-72b": (68e9, 80e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = estimate_param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_plan_cell_decisions():
+    # arctic training cannot fit AdamW on a pod -> adafactor + bf16
+    cfg, opt, _ = plan_cell(get_config("arctic-480b"), SHAPES["train_4k"], 256)
+    assert opt == "adafactor" and cfg.param_dtype == jnp.bfloat16
+    # small model keeps AdamW f32
+    cfg, opt, _ = plan_cell(get_config("qwen3-0.6b"), SHAPES["train_4k"], 256)
+    assert opt == "adamw" and cfg.param_dtype == jnp.float32
+    # big MHA decode gets an int8 cache
+    cfg, opt, _ = plan_cell(get_config("qwen1.5-32b"), SHAPES["decode_32k"], 256)
+    assert cfg.kv_cache_dtype == "int8" and cfg.param_dtype == jnp.bfloat16
+    # GQA small-cache decode stays bf16
+    cfg, opt, _ = plan_cell(get_config("mixtral-8x7b"), SHAPES["decode_32k"], 256)
+    assert cfg.kv_cache_dtype == "bf16"
+
+
+def test_accum_rules():
+    assert accum_steps_for(get_config("qwen2-vl-72b"), SHAPES["train_4k"]) == 8
+    assert accum_steps_for(get_config("phi3-medium-14b"), SHAPES["train_4k"]) == 4
+    assert accum_steps_for(get_config("qwen3-0.6b"), SHAPES["train_4k"]) == 1
+    assert accum_steps_for(get_config("qwen3-0.6b"), SHAPES["decode_32k"]) == 1
+
+
+def test_applicability_matrix():
+    cells = [(a, s) for a in ARCHS for s in SHAPES if applicable(a, s)]
+    assert len(cells) == 33  # 10 archs x 4 shapes - 7 long_500k skips
+    assert ("mamba2-130m", "long_500k") in cells
+    assert ("qwen3-0.6b", "long_500k") not in cells
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_build(arch, shape):
+    if not applicable(arch, shape):
+        pytest.skip("cell not applicable")
+    cfg = get_config(arch)
+    specs = input_specs(cfg, SHAPES[shape])
+    assert "tokens" in specs
+    if SHAPES[shape].mode == "decode":
+        assert "state" in specs
+        assert specs["tokens"].shape[1] == 1
+    elif SHAPES[shape].mode == "train":
+        assert "labels" in specs

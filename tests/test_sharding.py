@@ -1,0 +1,82 @@
+"""Logical-axis sharding rule engine: resolution, priorities, fallbacks.
+
+Mesh-dependent tests run in a subprocess with 8 forced host devices (same
+pattern as test_distributed.py) to keep the main process at 1 device.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.distributed.sharding import sharding_ctx, logical_spec
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+out = {}
+with sharding_ctx(mesh):
+    # heads divide the model axis -> heads claim it
+    out["heads_divisible"] = str(logical_spec((8, 64, 16, 128), ("batch", "cache_seq", "act_kv_heads", None)))
+    # heads don't divide -> cache_seq falls back to 'model'
+    out["heads_fallback"] = str(logical_spec((8, 64, 10, 128), ("batch", "cache_seq", "act_kv_heads", None)))
+    # expert doesn't divide (mixtral: 8 experts on 4-wide axis is fine; use 3)
+    out["expert_ok"] = str(logical_spec((8, 4096, 512), ("expert", "embed", "moe_mlp")))
+    out["expert_fallback"] = str(logical_spec((3, 4096, 512), ("expert", "embed", "moe_mlp")))
+    # batch=1 (long_500k decode) -> replicated, no crash
+    out["batch_1"] = str(logical_spec((1, 524288), ("batch", None)))
+    # each mesh axis used at most once per tensor
+    out["no_double_use"] = str(logical_spec((8, 512, 512), ("batch", "mlp", "act_mlp")))
+print("JSON:" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def specs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+                          env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("JSON:")][-1]
+    return json.loads(line[5:])
+
+
+def test_heads_take_priority_over_cache_seq(specs):
+    assert specs["heads_divisible"] == "PartitionSpec('data', None, 'model', None)"
+
+
+def test_cache_seq_fallback_when_heads_dont_divide(specs):
+    assert specs["heads_fallback"] == "PartitionSpec('data', 'model', None, None)"
+
+
+def test_expert_parallel_and_fallback(specs):
+    # 8 experts on 4-wide model axis -> expert parallel; embed gets 'data'
+    assert specs["expert_ok"].startswith("PartitionSpec('model'")
+    # 3 experts -> expert replicated, moe_mlp picks up 'model'
+    assert specs["expert_fallback"] == "PartitionSpec(None, 'data', 'model')"
+
+
+def test_batch_one_replicates(specs):
+    assert specs["batch_1"] == "PartitionSpec(None, None)"
+
+
+def test_mesh_axis_used_once(specs):
+    spec = specs["no_double_use"]
+    assert spec.count("'model'") == 1  # mlp and act_mlp cannot both take it
+
+
+def test_no_mesh_is_noop():
+    from repro.distributed.sharding import hint, logical_spec
+    import jax.numpy as jnp
+
+    x = jnp.zeros((4, 8))
+    assert hint(x, "batch", None) is x
+    from jax.sharding import PartitionSpec as P
+
+    assert logical_spec((4, 8), ("batch", None)) == P()
