@@ -28,7 +28,8 @@ def run(kset=(8, 16, 24), matrices=("WB-TA", "WB-GO", "FL", "PA", "WK", "KRON", 
     ensure_x64()
     import scipy.sparse.linalg as spla
 
-    from repro.core import FDF, make_operator, topk_eigs
+    from repro.api import eigsh
+    from repro.core import make_operator
     from repro.sparse import suite_matrix
 
     rows = []
@@ -42,10 +43,10 @@ def run(kset=(8, 16, 24), matrices=("WB-TA", "WB-GO", "FL", "PA", "WK", "KRON", 
             spla.eigsh(sp, k=k, which="LM", tol=1e-5)
             t_arpack = time.perf_counter() - t0
             # ours (FDF, the paper's headline config), m = 2k subspace
-            r = topk_eigs(op, k, policy=FDF, reorth="half", num_iters=2 * k)
-            _ = topk_eigs(op, k, policy=FDF, reorth="half", num_iters=2 * k)  # warm
+            r = eigsh(op, k, policy="FDF", reorth="half", num_iters=2 * k)
+            _ = eigsh(op, k, policy="FDF", reorth="half", num_iters=2 * k)  # warm
             t0 = time.perf_counter()
-            r = topk_eigs(op, k, policy=FDF, reorth="half", num_iters=2 * k)
+            r = eigsh(op, k, policy="FDF", reorth="half", num_iters=2 * k)
             t_ours = time.perf_counter() - t0
             # bandwidth-model projections (memory-bound iteration) with a
             # per-iteration latency floor (kernel launch + 2 sync-point

@@ -24,9 +24,8 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.sparse import suite_matrix
-from repro.core import FDF
+from repro.api import eigsh
 from repro.core.partition import nnz_balanced_splits, partition_matrix
-from repro.core.distributed import topk_eigs_sharded
 
 out = []
 for mid in ("WK", "KRON"):
@@ -36,9 +35,11 @@ for mid in ("WK", "KRON"):
     for g in (1, 2, 4, 8):
         mesh = Mesh(devs[:g].reshape(g), ("data",))
         import time
-        r = topk_eigs_sharded(csr, 8, mesh, policy=FDF, reorth="full", num_iters=16, seed=2)
+        r = eigsh(csr, 8, backend="distributed", mesh=mesh, policy="FDF",
+                  reorth="full", num_iters=16, seed=2)
         t0 = time.perf_counter()
-        r = topk_eigs_sharded(csr, 8, mesh, policy=FDF, reorth="full", num_iters=16, seed=2)
+        r = eigsh(csr, 8, backend="distributed", mesh=mesh, policy="FDF",
+                  reorth="full", num_iters=16, seed=2)
         wall = time.perf_counter() - t0
         vals = np.asarray(r.eigenvalues, dtype=np.float64)
         if base_vals is None:

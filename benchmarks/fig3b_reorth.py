@@ -9,7 +9,8 @@ from .common import emit, ensure_x64, save_artifact
 
 def run(kset=(8, 16, 24), matrices=("WB-TA", "FL", "PA", "WK"), scale=0.25):
     ensure_x64()
-    from repro.core import FDF, make_operator, topk_eigs
+    from repro.api import eigsh
+    from repro.core import make_operator
     from repro.core.metrics import pairwise_orthogonality_deg, reconstruction_error
     from repro.sparse import suite_matrix
 
@@ -20,7 +21,7 @@ def run(kset=(8, 16, 24), matrices=("WB-TA", "FL", "PA", "WK"), scale=0.25):
             for mid in matrices:
                 csr = suite_matrix(mid, values="normalized", scale=scale)
                 op = make_operator(csr, "coo", dtype=jnp.float32)
-                r = topk_eigs(op, k, policy=FDF, reorth=mode, num_iters=2 * k)
+                r = eigsh(op, k, policy="FDF", reorth=mode, num_iters=2 * k)
                 orths.append(pairwise_orthogonality_deg(r.eigenvectors))
                 errs.append(
                     reconstruction_error(op, r.eigenvalues, r.eigenvectors, accum_dtype=jnp.float64)

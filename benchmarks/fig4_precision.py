@@ -18,11 +18,10 @@ from .common import emit, ensure_x64, save_artifact
 
 def run(matrices=("WB-TA", "FL", "WK", "KRON"), k=8, scale=0.125, m_mult=3):
     ensure_x64()
-    from repro.core import BCF, BFF, DDD, FCF, FDF, FFF, HFF, make_operator, topk_eigs
+    from repro.api import eigsh
+    from repro.core import BCF, BFF, DDD, FCF, FDF, FFF, HFF, make_operator
     from repro.core.metrics import reconstruction_error
     from repro.sparse import suite_matrix
-
-    from repro.core.restarted import topk_eigs_restarted
 
     rows = []
     for mid in matrices:
@@ -30,8 +29,8 @@ def run(matrices=("WB-TA", "FL", "WK", "KRON"), k=8, scale=0.125, m_mult=3):
         for pol in (FFF, FDF, DDD, BFF, HFF, FCF, BCF):
             op = make_operator(csr, "coo", dtype=pol.storage)
             t0 = time.perf_counter()
-            r = topk_eigs_restarted(op, k, policy=pol, m=m_mult * k, tol=1e-9,
-                                    max_restarts=12)
+            r = eigsh(op, k, policy=pol, backend="restarted", subspace=m_mult * k,
+                      tol=1e-9, max_restarts=12)
             wall = time.perf_counter() - t0
             err = reconstruction_error(op, r.eigenvalues, r.eigenvectors, accum_dtype=jnp.float64)
             rows.append(dict(matrix=mid, policy=pol.name, k=k, wall_s=wall, l2_err=float(err),
@@ -40,7 +39,8 @@ def run(matrices=("WB-TA", "FL", "WK", "KRON"), k=8, scale=0.125, m_mult=3):
             if pol.name in ("FFF", "FDF", "DDD"):
                 # the paper's configuration: fixed subspace, no restarts
                 t0 = time.perf_counter()
-                rf = topk_eigs(op, k, policy=pol, reorth="full", num_iters=m_mult * k)
+                rf = eigsh(op, k, policy=pol, backend="single", reorth="full",
+                           num_iters=m_mult * k)
                 wallf = time.perf_counter() - t0
                 errf = reconstruction_error(op, rf.eigenvalues, rf.eigenvectors,
                                             accum_dtype=jnp.float64)

@@ -20,7 +20,7 @@ from repro.models.common import split_tree
 from repro.models.model import init_model
 from repro.training import DataConfig, OptConfig, TrainConfig, Trainer, data_stream
 from repro.training.data import synthetic_batch
-from repro.training.spectral import hessian_topk
+from repro.training.spectral import hessian_spectrum, hessian_topk
 from repro.core.precision import FFF, FDF
 
 
@@ -30,8 +30,10 @@ def main():
     dc = DataConfig(batch=4, seq_len=32, seed=3)
     probe = synthetic_batch(cfg, dc, 10**6)
 
-    ev0 = hessian_topk(params, cfg, probe, k=4, policy=FDF, num_iters=12)
-    print(f"init      top-4 |λ(H)|: {np.round(ev0, 4)}")
+    res0 = hessian_spectrum(params, cfg, probe, k=4, policy=FDF, num_iters=12)
+    ev0 = np.asarray(res0.eigenvalues, dtype=np.float64)
+    print(f"init      top-4 |λ(H)|: {np.round(ev0, 4)}   "
+          f"(eigsh backend={res0.backend}, max residual {res0.residuals.max():.1e})")
 
     tc = TrainConfig(opt=OptConfig(peak_lr=3e-3, warmup_steps=5, decay_steps=80),
                      ckpt_every=1000, ckpt_dir="/tmp/repro_hess")

@@ -10,7 +10,8 @@ jax.config.update("jax_enable_x64", True)  # enables the paper's f64 compute (FD
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FDF, make_operator, topk_eigs
+from repro import eigsh
+from repro.core import make_operator
 from repro.core.metrics import eigsh_reference, pairwise_orthogonality_deg, reconstruction_error
 from repro.sparse import generate
 
@@ -20,17 +21,20 @@ def main():
     csr = generate("web", n=1 << 14, avg_deg=8.0, seed=0, values="normalized")
     print(f"matrix: n={csr.n:,} nnz={csr.nnz:,}")
 
-    op = make_operator(csr, impl="coo", dtype=jnp.float32)
-    result = topk_eigs(op, k=8, policy=FDF, reorth="full", num_iters=32)
+    # one call: coercion, backend dispatch, precision policy, convergence report
+    result = eigsh(csr, k=8, policy="FDF", reorth="full", num_iters=32)
+    print(result.summary())
 
     print("top-8 |eigenvalues|:", np.asarray(result.eigenvalues))
+    op = make_operator(csr, impl="coo", dtype=jnp.float32)
     err = reconstruction_error(op, result.eigenvalues, result.eigenvectors, accum_dtype=jnp.float64)
     print(f"mean L2 reconstruction error ||Mx - λx||: {err:.2e}")
     print(f"mean pairwise eigenvector angle: {pairwise_orthogonality_deg(result.eigenvectors):.2f}°")
 
     ref_vals, _ = eigsh_reference(csr, 8)  # ARPACK — the paper's CPU baseline
     print("ARPACK agrees to:", float(np.abs(np.asarray(result.eigenvalues) - ref_vals).max()))
-    print(f"solver wall time: {result.wall_time_s:.2f}s")
+    print(f"solver wall time: {result.wall_time_s:.2f}s "
+          f"(lanczos {result.timings['lanczos_s']:.2f}s, jacobi {result.timings['jacobi_s']:.3f}s)")
 
 
 if __name__ == "__main__":

@@ -12,10 +12,9 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FDF, make_operator, topk_eigs
+from repro import eigsh
 from repro.sparse import csr_from_coo
 
 
@@ -66,9 +65,9 @@ def accuracy(pred, truth, k):
 def main():
     csr, labels = planted_partition()
     print(f"graph: n={csr.n:,} nnz={csr.nnz:,}, 4 planted communities")
-    op = make_operator(csr, "coo", dtype=jnp.float32)
-    res = topk_eigs(op, k=4, policy=FDF, reorth="full", num_iters=24)
-    print("top-4 eigenvalues:", np.asarray(res.eigenvalues))
+    res = eigsh(csr, k=4, policy="FDF", reorth="full", num_iters=24)
+    print("top-4 eigenvalues:", np.asarray(res.eigenvalues),
+          f"(backend={res.backend}, {int(res.converged.sum())}/4 converged)")
     emb = np.asarray(res.eigenvectors, dtype=np.float64)
     emb = emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-12)
     pred = kmeans(emb, 4)

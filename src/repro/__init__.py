@@ -1,2 +1,13 @@
-"""repro: mixed-precision multi-device Top-K sparse eigensolver framework."""
-__version__ = "1.0.0"
+"""repro: mixed-precision multi-device Top-K sparse eigensolver framework.
+
+The one-call entrypoint is :func:`repro.eigsh` (re-exported from
+``repro.api``) — a SciPy-style frontend that coerces any problem form
+(dense, CSR, scipy sparse, operator, callable) and dispatches across the
+single-device, distributed, thick-restarted, and out-of-core engines.
+"""
+
+__version__ = "1.1.0"
+
+from .api import EigenResult, SolverConfig, eigsh
+
+__all__ = ["eigsh", "SolverConfig", "EigenResult", "__version__"]

@@ -1,0 +1,26 @@
+"""Unified solver API — the user-facing frontend of the reproduction.
+
+    from repro.api import eigsh
+    res = eigsh(A, k=8, policy="FDF")          # any input form, any backend
+    evals, evecs = res                          # scipy-style unpack
+
+See :func:`eigsh` for the full contract, ``dispatch`` for the backend-
+selection policy, and :class:`EigenResult` for the result schema.
+"""
+
+from .coerce import CoercedInput, coerce_input
+from .dispatch import BACKENDS, CHUNKED_NNZ_THRESHOLD, select_backend
+from .frontend import SolverConfig, eigsh, resolve_policy
+from .result import EigenResult
+
+__all__ = [
+    "eigsh",
+    "SolverConfig",
+    "EigenResult",
+    "resolve_policy",
+    "select_backend",
+    "coerce_input",
+    "CoercedInput",
+    "BACKENDS",
+    "CHUNKED_NNZ_THRESHOLD",
+]

@@ -1,0 +1,108 @@
+"""Input coercion for the ``eigsh`` frontend.
+
+Accepted problem descriptions, mirroring scipy/CoLA's dispatching frontends:
+
+  * dense arrays (NumPy / JAX), square symmetric;
+  * our host-side :class:`repro.sparse.CSR`;
+  * any scipy sparse matrix/array (converted to CSR once, host-side);
+  * device sparse containers (:class:`DeviceCOO` / :class:`DeviceELL`);
+  * our :class:`LinearOperator` subclasses (incl. :class:`HvpOperator`);
+  * scipy ``LinearOperator``s and bare matvec callables (``n=`` required
+    for callables without a ``.shape``).
+
+Coercion returns *both* an operator (when the input is already actionable)
+and the host CSR (when the input is an explicit sparse matrix) — the CSR is
+what makes the distributed and chunked backends possible, so it is kept
+whenever the input provides it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.operators import (
+    CallableOperator,
+    DenseOperator,
+    LinearOperator,
+    SparseOperator,
+)
+from ..sparse.formats import CSR, DeviceCOO, DeviceELL
+
+__all__ = ["CoercedInput", "coerce_input"]
+
+
+class CoercedInput(NamedTuple):
+    operator: Optional[LinearOperator]  # None when only a host CSR was given
+    csr: Optional[CSR]  # None for matrix-free / device-resident inputs
+    n: int
+
+
+def _csr_from_scipy(a) -> CSR:
+    m = a.tocsr()
+    m.sort_indices()
+    if m.shape[0] != m.shape[1]:
+        raise ValueError(f"eigsh needs a square matrix, got shape {m.shape}")
+    return CSR(
+        indptr=np.asarray(m.indptr, dtype=np.int64),
+        indices=np.asarray(m.indices, dtype=np.int32),
+        data=np.asarray(m.data, dtype=np.float64),
+        shape=(m.shape[0], m.shape[1]),
+    )
+
+
+def coerce_input(a, *, n: Optional[int] = None, storage_dtype=jnp.float32) -> CoercedInput:
+    """Normalize any accepted input into (operator, csr, n). See module doc."""
+    if isinstance(a, LinearOperator):
+        return CoercedInput(operator=a, csr=None, n=int(a.n))
+
+    if isinstance(a, CSR):
+        return CoercedInput(operator=None, csr=a, n=a.n)
+
+    if isinstance(a, (DeviceCOO, DeviceELL)):
+        impl = "coo" if isinstance(a, DeviceCOO) else "ell"
+        return CoercedInput(
+            operator=SparseOperator(a, impl=impl), csr=None, n=int(a.n_rows)
+        )
+
+    # scipy sparse (spmatrix or the newer sparray) — duck-typed so scipy
+    # stays an optional import.
+    if hasattr(a, "tocsr") and hasattr(a, "shape"):
+        csr = _csr_from_scipy(a)
+        return CoercedInput(operator=None, csr=csr, n=csr.n)
+
+    if isinstance(a, (np.ndarray, jax.Array)):
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"eigsh needs a square 2-D array, got shape {a.shape}")
+        return CoercedInput(
+            operator=DenseOperator(jnp.asarray(a, dtype=storage_dtype)),
+            csr=None,
+            n=int(a.shape[0]),
+        )
+
+    # scipy.sparse.linalg.LinearOperator look-alikes: .matvec + .shape.
+    if hasattr(a, "matvec") and hasattr(a, "shape"):
+        dim = int(a.shape[0])
+        if a.shape[0] != a.shape[1]:
+            raise ValueError(f"eigsh needs a square operator, got shape {a.shape}")
+        mv = a.matvec
+        return CoercedInput(
+            operator=CallableOperator(fn=lambda x: jnp.asarray(mv(np.asarray(x))), n=dim),
+            csr=None,
+            n=dim,
+        )
+
+    if callable(a):
+        if n is None:
+            raise ValueError(
+                "eigsh(matvec_callable, ...) needs the problem size: pass n=<dim>"
+            )
+        return CoercedInput(operator=CallableOperator(fn=a, n=int(n)), csr=None, n=int(n))
+
+    raise TypeError(
+        f"eigsh does not understand input of type {type(a).__name__}: expected a "
+        "dense array, CSR, scipy sparse matrix, LinearOperator, or matvec callable"
+    )

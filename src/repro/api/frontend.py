@@ -1,0 +1,315 @@
+"""``eigsh`` — the unified SciPy-style frontend over every solver backend.
+
+One call reproduces the paper's transparency claim: the caller hands over a
+problem in whatever form it exists (dense array, CSR, scipy sparse, linear
+operator, bare matvec) and the frontend coerces it, picks a precision policy,
+dispatches to the right execution engine, and reports the outcome in a single
+:class:`EigenResult` schema:
+
+    from repro.api import eigsh
+    res = eigsh(A, k=8, policy="FDF", tol=1e-7)
+    res.eigenvalues, res.residuals, res.converged, res.backend
+
+``num_iters`` and ``tol`` mean the same thing on every backend:
+
+  * ``num_iters`` — total Lanczos steps the solve may spend (the Krylov
+    subspace size for fixed-m backends; a step budget across restarts for
+    the restarted backend).
+  * ``tol`` — relative Ritz residual target ``|beta_m W[m-1,i]| <=
+    tol * |lambda_i|``.  Every backend reports per-pair ``residuals`` and
+    ``converged`` flags against it; the restarted backend additionally
+    iterates until it holds (or the budget runs out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import warnings
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributed import solve_sharded
+from ..core.eigensolver import solve_fixed
+from ..core.operators import ChunkedOperator, make_operator
+from ..core.precision import POLICIES, PrecisionPolicy
+from ..core.restarted import solve_restarted
+from ..sparse.formats import CSR
+from .coerce import coerce_input
+from .dispatch import select_backend
+from .result import EigenResult
+
+__all__ = ["SolverConfig", "eigsh", "resolve_policy"]
+
+
+def resolve_policy(policy: Union[str, PrecisionPolicy]) -> PrecisionPolicy:
+    """Accept a policy name from ``POLICIES`` ("FDF", "BCF", ...) or an instance."""
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown precision policy {policy!r}; known: {sorted(POLICIES)}"
+            ) from None
+    raise TypeError(f"policy must be a str or PrecisionPolicy, got {type(policy).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """All solver knobs of :func:`eigsh` as one reusable value.
+
+    Useful for sweeping configurations (benchmarks) and for services that
+    pin a tuned configuration: ``eigsh(A, k, config=cfg)``.
+    """
+
+    policy: Union[str, PrecisionPolicy] = "FDF"
+    backend: str = "auto"
+    # None = the paper's per-engine default: "half" on the single-device /
+    # chunked paths (Alg. 1's parity scheme), "full" on the distributed path
+    # (their multi-GPU configuration).
+    reorth: Optional[str] = None
+    tol: Optional[float] = None
+    num_iters: Optional[int] = None
+    subspace: Optional[int] = None  # restarted backend: m (defaults to max(2k, k+8))
+    max_restarts: int = 30
+    seed: int = 0
+    impl: str = "coo"  # SpMV engine for explicit sparse inputs
+    chunk_nnz: int = 1 << 20  # chunked backend: device-resident nnz per chunk
+    jacobi: str = "host"  # phase-2 placement, "host" (paper) or "jax"
+    axis: str = "data"  # mesh axis name for the distributed backend
+
+
+def _resolve_reorth(reorth: Optional[str], backend: str) -> str:
+    """None -> the paper's configuration for the engine that will run."""
+    if reorth is not None:
+        return reorth
+    return "full" if backend == "distributed" else "half"
+
+
+def _default_tol(policy: PrecisionPolicy) -> float:
+    """Reporting tolerance when the caller didn't give one: sqrt(eps) of the
+    compute dtype — the classical 'converged for this arithmetic' line."""
+    try:
+        return float(math.sqrt(float(jnp.finfo(policy.compute).eps)))
+    except (TypeError, ValueError):
+        return 1e-6
+
+
+def eigsh(
+    A,
+    k: int = 6,
+    *,
+    config: Optional[SolverConfig] = None,
+    policy: Union[str, PrecisionPolicy] = "FDF",
+    backend: str = "auto",
+    reorth: Optional[str] = None,
+    tol: Optional[float] = None,
+    num_iters: Optional[int] = None,
+    v0=None,
+    seed: int = 0,
+    n: Optional[int] = None,
+    subspace: Optional[int] = None,
+    max_restarts: int = 30,
+    impl: str = "coo",
+    chunk_nnz: int = 1 << 20,
+    jacobi: str = "host",
+    mesh=None,
+    axis: str = "data",
+) -> EigenResult:
+    """Top-K eigenpairs (largest |lambda|) of a symmetric operator.
+
+    Args:
+      A: dense array, ``repro.sparse.CSR``, scipy sparse matrix,
+        ``LinearOperator`` (ours or scipy's), or a bare matvec callable
+        (then pass ``n=``).
+      k: number of eigenpairs.
+      config: a :class:`SolverConfig` carrying every solver knob below; when
+        given, the individual keyword arguments are ignored (``v0`` / ``n`` /
+        ``mesh`` are per-call and always honored).
+      policy: precision policy name (see ``repro.core.POLICIES``) or instance.
+      backend: "auto" (dispatch on input size / device count / memory
+        pressure — see ``repro.api.dispatch``) or one of "single",
+        "distributed", "restarted", "chunked".
+      reorth: re-orthogonalization mode ("none" | "half" | "full" | "full2");
+        None picks the paper's configuration for the engine that runs
+        ("half" single-device/chunked, "full" distributed).  The restarted
+        backend always re-orthogonalizes fully (anything else is ignored
+        with a warning).
+      tol: relative Ritz residual target; selects the restarted backend under
+        "auto" and defines the ``converged`` flags everywhere.  When the
+        restarted backend runs without an explicit tol, it iterates toward
+        the same default the flags are judged against
+        (``sqrt(eps(compute))``).
+      num_iters: total Lanczos step budget (defaults to ``k`` on fixed-m
+        backends, ``subspace + restarts * (subspace - k)`` on restarted).
+      v0: optional start vector (length n).
+      n: problem size, required only for bare callables.
+      subspace: restarted backend's subspace size m.
+      max_restarts: restart cap (ignored when ``num_iters`` already caps it).
+      impl: SpMV engine for explicit sparse matrices
+        ("coo" | "ell" | "ell_kernel" | "bsr_kernel").
+      chunk_nnz: chunk size (nnz) for the out-of-core backend.
+      jacobi: phase-2 Jacobi placement ("host" = the paper's, or "jax").
+      mesh: optional ``jax.sharding.Mesh``; passing one under
+        ``backend="auto"`` is an explicit request for the distributed
+        backend (the default mesh is all visible devices on one axis named
+        ``axis``).
+
+    Returns:
+      An :class:`EigenResult` with an identical schema on every backend.
+    """
+    cfg = config or SolverConfig(
+        policy=policy,
+        backend=backend,
+        reorth=reorth,
+        tol=tol,
+        num_iters=num_iters,
+        subspace=subspace,
+        max_restarts=max_restarts,
+        seed=seed,
+        impl=impl,
+        chunk_nnz=chunk_nnz,
+        jacobi=jacobi,
+        axis=axis,
+    )
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+
+    pol = resolve_policy(cfg.policy).effective()
+    op, csr, dim = coerce_input(A, n=n, storage_dtype=pol.storage)
+    if k > dim:
+        raise ValueError(f"k={k} exceeds the operator dimension n={dim}")
+
+    device_count = mesh.size if mesh is not None else len(jax.devices())
+    if cfg.backend == "auto" and mesh is not None:
+        # An explicit mesh is an explicit request for the distributed path —
+        # it must not be silently dropped by the auto policy (e.g. when tol
+        # would otherwise pick the restarted engine).
+        if csr is None:
+            raise ValueError(
+                "mesh= requests the distributed backend, which needs a host-side "
+                "sparse matrix (repro CSR or scipy sparse) so it can be "
+                "re-partitioned; device containers (DeviceCOO/DeviceELL) and "
+                "matrix-free operators can't be — pass the host CSR instead"
+            )
+        chosen = "distributed"
+    else:
+        chosen = select_backend(
+            cfg.backend,
+            has_matrix=csr is not None,
+            nnz=csr.nnz if csr is not None else 0,
+            tol=cfg.tol,
+            device_count=device_count,
+        )
+
+    # The effective tolerance: what the restarted engine iterates toward and
+    # what every backend's converged flags are judged against.
+    tol_eff = cfg.tol if cfg.tol is not None else _default_tol(pol)
+
+    if chosen == "distributed":
+        out = _run_distributed(csr, k, cfg, pol, mesh, v0)
+        restarts, partition = 0, out.partition
+    elif chosen == "restarted":
+        out = _run_restarted(op, csr, k, cfg, pol, v0, tol_eff)
+        restarts, partition = out.restarts, None
+    else:  # "single" | "chunked"
+        if chosen == "chunked":
+            solver_op = ChunkedOperator(csr, chunk_nnz=cfg.chunk_nnz, dtype=pol.storage)
+        else:
+            solver_op = op if op is not None else make_operator(csr, cfg.impl, dtype=pol.storage)
+        out = solve_fixed(
+            solver_op,
+            k,
+            policy=pol,
+            reorth=_resolve_reorth(cfg.reorth, chosen),
+            num_iters=cfg.num_iters,
+            v1=v0,
+            seed=cfg.seed,
+            jacobi=cfg.jacobi,
+        )
+        restarts, partition = 0, None
+
+    # Judge convergence on the engines' full-precision eigenvalues so the
+    # flags agree with the restarted engine's own stopping decision (the
+    # output-dtype cast could flip a boundary pair).
+    lam = np.abs(out.eigenvalues_f64)
+    converged = out.residuals <= tol_eff * np.maximum(lam, 1e-300)
+
+    return EigenResult(
+        eigenvalues=out.eigenvalues,
+        eigenvectors=out.eigenvectors,
+        residuals=out.residuals,
+        converged=converged,
+        iterations=out.iterations,
+        restarts=restarts,
+        k=k,
+        n=dim,
+        backend=chosen,
+        policy=pol.name,
+        tol=tol_eff,
+        num_devices=device_count if chosen == "distributed" else 1,
+        partition=partition,
+        timings=out.timings,
+        tridiag=out.tridiag,
+    )
+
+
+def _run_restarted(op, csr: Optional[CSR], k: int, cfg: SolverConfig, pol, v0, tol: float):
+    if cfg.reorth not in (None, "full"):
+        warnings.warn(
+            f"reorth={cfg.reorth!r} is ignored by the restarted backend: thick "
+            "restart requires full re-orthogonalization to keep the locked "
+            "Ritz block orthogonal",
+            stacklevel=3,
+        )
+    if op is None:
+        op = make_operator(csr, cfg.impl, dtype=pol.storage)
+    m = cfg.subspace or max(2 * k, k + 8)
+    max_restarts = cfg.max_restarts
+    if cfg.num_iters is not None:
+        # num_iters is a total step budget: the first cycle costs m steps,
+        # each further cycle refills m - k rows — take only the cycles that
+        # fit entirely (floor), never overshoot the stated budget.
+        if cfg.num_iters < k + 2:
+            raise ValueError(
+                f"num_iters={cfg.num_iters} cannot fund a restarted solve for "
+                f"k={k} (the subspace needs at least k + 2 = {k + 2} steps); "
+                "raise num_iters or use backend='single'"
+            )
+        m = min(m, cfg.num_iters)
+        extra_cycles = max(0, math.floor((cfg.num_iters - m) / max(m - k, 1)))
+        max_restarts = min(max_restarts, extra_cycles + 1)
+    return solve_restarted(
+        op,
+        k,
+        policy=pol,
+        m=m,
+        max_restarts=max_restarts,
+        tol=tol,
+        seed=cfg.seed,
+        v1=v0,
+    )
+
+
+def _run_distributed(csr: Optional[CSR], k: int, cfg: SolverConfig, pol, mesh, v0):
+    from jax.sharding import Mesh
+
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs.reshape(len(devs)), (cfg.axis,))
+    return solve_sharded(
+        csr,
+        k,
+        mesh,
+        policy=pol,
+        reorth=_resolve_reorth(cfg.reorth, "distributed"),
+        num_iters=cfg.num_iters,
+        seed=cfg.seed,
+        axis=cfg.axis,
+        v1=v0,
+    )

@@ -1,0 +1,95 @@
+"""The unified solver result type returned by every ``eigsh`` backend.
+
+The paper's transparency argument (one solver, any scale) only survives into
+an API if every execution path — single-device, shard_map-distributed,
+thick-restarted, chunked out-of-core — reports its outcome in the same
+schema.  ``EigenResult`` is that schema: eigenpairs plus the convergence,
+precision, placement, and timing facts a caller needs to trust (or retry)
+a solve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core.lanczos import LanczosResult
+
+__all__ = ["EigenResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EigenResult:
+    """Result of :func:`repro.api.eigsh`, identical across all backends.
+
+    Supports scipy-style unpacking: ``evals, evecs = eigsh(A, k)``.
+
+    Attributes:
+      eigenvalues: (k,) |lambda|-descending, in the policy's output dtype.
+      eigenvectors: (n, k) column eigenvectors, same dtype.
+      residuals: (k,) float64 Ritz residual bounds ``|beta_m * W[m-1, i]|``
+        (an upper estimate of ``||A x_i - lambda_i x_i||``; free — no extra
+        SpMV).
+      converged: (k,) bool — ``residuals <= tol * |lambda_i|`` under the
+        effective tolerance.
+      iterations: Lanczos steps actually run (summed across restarts).
+      restarts: thick restarts performed (0 for fixed-subspace backends).
+      k / n: problem dimensions.
+      backend: backend actually executed ("single" | "distributed" |
+        "restarted" | "chunked").
+      policy: name of the precision policy actually used (after any
+        x64-unavailable downgrade, e.g. ``"FDF(x32!)"``).
+      tol: the effective relative tolerance convergence was judged against.
+      num_devices: devices the solve ran on.
+      partition: row-partition layout for the distributed backend
+        (num_shards / n_pad / splits / axis), else None.
+      timings: seconds per phase — always contains ``"total_s"``; fixed-m
+        backends add ``"lanczos_s"`` / ``"jacobi_s"`` / ``"project_s"``.
+      tridiag: raw Lanczos output (alpha / beta / basis), for diagnostics.
+    """
+
+    eigenvalues: jax.Array
+    eigenvectors: jax.Array
+    residuals: np.ndarray
+    converged: np.ndarray
+    iterations: int
+    restarts: int
+    k: int
+    n: int
+    backend: str
+    policy: str
+    tol: float
+    num_devices: int
+    partition: Optional[dict]
+    timings: Dict[str, float]
+    tridiag: Optional[LanczosResult] = None
+
+    def __iter__(self):
+        # scipy.sparse.linalg.eigsh compatibility: ``w, v = eigsh(A, k)``.
+        yield self.eigenvalues
+        yield self.eigenvectors
+
+    @property
+    def all_converged(self) -> bool:
+        return bool(np.all(self.converged))
+
+    @property
+    def wall_time_s(self) -> float:
+        return float(self.timings.get("total_s", 0.0))
+
+    def summary(self) -> str:
+        """One-paragraph human-readable report."""
+        lam = np.asarray(self.eigenvalues, dtype=np.float64)
+        lines = [
+            f"eigsh: k={self.k} n={self.n:,} backend={self.backend} "
+            f"policy={self.policy} devices={self.num_devices}",
+            f"  iterations={self.iterations} restarts={self.restarts} "
+            f"tol={self.tol:.1e} converged={int(self.converged.sum())}/{self.k} "
+            f"wall={self.wall_time_s:.3f}s",
+            f"  |lambda| range [{np.abs(lam).min():.4e}, {np.abs(lam).max():.4e}] "
+            f"max residual {self.residuals.max():.2e}",
+        ]
+        return "\n".join(lines)

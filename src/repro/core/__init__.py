@@ -1,9 +1,14 @@
-"""Core: the paper's Top-K sparse eigensolver (Lanczos + Jacobi)."""
+"""Core: the paper's Top-K sparse eigensolver engines (Lanczos + Jacobi).
 
-from .eigensolver import EigResult, topk_eigs
+User-facing entrypoint: ``repro.api.eigsh``.  The ``topk_eigs*`` names here
+are deprecated shims kept for compatibility.
+"""
+
+from .eigensolver import EigResult, FixedSolveOutput, solve_fixed, topk_eigs
 from .jacobi import jacobi_eigh, jacobi_eigh_host, tridiag_to_dense
 from .lanczos import LanczosResult, lanczos_tridiag
 from .operators import (
+    CallableOperator,
     ChunkedOperator,
     DenseOperator,
     HvpOperator,
@@ -13,4 +18,4 @@ from .operators import (
 )
 from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
 from .precision import BCF, BFF, DDD, FCF, FDF, FFF, HFF, POLICIES, PrecisionPolicy
-from .restarted import topk_eigs_restarted
+from .restarted import RestartedSolveOutput, solve_restarted, topk_eigs_restarted

@@ -23,8 +23,9 @@ communication analysis.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
+import time
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +39,17 @@ from .lanczos import LanczosResult, Ops, _lanczos_loop
 from .partition import PartitionedMatrix, partition_matrix
 from .precision import PrecisionPolicy, FDF, compensated_sum
 
-__all__ = ["topk_eigs_sharded", "sharded_lanczos"]
+__all__ = ["ShardedSolveOutput", "solve_sharded", "topk_eigs_sharded", "sharded_lanczos"]
+
+# jax.shard_map is top-level (with check_vma) only on newer jax; fall back to
+# the jax.experimental spelling (check_rep) so the engine runs on both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
 
 
 def _make_sharded_ops(row, col, val, n_pad: int, policy: PrecisionPolicy, axis: str) -> Ops:
@@ -78,17 +89,101 @@ def sharded_lanczos(
         row, col, val, v1 = (a[0] for a in (row, col, val, v1))  # drop shard axis
         ops = _make_sharded_ops(row, col, val, pm.n_pad, policy, axis)
         res = _lanczos_loop(v1, ops, num_iters, policy, reorth)
-        return res.alpha, res.beta, res.basis[None]  # re-add shard axis to basis
+        return res.alpha, res.beta, res.beta_last, res.basis[None]  # re-add shard axis
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(), P(axis, None, None)),
-        check_vma=False,
+        out_specs=(P(), P(), P(), P(axis, None, None)),
+        **_SHARD_MAP_KW,
     )
-    alpha, beta, basis_sh = jax.jit(fn)(pm.row, pm.col, pm.val, v1_padded)
-    return LanczosResult(alpha=alpha, beta=beta, basis=basis_sh)
+    alpha, beta, beta_last, basis_sh = jax.jit(fn)(pm.row, pm.col, pm.val, v1_padded)
+    return LanczosResult(alpha=alpha, beta=beta, basis=basis_sh, beta_last=beta_last)
+
+
+class ShardedSolveOutput(NamedTuple):
+    """Raw engine output consumed by the ``eigsh`` frontend."""
+
+    eigenvalues: jax.Array  # (k,) output dtype
+    eigenvectors: jax.Array  # (n, k) output dtype
+    residuals: np.ndarray  # (k,) float64 — Ritz residual bounds
+    eigenvalues_f64: np.ndarray  # (k,) float64 — pre-output-cast, for tol checks
+    tridiag: LanczosResult
+    iterations: int
+    partition: dict  # num_shards / n_pad / splits / axis
+    timings: dict
+
+
+def solve_sharded(
+    csr: CSR,
+    k: int,
+    mesh: Mesh,
+    policy: PrecisionPolicy = FDF,
+    reorth: str = "full",
+    num_iters: Optional[int] = None,
+    seed: int = 0,
+    axis: str = "data",
+    v1: Optional[jax.Array] = None,
+) -> ShardedSolveOutput:
+    """End-to-end distributed Top-K eigensolver on a 1-axis mesh."""
+    policy = policy.effective()
+    g = mesh.shape[axis]
+    m = num_iters or k
+    pm = partition_matrix(csr, g, dtype=policy.storage)
+
+    if v1 is None:
+        rng = np.random.default_rng(seed)
+        v1 = jnp.asarray(rng.standard_normal(csr.n), dtype=policy.compute)
+    v1p = pm.pad_vector(jnp.asarray(v1, dtype=policy.compute))
+
+    t0 = time.perf_counter()
+    lres = sharded_lanczos(pm, v1p, m, policy, mesh, reorth=reorth, axis=axis)
+    lres = jax.tree.map(lambda a: a.block_until_ready(), lres)  # timings = execution, not dispatch
+    t_lanczos = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    alpha = np.asarray(lres.alpha, dtype=np.float64)
+    beta = np.asarray(lres.beta, dtype=np.float64)
+    evals, w = jacobi_eigh_host(np.asarray(tridiag_to_dense(jnp.asarray(alpha), jnp.asarray(beta))))
+    t_jacobi = time.perf_counter() - t1
+
+    # X = V^T W on the padded layout, then strip padding.
+    t2 = time.perf_counter()
+    basis = lres.basis  # (G, m, n_pad) shard-stacked
+    w_k = jnp.asarray(w[:, :k], dtype=policy.compute)
+    x_pad = jnp.einsum("gmn,mk->gnk", basis.astype(policy.compute), w_k)
+    parts = []
+    splits = pm.splits()
+    for s in range(g):
+        lo, hi = int(splits[s]), int(splits[s + 1])
+        parts.append(x_pad[s, : hi - lo, :])
+    x = jnp.concatenate(parts, axis=0).astype(policy.output)
+    x.block_until_ready()
+    t_project = time.perf_counter() - t2
+
+    beta_m = float(np.asarray(lres.beta_last, dtype=np.float64))
+    residuals = np.abs(beta_m * np.asarray(w, dtype=np.float64)[m - 1, :k])
+    total = time.perf_counter() - t0
+    return ShardedSolveOutput(
+        eigenvalues=jnp.asarray(evals[:k], dtype=policy.output),
+        eigenvectors=x,
+        residuals=residuals,
+        eigenvalues_f64=np.asarray(evals[:k], dtype=np.float64),
+        tridiag=lres,
+        iterations=m,
+        partition={
+            "num_shards": int(g),
+            "n_pad": int(pm.n_pad),
+            "splits": [int(s) for s in splits],
+            "axis": axis,
+        },
+        timings={
+            "lanczos_s": t_lanczos,
+            "jacobi_s": t_jacobi,
+            "project_s": t_project,
+            "total_s": total,
+        },
+    )
 
 
 def topk_eigs_sharded(
@@ -101,38 +196,29 @@ def topk_eigs_sharded(
     seed: int = 0,
     axis: str = "data",
 ) -> EigResult:
-    """End-to-end distributed Top-K eigensolver on a 1-axis mesh."""
-    import time
+    """Deprecated: use :func:`repro.api.eigsh` with ``backend="distributed"``."""
+    warnings.warn(
+        "topk_eigs_sharded is deprecated; use "
+        "repro.api.eigsh(csr, k, backend='distributed', mesh=mesh, ...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from ..api import eigsh
 
-    policy = policy.effective()
-    g = mesh.shape[axis]
-    m = num_iters or k
-    pm = partition_matrix(csr, g, dtype=policy.storage)
-
-    rng = np.random.default_rng(seed)
-    v1 = jnp.asarray(rng.standard_normal(csr.n), dtype=policy.compute)
-    v1p = pm.pad_vector(v1)
-
-    t0 = time.perf_counter()
-    lres = sharded_lanczos(pm, v1p, m, policy, mesh, reorth=reorth, axis=axis)
-    alpha = np.asarray(lres.alpha, dtype=np.float64)
-    beta = np.asarray(lres.beta, dtype=np.float64)
-    evals, w = jacobi_eigh_host(np.asarray(tridiag_to_dense(jnp.asarray(alpha), jnp.asarray(beta))))
-
-    # X = V^T W on the padded layout, then strip padding.
-    basis = lres.basis  # (G, m, n_pad) shard-stacked
-    w_k = jnp.asarray(w[:, :k], dtype=policy.compute)
-    x_pad = jnp.einsum("gmn,mk->gnk", basis.astype(policy.compute), w_k)
-    parts = []
-    splits = pm.splits()
-    for s in range(g):
-        lo, hi = int(splits[s]), int(splits[s + 1])
-        parts.append(x_pad[s, : hi - lo, :])
-    x = jnp.concatenate(parts, axis=0).astype(policy.output)
-    wall = time.perf_counter() - t0
+    res = eigsh(
+        csr,
+        k,
+        policy=policy,
+        backend="distributed",
+        reorth=reorth,
+        num_iters=num_iters,
+        seed=seed,
+        mesh=mesh,
+        axis=axis,
+    )
     return EigResult(
-        eigenvalues=jnp.asarray(evals[:k], dtype=policy.output),
-        eigenvectors=x,
-        tridiag=lres,
-        wall_time_s=wall,
+        eigenvalues=res.eigenvalues,
+        eigenvectors=res.eigenvectors,
+        tridiag=res.tridiag,
+        wall_time_s=res.timings["total_s"],
     )

@@ -1,14 +1,18 @@
-"""Top-level Top-K sparse eigensolver (the paper's Fig. 1 pipeline).
+"""Fixed-subspace Top-K sparse eigensolver engine (the paper's Fig. 1 pipeline).
 
-``topk_eigs`` = Lanczos (device, phase 1) + Jacobi (host CPU by default,
+``solve_fixed`` = Lanczos (device, phase 1) + Jacobi (host CPU by default,
 exactly the paper's placement; pure-JAX optional) + basis combination
 ``X = V^T W`` + |lambda|-descending selection.
+
+This module is an *engine*: the user-facing entrypoint is ``repro.api.eigsh``
+(the unified frontend), which dispatches here for the single-device and
+chunked out-of-core paths.  ``topk_eigs`` remains as a deprecated shim.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -20,17 +24,31 @@ from .lanczos import LanczosResult, lanczos_tridiag
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
-__all__ = ["EigResult", "topk_eigs"]
+__all__ = ["EigResult", "FixedSolveOutput", "solve_fixed", "topk_eigs"]
 
 
 class EigResult(NamedTuple):
+    """Legacy result type kept for the deprecated ``topk_eigs`` shims."""
+
     eigenvalues: jax.Array  # (k,) output dtype, |lambda| descending
     eigenvectors: jax.Array  # (n, k) output dtype, column-wise
     tridiag: LanczosResult  # raw Lanczos output (alpha, beta, basis)
     wall_time_s: float
 
 
-def topk_eigs(
+class FixedSolveOutput(NamedTuple):
+    """Raw engine output consumed by the ``eigsh`` frontend."""
+
+    eigenvalues: jax.Array  # (k,) output dtype, |lambda| descending
+    eigenvectors: jax.Array  # (n, k) output dtype
+    residuals: np.ndarray  # (k,) float64 — Ritz residual bounds |beta_m W[m-1,i]|
+    eigenvalues_f64: np.ndarray  # (k,) float64 — pre-output-cast, for tol checks
+    tridiag: LanczosResult
+    iterations: int  # Lanczos steps actually run (= m)
+    timings: dict  # seconds: lanczos / jacobi / project / total
+
+
+def solve_fixed(
     op: LinearOperator,
     k: int,
     policy: PrecisionPolicy = FDF,
@@ -39,7 +57,7 @@ def topk_eigs(
     v1: Optional[jax.Array] = None,
     seed: int = 0,
     jacobi: str = "host",
-) -> EigResult:
+) -> FixedSolveOutput:
     """Compute the K eigenpairs of largest |lambda| of a symmetric operator.
 
     ``num_iters`` defaults to ``k`` — the paper's configuration (their K is
@@ -58,28 +76,85 @@ def topk_eigs(
     t0 = time.perf_counter()
     lres = lanczos_tridiag(op.bound_matvec(policy), v1, m, policy, reorth=reorth)
     lres = jax.tree.map(lambda x: x.block_until_ready(), lres)
+    t_lanczos = time.perf_counter() - t0
 
     # Phase 2 — Jacobi on the K x K tridiagonal matrix.
+    t1 = time.perf_counter()
     if jacobi == "host":
         t_host = tridiag_to_dense(
             np.asarray(lres.alpha, dtype=np.float64),
             np.asarray(lres.beta, dtype=np.float64),
         )
-        evals, w = jacobi_eigh_host(np.asarray(t_host))
-        evals = jnp.asarray(evals, dtype=policy.compute)
+        evals_f64, w = jacobi_eigh_host(np.asarray(t_host))
+        evals = jnp.asarray(evals_f64, dtype=policy.compute)
         w = jnp.asarray(w, dtype=policy.compute)
     else:
         t_dev = tridiag_to_dense(lres.alpha, lres.beta)
         evals, w = jacobi_eigh(t_dev)
+        evals_f64 = np.asarray(evals, dtype=np.float64)
+    t_jacobi = time.perf_counter() - t1
 
     # Top-K selection (already |lambda|-sorted) and back-projection X = V^T W.
+    t2 = time.perf_counter()
     evals_k = evals[:k]
     w_k = w[:, :k]
     x = (lres.basis.astype(policy.compute).T @ w_k).astype(policy.output)
-    wall = time.perf_counter() - t0
-    return EigResult(
+    x.block_until_ready()
+    t_project = time.perf_counter() - t2
+
+    # Classical Ritz residual bound: ||A x_i - theta_i x_i|| = |beta_m W[m-1,i]|.
+    beta_m = float(np.asarray(lres.beta_last, dtype=np.float64)) if lres.beta_last is not None else 0.0
+    residuals = np.abs(beta_m * np.asarray(w, dtype=np.float64)[m - 1, :k])
+
+    total = time.perf_counter() - t0
+    return FixedSolveOutput(
         eigenvalues=evals_k.astype(policy.output),
         eigenvectors=x,
+        residuals=residuals,
+        eigenvalues_f64=np.asarray(evals_f64[:k], dtype=np.float64),
         tridiag=lres,
-        wall_time_s=wall,
+        iterations=m,
+        timings={
+            "lanczos_s": t_lanczos,
+            "jacobi_s": t_jacobi,
+            "project_s": t_project,
+            "total_s": total,
+        },
+    )
+
+
+def topk_eigs(
+    op: LinearOperator,
+    k: int,
+    policy: PrecisionPolicy = FDF,
+    reorth: str = "half",
+    num_iters: Optional[int] = None,
+    v1: Optional[jax.Array] = None,
+    seed: int = 0,
+    jacobi: str = "host",
+) -> EigResult:
+    """Deprecated: use :func:`repro.api.eigsh` (the unified frontend)."""
+    warnings.warn(
+        "topk_eigs is deprecated; use repro.api.eigsh(A, k, backend='single', ...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from ..api import eigsh
+
+    res = eigsh(
+        op,
+        k,
+        policy=policy,
+        backend="single",
+        reorth=reorth,
+        num_iters=num_iters,
+        v0=v1,
+        seed=seed,
+        jacobi=jacobi,
+    )
+    return EigResult(
+        eigenvalues=res.eigenvalues,
+        eigenvectors=res.eigenvectors,
+        tridiag=res.tridiag,
+        wall_time_s=res.timings["total_s"],
     )

@@ -39,6 +39,9 @@ class LanczosResult(NamedTuple):
     alpha: jax.Array  # (m,) compute dtype — diagonal of T
     beta: jax.Array  # (m-1,) compute dtype — off-diagonal of T
     basis: jax.Array  # (m, n) storage dtype — Lanczos vectors (V), row-major
+    # norm of the residual after the final step: the scale of the classical
+    # Ritz residual bound |beta_m * W[m-1, i]| used for convergence reporting
+    beta_last: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,7 +136,9 @@ def _lanczos_loop(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth:
 
     init = (basis0, alphas0, betas0, jnp.zeros((n,), cdt), jnp.zeros((n,), cdt), jnp.zeros((), cdt))
     basis, alphas, betas, _, _, _ = jax.lax.fori_loop(0, m, body, init)
-    return LanczosResult(alpha=alphas, beta=betas[: m - 1], basis=basis)
+    return LanczosResult(
+        alpha=alphas, beta=betas[: m - 1], basis=basis, beta_last=betas[m - 1]
+    )
 
 
 def lanczos_tridiag(

@@ -16,7 +16,8 @@ solver runs on:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from functools import partial
+from typing import Callable
 
 import jax
 import jax.flatten_util
@@ -31,6 +32,7 @@ __all__ = [
     "DenseOperator",
     "SparseOperator",
     "ChunkedOperator",
+    "CallableOperator",
     "HvpOperator",
     "make_operator",
 ]
@@ -121,20 +123,67 @@ class ChunkedOperator(LinearOperator):
             )
         self.num_chunks = len(self._chunks)
 
-    def matvec(self, x, accum_dtype=None):
-        acc = accum_dtype or self._dtype
-
-        @jax.jit
-        def partial_spmv(row, col, val, x, y):
+        # One jitted partial-SpMV per instance, keyed on the (static) accum
+        # dtype: defining it inside matvec would retrace on every call.
+        @partial(jax.jit, static_argnames=("acc",))
+        def _partial_spmv(row, col, val, x, y, *, acc):
             prod = val.astype(acc) * jnp.take(x, col).astype(acc)
             return y + jax.ops.segment_sum(prod, row, num_segments=self.n)
 
+        self._partial_spmv = _partial_spmv
+
+    def matvec(self, x, accum_dtype=None):
+        acc = jnp.dtype(accum_dtype or self._dtype)
         y = jnp.zeros((self.n,), acc)
         for row, col, val in self._chunks:  # host loop = the UM page stream
-            y = partial_spmv(
-                jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype=self._dtype), x, y
+            y = self._partial_spmv(
+                jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype=self._dtype), x, y,
+                acc=acc,
             )
         return y
+
+
+@dataclasses.dataclass
+class CallableOperator(LinearOperator):
+    """Wrap a bare symmetric matvec callable ``fn(x) -> A @ x``.
+
+    This is how the ``eigsh`` frontend accepts matrix-free problems (scipy's
+    ``LinearOperator`` or any function): the callable is treated as a black
+    box, so the mixed-precision policy governs only the surrounding Lanczos
+    arithmetic, not the matvec interior.
+
+    The Lanczos loop runs under ``jit``, so a callable that computes in
+    NumPy (e.g. a scipy ``LinearOperator``) cannot be traced.  We probe
+    traceability once with ``jax.eval_shape``: traceable callables are
+    inlined into the compiled loop; host callables are bridged with
+    ``jax.pure_callback`` (one device<->host round-trip per matvec — the
+    same placement cost scipy's ARPACK wrapper pays).
+    """
+
+    fn: Callable[[jax.Array], jax.Array]
+    n: int
+
+    def __post_init__(self):
+        try:
+            out = jax.eval_shape(self.fn, jax.ShapeDtypeStruct((self.n,), jnp.float32))
+        except Exception:
+            self._traceable = False
+        else:
+            if out.shape != (self.n,):
+                raise ValueError(
+                    f"matvec callable returned shape {out.shape}, expected ({self.n},)"
+                )
+            self._traceable = True
+
+    def matvec(self, x, accum_dtype=None):
+        if self._traceable:
+            y = jnp.asarray(self.fn(x))
+        else:
+            spec = jax.ShapeDtypeStruct((self.n,), x.dtype)
+            y = jax.pure_callback(
+                lambda xv: np.asarray(self.fn(xv), dtype=xv.dtype), spec, x
+            )
+        return y.astype(accum_dtype) if accum_dtype is not None else y
 
 
 class HvpOperator(LinearOperator):

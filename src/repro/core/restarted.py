@@ -19,9 +19,17 @@ of our mixed-precision substrate:
 Host-orchestrated restarts around jitted vector kernels: the right split for
 a latency-insensitive convergence loop (identical placement to the paper's
 host-side Jacobi phase).
+
+This module is an *engine*: the user-facing entrypoint is ``repro.api.eigsh``
+with ``backend="restarted"`` (or any ``tol=``, which auto-selects it).
+``topk_eigs_restarted`` remains as a deprecated shim.
 """
 
 from __future__ import annotations
+
+import time
+import warnings
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -34,10 +42,23 @@ from .lanczos import LanczosResult
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
-__all__ = ["topk_eigs_restarted"]
+__all__ = ["RestartedSolveOutput", "solve_restarted", "topk_eigs_restarted"]
 
 
-def topk_eigs_restarted(
+class RestartedSolveOutput(NamedTuple):
+    """Raw engine output consumed by the ``eigsh`` frontend."""
+
+    eigenvalues: jax.Array  # (k,) output dtype
+    eigenvectors: jax.Array  # (n, k) output dtype
+    residuals: np.ndarray  # (k,) float64 — final Ritz residual bounds
+    eigenvalues_f64: np.ndarray  # (k,) float64 — pre-output-cast, for tol checks
+    tridiag: LanczosResult
+    iterations: int  # total Lanczos steps across all restarts
+    restarts: int  # restarts actually performed
+    timings: dict
+
+
+def solve_restarted(
     op: LinearOperator,
     k: int,
     policy: PrecisionPolicy = FDF,
@@ -45,16 +66,17 @@ def topk_eigs_restarted(
     max_restarts: int = 30,
     tol: float = 1e-8,
     seed: int = 0,
-) -> EigResult:
+    v1: Optional[jax.Array] = None,
+) -> RestartedSolveOutput:
     """Top-k eigenpairs by |lambda| with restarts until the Ritz residual
     bound satisfies ``tol`` (relative) for every pair."""
-    import time
-
     policy = policy.effective()
     cdt, sdt = policy.compute, policy.storage
     n = op.n
     m = m or max(2 * k, k + 8)
     assert m > k + 1, "subspace must exceed k by at least 2"
+    if max_restarts < 1:
+        raise ValueError(f"max_restarts must be >= 1, got {max_restarts}")
     mv = op.bound_matvec(policy)
 
     @jax.jit
@@ -67,8 +89,11 @@ def topk_eigs_restarted(
         return u - coeffs @ basis.astype(cdt)
 
     t0 = time.perf_counter()
-    rng = np.random.default_rng(seed)
-    v = jnp.asarray(rng.standard_normal(n), dtype=cdt)
+    if v1 is None:
+        rng = np.random.default_rng(seed)
+        v = jnp.asarray(rng.standard_normal(n), dtype=cdt)
+    else:
+        v = jnp.asarray(v1, dtype=cdt)
     v = v / jnp.sqrt(_dot(v, v))
 
     basis = jnp.zeros((m, n), sdt)
@@ -76,8 +101,11 @@ def topk_eigs_restarted(
     nkeep = 0  # locked Ritz vectors at the head of the basis
     s_border = np.zeros(0)  # arrow column entries for the kept block
     evals = w = None
+    steps = 0
+    restarts = 0
+    resid = np.zeros(k)
 
-    for restart in range(max_restarts):
+    for cycle in range(max_restarts):
         # --- fill rows nkeep..m-1 with (re-orthogonalized) Lanczos steps ---
         beta_prev = 0.0
         v_prev = jnp.zeros((n,), cdt)
@@ -101,6 +129,7 @@ def topk_eigs_restarted(
                 t_hat[i + 1, i] = beta
             beta_prev, v_prev = beta, v
             v = u / max(beta, 1e-300)
+            steps += 1
         beta_m = beta_prev
 
         # --- Ritz pairs of the projected matrix ---
@@ -108,8 +137,14 @@ def topk_eigs_restarted(
         resid = np.abs(beta_m * w[m - 1, :k])
         if np.all(resid <= tol * np.maximum(np.abs(evals[:k]), 1e-300)):
             break
+        if cycle == max_restarts - 1:
+            # Budget exhausted: stop here WITHOUT compressing, so the final
+            # projection below uses `w` in the coordinates of the current
+            # `basis` (compressing would leave them in different systems).
+            break
 
         # --- thick restart: compress to top-k Ritz vectors + residual dir ---
+        restarts += 1
         wk = jnp.asarray(w[:, :k], dtype=cdt)
         ritz = (basis.astype(cdt).T @ wk).T  # (k, n)
         new_basis = jnp.zeros((m, n), sdt)
@@ -125,8 +160,55 @@ def topk_eigs_restarted(
     wk = jnp.asarray(w[:, :k], dtype=cdt)
     x = (basis.astype(cdt).T @ wk).astype(policy.output)
     lres = LanczosResult(
-        alpha=jnp.asarray(np.diag(t_hat), cdt), beta=jnp.asarray(np.diag(t_hat, 1), cdt),
+        alpha=jnp.asarray(np.diag(t_hat), cdt),
+        beta=jnp.asarray(np.diag(t_hat, 1), cdt),
         basis=basis,
+        beta_last=jnp.asarray(beta_m, cdt),
     )
-    return EigResult(eigenvalues=evals_k, eigenvectors=x, tridiag=lres,
-                     wall_time_s=time.perf_counter() - t0)
+    total = time.perf_counter() - t0
+    return RestartedSolveOutput(
+        eigenvalues=evals_k,
+        eigenvectors=x,
+        residuals=np.asarray(resid, dtype=np.float64),
+        eigenvalues_f64=np.asarray(evals[:k], dtype=np.float64),
+        tridiag=lres,
+        iterations=steps,
+        restarts=restarts,
+        timings={"total_s": total},
+    )
+
+
+def topk_eigs_restarted(
+    op: LinearOperator,
+    k: int,
+    policy: PrecisionPolicy = FDF,
+    m: int | None = None,
+    max_restarts: int = 30,
+    tol: float = 1e-8,
+    seed: int = 0,
+) -> EigResult:
+    """Deprecated: use :func:`repro.api.eigsh` with ``tol=``/``backend="restarted"``."""
+    warnings.warn(
+        "topk_eigs_restarted is deprecated; use "
+        "repro.api.eigsh(A, k, backend='restarted', tol=..., subspace=m, ...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from ..api import eigsh
+
+    res = eigsh(
+        op,
+        k,
+        policy=policy,
+        backend="restarted",
+        tol=tol,
+        subspace=m,
+        max_restarts=max_restarts,
+        seed=seed,
+    )
+    return EigResult(
+        eigenvalues=res.eigenvalues,
+        eigenvectors=res.eigenvectors,
+        tridiag=res.tridiag,
+        wall_time_s=res.timings["total_s"],
+    )

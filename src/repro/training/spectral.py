@@ -4,8 +4,9 @@ The paper's contribution is a distributed mixed-precision Top-K eigensolver.
 In an ML fleet the same solver runs *matrix-free* on the loss Hessian (the
 HVP operator): top-K curvature eigenvalues diagnose sharpness, LR stability
 (lambda_max vs 2/eta), and loss-landscape conditioning.  This module wires
-``core.lanczos`` to the model zoo through ``core.operators.HvpOperator`` —
-every one of the 10 assigned architectures can be probed (DESIGN.md §6).
+the unified ``repro.api.eigsh`` frontend to the model zoo through
+``core.operators.HvpOperator`` — every one of the 10 assigned architectures
+can be probed (DESIGN.md §6).
 
 The mixed-precision policy applies unchanged: Lanczos vectors are stored in
 the policy's storage dtype while the alpha/beta reductions accumulate wide —
@@ -15,20 +16,45 @@ the paper's memory argument transplanted to the Hessian domain.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core.eigensolver import topk_eigs
+from ..api import EigenResult, eigsh
 from ..core.operators import HvpOperator
 from ..core.precision import FFF, PrecisionPolicy
 from ..models.common import ModelConfig
 from ..models.model import loss_fn
 
-__all__ = ["hessian_topk"]
+__all__ = ["hessian_topk", "hessian_spectrum"]
+
+
+def hessian_spectrum(
+    params,
+    cfg: ModelConfig,
+    batch: Dict,
+    k: int = 4,
+    policy: PrecisionPolicy = FFF,
+    num_iters: int | None = None,
+    seed: int = 0,
+    tol: float | None = None,
+) -> EigenResult:
+    """Full :class:`EigenResult` for the Hessian of the batch loss at ``params``."""
+
+    def scalar_loss(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    op = HvpOperator(scalar_loss, params)
+    return eigsh(
+        op,
+        k,
+        policy=policy,
+        backend="single",
+        reorth="full",
+        num_iters=num_iters or max(2 * k, 8),
+        tol=tol,
+        seed=seed,
+    )
 
 
 def hessian_topk(
@@ -41,11 +67,5 @@ def hessian_topk(
     seed: int = 0,
 ) -> np.ndarray:
     """Top-K |eigenvalues| of the Hessian of the batch loss at ``params``."""
-
-    def scalar_loss(p):
-        return loss_fn(p, cfg, batch)[0]
-
-    op = HvpOperator(scalar_loss, params)
-    res = topk_eigs(op, k, policy=policy, reorth="full", num_iters=num_iters or max(2 * k, 8),
-                    seed=seed)
+    res = hessian_spectrum(params, cfg, batch, k=k, policy=policy, num_iters=num_iters, seed=seed)
     return np.asarray(res.eigenvalues, dtype=np.float64)

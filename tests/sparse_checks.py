@@ -1,0 +1,43 @@
+"""Shared property-check bodies for the sparse/partition tests.
+
+Used twice: ``test_sparse.py`` drives them from a fixed seeded-random case
+list (no external deps), and ``test_sparse_properties.py`` drives them from
+``hypothesis`` strategies when that optional dependency is installed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import nnz_balanced_splits, partition_matrix
+from repro.sparse import generate
+
+
+def check_partition_spmv_equivalence(n: int, deg: float, g: int) -> None:
+    """Property: the padded partitioned SpMV == the unpartitioned SpMV."""
+    csr = generate("urand", n, deg, seed=n, values="uniform")
+    n = csr.n
+    pm = partition_matrix(csr, g, dtype=jnp.float64, nnz_align=8)
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n))
+    xp = pm.pad_vector(x)  # (G, n_pad)
+    x_full = xp.reshape(-1)  # padded-global layout
+    ys = []
+    for s in range(g):
+        prod = pm.val[s] * jnp.take(x_full, pm.col[s])
+        ys.append(jnp.asarray(np.asarray(jnp.zeros(pm.n_pad)).copy()).at[pm.row[s]].add(prod))
+    y = pm.unpad_vector(jnp.stack(ys))
+    want = csr.to_scipy() @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-9, atol=1e-9)
+
+
+def check_nnz_balance(g: int) -> None:
+    """Property: every shard's nnz is within one max-row-degree of n_nnz/G."""
+    csr = generate("web", 4096, 6.0, seed=11, values="unit")
+    splits = nnz_balanced_splits(csr.indptr, g)
+    per = np.diff(csr.indptr[splits])
+    assert per.sum() == csr.nnz
+    max_row = int(csr.row_nnz().max())
+    assert per.max() - per.min() <= 2 * max_row + csr.nnz // g  # sane balance
+    # tighter: each shard within target +- max row degree
+    target = csr.nnz / g
+    assert np.all(np.abs(per - target) <= max_row + 1)

@@ -1,0 +1,29 @@
+"""Hypothesis-driven property tests (optional ``[test]`` extra).
+
+Skipped wholesale when ``hypothesis`` is absent; ``test_sparse.py`` runs the
+same check bodies from a fixed seeded-random case list in that case.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from sparse_checks import check_nnz_balance, check_partition_spmv_equivalence  # noqa: E402
+
+
+@given(
+    n=st.integers(16, 300),
+    deg=st.floats(1.0, 8.0),
+    g=st.integers(1, 7),
+)
+@settings(max_examples=20, deadline=None)
+def test_partition_spmv_equivalence(n, deg, g):
+    check_partition_spmv_equivalence(n, deg, g)
+
+
+@given(g=st.integers(1, 9))
+@settings(max_examples=9, deadline=None)
+def test_nnz_balance_property(g):
+    check_nnz_balance(g)
