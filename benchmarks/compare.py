@@ -1,0 +1,85 @@
+"""Gate a bench-smoke run against the committed baseline.
+
+Usage:
+    python -m benchmarks.compare artifacts/BENCH_pr.json \
+        benchmarks/baseline_smoke.json --max-slowdown 2.0
+
+The gate applies to metrics large enough to time stably (>= ``--gate-floor-us``
+in either run, default 50ms): measured run-to-run dispersion of the smoke
+suite is <= ~1.4x for these, so a >2x raw ratio is a real regression, not
+scheduler noise.  Smaller metrics are printed for trend-watching but never
+fail the gate (their dispersion on shared runners exceeds the threshold).
+The machine-speed calibration probe is reported for context; it is not used
+to normalize (per-op noise on small containers made normalized ratios less
+stable than raw ones).  New/removed metrics are reported but never fail —
+refresh the baseline when the benched surface legitimately changes:
+``python -m benchmarks.run --smoke --out benchmarks/baseline_smoke.json``.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(pr: dict, base: dict, max_slowdown: float, gate_floor_us: float) -> int:
+    pr_m, base_m = pr.get("metrics", {}), base.get("metrics", {})
+    shared = sorted(set(pr_m) & set(base_m))
+    regressions = []
+    gated = 0
+    print(
+        f"calibration (informational): pr={float(pr.get('calibration_us') or 0):.1f}us "
+        f"baseline={float(base.get('calibration_us') or 0):.1f}us"
+    )
+    print(f"{'metric':45s} {'base_us':>10s} {'pr_us':>10s} {'ratio':>7s}")
+    for name in shared:
+        b, p = float(base_m[name]), float(pr_m[name])
+        if b <= 0 or p <= 0:
+            continue  # unmeasured placeholders (e.g. table1's 0.0 rows)
+        ratio = p / b
+        in_gate = max(b, p) >= gate_floor_us
+        gated += in_gate
+        flag = ""
+        if in_gate and ratio > max_slowdown:
+            regressions.append((name, ratio))
+            flag = "  << REGRESSION"
+        elif not in_gate:
+            flag = "  (info only)"
+        print(f"{name:45s} {b:10.1f} {p:10.1f} {ratio:6.2f}x{flag}")
+    for name in sorted(set(pr_m) - set(base_m)):
+        print(f"{name:45s} {'-':>10s} {float(pr_m[name]):10.1f}   (new)")
+    for name in sorted(set(base_m) - set(pr_m)):
+        print(f"{name:45s} {float(base_m[name]):10.1f} {'-':>10s}   (removed)")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} gated metric(s) slowed by >{max_slowdown}x:")
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x")
+        return 1
+    print(f"\nOK: no gated metric slowed by >{max_slowdown}x ({gated} gated)")
+    return 0
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("pr_json")
+    parser.add_argument("baseline_json")
+    parser.add_argument("--max-slowdown", type=float, default=2.0)
+    parser.add_argument(
+        "--gate-floor-us",
+        type=float,
+        default=50_000.0,
+        help="gate only metrics at least this large in one run (smaller ones "
+        "are too noisy on shared runners and are reported info-only)",
+    )
+    args = parser.parse_args(argv)
+    sys.exit(
+        compare(load(args.pr_json), load(args.baseline_json), args.max_slowdown, args.gate_floor_us)
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""SpmvEngine layer: per-format SpMV wall time + the auto-selector's choice.
+
+One section per matrix family (banded road lattice, power-law web, block
+diagonal): times the COO / ELL / BSR execution paths through the engine on
+the same matrix and reports which format ``format="auto"`` picks.  Interpret
+mode on CPU — absolute numbers are CPU wall time of the kernel interpreter,
+useful as a regression trajectory, not as TPU projections (those live in
+kernels_bench.py / roofline.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, ensure_x64, save_artifact, timeit
+
+
+def _block_diag_csr(n_blocks: int, bs: int = 8, seed: int = 0):
+    import scipy.sparse as sp
+
+    from repro.sparse.formats import CSR
+
+    rng = np.random.default_rng(seed)
+    a = sp.block_diag([rng.random((bs, bs)) + 0.1 for _ in range(n_blocks)], format="csr")
+    a = ((a + a.T) / 2).tocsr()
+    a.sort_indices()
+    return CSR(
+        indptr=a.indptr.astype(np.int64),
+        indices=a.indices.astype(np.int32),
+        data=a.data.astype(np.float64),
+        shape=a.shape,
+    )
+
+
+def run(scale: float = 1.0):
+    ensure_x64()
+    from repro.core.operators import make_operator
+    from repro.kernels.engine import make_engine, matrix_stats
+    from repro.sparse import generate
+
+    n_road = max(256, int(2048 * scale))
+    n_web = max(256, int(2048 * scale))
+    cases = [
+        ("road", generate("road", n_road, 3.0, seed=1, values="uniform")),
+        ("web", generate("web", n_web, 6.0, seed=1, values="uniform")),
+        ("blockdiag", _block_diag_csr(max(16, int(128 * scale)))),
+    ]
+    rows = []
+    for name, csr in cases:
+        stats = matrix_stats(csr)
+        auto_fmt = make_engine(csr, "auto").format
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(csr.n), jnp.float32)
+        case = dict(
+            matrix=name,
+            n=csr.n,
+            nnz=csr.nnz,
+            ell_overhead=stats.ell_overhead,
+            block_fill=stats.block_fill,
+            auto_format=auto_fmt,
+        )
+        for fmt in ("coo", "ell", "bsr"):
+            engine = make_engine(csr, fmt, accum_dtype=jnp.float32)
+            op = make_operator(csr, dtype=jnp.float32, engine=engine)
+            t = timeit(lambda: op.matvec(x).block_until_ready())
+            case[f"t_{fmt}_us"] = t * 1e6
+            chosen = " (auto pick)" if fmt == auto_fmt else ""
+            emit(f"engine/{name}/{fmt}", t * 1e6,
+                 f"n={csr.n} nnz={csr.nnz} auto={auto_fmt}{chosen}")
+        rows.append(case)
+    save_artifact("engine_bench.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

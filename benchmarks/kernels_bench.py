@@ -8,13 +8,13 @@ import numpy as np
 from .common import emit, ensure_x64, save_artifact, timeit
 
 
-def run():
+def run(scale: float = 0.25, vec_pow: int = 20):
     ensure_x64()
     from repro.kernels import ref
     from repro.sparse import suite_matrix, to_device_ell
 
     rows = []
-    csr = suite_matrix("WK", values="unit", scale=0.25)
+    csr = suite_matrix("WK", values="unit", scale=scale)
     ell = to_device_ell(csr, dtype=jnp.float32)
     n = ell.val.shape[0]
     x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
@@ -31,8 +31,8 @@ def run():
     emit("kernels/spmv_ell", t * 1e6,
          f"AI={flops/bytes_:.3f} v5e_mem_bound={bytes_/819e9*1e6:.1f}us vmem={vmem_kib:.0f}KiB")
 
-    a = jnp.asarray(np.random.default_rng(1).standard_normal(1 << 20), jnp.float32)
-    b = jnp.asarray(np.random.default_rng(2).standard_normal(1 << 20), jnp.float32)
+    a = jnp.asarray(np.random.default_rng(1).standard_normal(1 << vec_pow), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(2).standard_normal(1 << vec_pow), jnp.float32)
     t = timeit(lambda: ref.mixed_dot_ref(a, b, accum_dtype=jnp.float32).block_until_ready())
     bytes_ = 2 * a.size * 4
     rows.append(dict(kernel="mixed_dot", flops=2 * a.size, bytes=bytes_,
@@ -41,7 +41,11 @@ def run():
     emit("kernels/mixed_dot", t * 1e6, f"AI=0.25 v5e_mem_bound={bytes_/819e9*1e6:.1f}us")
 
     w, v, vp = a, b, jnp.roll(a, 1)
-    t = timeit(lambda: ref.lanczos_update_ref(w, v, vp, jnp.float32(0.5), jnp.float32(0.2))[0].block_until_ready())
+    t = timeit(
+        lambda: ref.lanczos_update_ref(w, v, vp, jnp.float32(0.5), jnp.float32(0.2))[
+            0
+        ].block_until_ready()
+    )
     bytes_fused = 4 * a.size * 4  # 3 reads + 1 write, norm fused (vs 6x unfused)
     rows.append(dict(kernel="lanczos_update", flops=5 * a.size, bytes=bytes_fused,
                      ref_wall_s=t, v5e_bound_us=bytes_fused / 819e9 * 1e6,

@@ -88,7 +88,9 @@ def analytic_cell(arch: str, shape_name: str, num_devices: int, accum: int = 1) 
     if cfg.family == "hybrid_rglru":
         n_attn = cfg.n_layers // 3
         n_rec = cfg.n_layers - n_attn
-        layer_flops = 2 * (n_rec * (lm["rec"] + 3 * d * cfg.d_ff) + n_attn * (lm["attn"] + 3 * d * cfg.d_ff))
+        layer_flops = 2 * (
+            n_rec * (lm["rec"] + 3 * d * cfg.d_ff) + n_attn * (lm["attn"] + 3 * d * cfg.d_ff)
+        )
         attn_layers = n_attn
     elif cfg.family == "ssm":
         layer_flops = 2 * cfg.n_layers * lm["ssd"]
@@ -144,7 +146,9 @@ def analytic_cell(arch: str, shape_name: str, num_devices: int, accum: int = 1) 
     else:  # decode: weights + cache
         cache_len = min(shape.seq_len, cfg.window or shape.seq_len)
         if cfg.family == "ssm":
-            cache_bytes = shape.global_batch * cfg.n_layers * cfg.n_ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+            cache_bytes = (
+                shape.global_batch * cfg.n_layers * cfg.n_ssm_heads * cfg.ssm_headdim
+            ) * (cfg.ssm_state * 4)
         elif cfg.family == "hybrid_rglru":
             n_attn = cfg.n_layers // 3
             cache_bytes = shape.global_batch * (
@@ -164,7 +168,9 @@ def analytic_cell(arch: str, shape_name: str, num_devices: int, accum: int = 1) 
         # FSDP: AG params fwd + AG params bwd-recompute + RS grads
         fsdp = 3 * params_dev
         # TP/SP per layer: AG + RS of the (tokens_dev x d) boundary, fwd+bwd+remat
-        tpsp = 3 * 2 * cfg.n_layers * tokens_dev * d * act_bf16 / model_axis * (model_axis - 1) / model_axis
+        tpsp = (
+            3 * 2 * cfg.n_layers * tokens_dev * d * act_bf16 / model_axis
+        ) * (model_axis - 1) / model_axis
         ep = 0.0
         if cfg.n_experts:
             ep = 3 * 2 * cfg.n_layers * tokens_dev * d * act_bf16 * cfg.moe_top_k / model_axis

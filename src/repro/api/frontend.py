@@ -34,9 +34,10 @@ import numpy as np
 
 from ..core.distributed import solve_sharded
 from ..core.eigensolver import solve_fixed
-from ..core.operators import ChunkedOperator, make_operator
+from ..core.operators import ChunkedOperator, DenseOperator, make_operator
 from ..core.precision import POLICIES, PrecisionPolicy
 from ..core.restarted import solve_restarted
+from ..kernels.engine import FORMATS, make_engine
 from ..sparse.formats import CSR
 from .coerce import coerce_input
 from .dispatch import select_backend
@@ -78,7 +79,11 @@ class SolverConfig:
     subspace: Optional[int] = None  # restarted backend: m (defaults to max(2k, k+8))
     max_restarts: int = 30
     seed: int = 0
-    impl: str = "coo"  # SpMV engine for explicit sparse inputs
+    # SpMV layout for explicit sparse inputs: "auto" selects COO / ELL /
+    # blocked-ELL(BSR) from matrix statistics (repro.kernels.engine); an
+    # explicit value forces it.  The decision lands in EigenResult.spmv_format.
+    format: str = "auto"
+    impl: str = "coo"  # deprecated fixed SpMV path; use ``format`` instead
     chunk_nnz: int = 1 << 20  # chunked backend: device-resident nnz per chunk
     jacobi: str = "host"  # phase-2 placement, "host" (paper) or "jax"
     axis: str = "data"  # mesh axis name for the distributed backend
@@ -115,6 +120,7 @@ def eigsh(
     n: Optional[int] = None,
     subspace: Optional[int] = None,
     max_restarts: int = 30,
+    format: str = "auto",
     impl: str = "coo",
     chunk_nnz: int = 1 << 20,
     jacobi: str = "host",
@@ -151,8 +157,19 @@ def eigsh(
       n: problem size, required only for bare callables.
       subspace: restarted backend's subspace size m.
       max_restarts: restart cap (ignored when ``num_iters`` already caps it).
-      impl: SpMV engine for explicit sparse matrices
-        ("coo" | "ell" | "ell_kernel" | "bsr_kernel").
+      format: SpMV layout for explicit sparse matrices — "auto" (default)
+        picks COO vs ELL vs blocked-ELL/BSR from cheap row-length and
+        block-density statistics (``repro.kernels.engine``); "coo" / "ell" /
+        "bsr" force one.  The kernel formats execute through the Pallas SpMV
+        kernels (interpret mode off-TPU); the executed choice is reported as
+        ``EigenResult.spmv_format``.  The distributed backend auto-selects
+        kernel formats only (pass format="coo" to opt back into
+        ``segment_sum``); the chunked backend supports "coo" / "ell".
+      impl: deprecated fixed SpMV path ("ell" | "ell_kernel" | "bsr_kernel");
+        a non-default value is honored while ``format`` is untouched.  Note
+        ``impl="coo"`` is the default and therefore indistinguishable from
+        "unset": to pin the COO segment-sum reference path, pass
+        ``format="coo"`` instead.
       chunk_nnz: chunk size (nnz) for the out-of-core backend.
       jacobi: phase-2 Jacobi placement ("host" = the paper's, or "jax").
       mesh: optional ``jax.sharding.Mesh``; passing one under
@@ -172,6 +189,7 @@ def eigsh(
         subspace=subspace,
         max_restarts=max_restarts,
         seed=seed,
+        format=format,
         impl=impl,
         chunk_nnz=chunk_nnz,
         jacobi=jacobi,
@@ -179,6 +197,10 @@ def eigsh(
     )
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
+    if cfg.format not in ("auto",) + FORMATS:
+        raise ValueError(
+            f"unknown SpMV format {cfg.format!r}; expected 'auto' or one of {FORMATS}"
+        )
 
     pol = resolve_policy(cfg.policy).effective()
     op, csr, dim = coerce_input(A, n=n, storage_dtype=pol.storage)
@@ -214,14 +236,13 @@ def eigsh(
     if chosen == "distributed":
         out = _run_distributed(csr, k, cfg, pol, mesh, v0)
         restarts, partition = 0, out.partition
+        spmv_format = out.spmv_format
     elif chosen == "restarted":
-        out = _run_restarted(op, csr, k, cfg, pol, v0, tol_eff)
+        solver_op, spmv_format = _build_operator(op, csr, cfg, pol, chosen)
+        out = _run_restarted(solver_op, k, cfg, pol, v0, tol_eff)
         restarts, partition = out.restarts, None
     else:  # "single" | "chunked"
-        if chosen == "chunked":
-            solver_op = ChunkedOperator(csr, chunk_nnz=cfg.chunk_nnz, dtype=pol.storage)
-        else:
-            solver_op = op if op is not None else make_operator(csr, cfg.impl, dtype=pol.storage)
+        solver_op, spmv_format = _build_operator(op, csr, cfg, pol, chosen)
         out = solve_fixed(
             solver_op,
             k,
@@ -255,11 +276,73 @@ def eigsh(
         num_devices=device_count if chosen == "distributed" else 1,
         partition=partition,
         timings=out.timings,
+        spmv_format=spmv_format,
         tridiag=out.tridiag,
     )
 
 
-def _run_restarted(op, csr: Optional[CSR], k: int, cfg: SolverConfig, pol, v0, tol: float):
+def _op_format(op) -> str:
+    """SpMV layout label of a caller-provided operator."""
+    fmt = getattr(op, "spmv_format", None)
+    if fmt is not None:
+        return fmt
+    if isinstance(op, DenseOperator):
+        return "dense"
+    return "matfree"
+
+
+def _build_operator(op, csr: Optional[CSR], cfg: SolverConfig, pol, backend: str):
+    """Resolve (solver operator, spmv_format) for the non-distributed engines.
+
+    Explicit sparse inputs go through the :class:`SpmvEngine` layer — the
+    format knob (or its auto-selector) decides COO vs ELL vs BSR and the
+    kernel tiles; caller-provided operators are used as-is.
+    """
+    if backend == "chunked":
+        engine = make_engine(
+            csr,
+            cfg.format,
+            accum_dtype=pol.compute,
+            allowed=("coo", "ell"),  # per-chunk BSR staging is not implemented
+            storage_dtype=pol.storage,
+        )
+        if engine.format == "ell" and cfg.format == "auto":
+            # The chunked backend exists because memory is tight; ELL staging
+            # pads rows to the 128-aligned max width, which on narrow
+            # matrices can dwarf the COO triplets it replaces.  Under "auto",
+            # keep COO when the padded footprint clearly loses (explicit
+            # format="ell" still forces the kernel staging).
+            max_row = max(s.max_row_nnz for s in engine.stats)
+            width_pad = -(-max(1, max_row) // 128) * 128
+            n, nnz = csr.n, csr.nnz
+            ell_bytes = n * width_pad * (jnp.dtype(pol.storage).itemsize + 4)
+            coo_bytes = nnz * 12
+            if ell_bytes > 4 * coo_bytes:
+                engine = make_engine(
+                    csr,
+                    "coo",
+                    stats=engine.stats,
+                    accum_dtype=pol.compute,
+                    storage_dtype=pol.storage,
+                )
+        chunked = ChunkedOperator(
+            csr, chunk_nnz=cfg.chunk_nnz, dtype=pol.storage, engine=engine
+        )
+        return chunked, engine.format
+    if op is not None:
+        return op, _op_format(op)
+    if cfg.format == "auto" and cfg.impl != "coo":
+        # Back-compat: an explicitly requested legacy impl wins while the
+        # format knob is untouched.
+        legacy = make_operator(csr, cfg.impl, dtype=pol.storage)
+        return legacy, legacy.spmv_format
+    engine = make_engine(
+        csr, cfg.format, accum_dtype=pol.compute, storage_dtype=pol.storage
+    )
+    return make_operator(csr, dtype=pol.storage, engine=engine), engine.format
+
+
+def _run_restarted(op, k: int, cfg: SolverConfig, pol, v0, tol: float):
     if cfg.reorth not in (None, "full"):
         warnings.warn(
             f"reorth={cfg.reorth!r} is ignored by the restarted backend: thick "
@@ -267,8 +350,6 @@ def _run_restarted(op, csr: Optional[CSR], k: int, cfg: SolverConfig, pol, v0, t
             "Ritz block orthogonal",
             stacklevel=3,
         )
-    if op is None:
-        op = make_operator(csr, cfg.impl, dtype=pol.storage)
     m = cfg.subspace or max(2 * k, k + 8)
     max_restarts = cfg.max_restarts
     if cfg.num_iters is not None:
@@ -312,4 +393,5 @@ def _run_distributed(csr: Optional[CSR], k: int, cfg: SolverConfig, pol, mesh, v
         seed=cfg.seed,
         axis=cfg.axis,
         v1=v0,
+        spmv_format=cfg.format,
     )

@@ -45,9 +45,15 @@ class EigenResult:
       tol: the effective relative tolerance convergence was judged against.
       num_devices: devices the solve ran on.
       partition: row-partition layout for the distributed backend
-        (num_shards / n_pad / splits / axis), else None.
+        (num_shards / n_pad / splits / axis, plus a ``"spmv"`` dict with the
+        executed kernel format, tiles, and padding stats), else None.
       timings: seconds per phase — always contains ``"total_s"``; fixed-m
         backends add ``"lanczos_s"`` / ``"jacobi_s"`` / ``"project_s"``.
+      spmv_format: SpMV layout the hot loop executed — "coo" | "ell" | "bsr"
+        for explicit sparse inputs ("dense" / "matfree" otherwise).  The
+        distributed backend reports one entry per shard (a tuple; shard_map
+        runs one program, so entries agree).  This is the outcome of the
+        ``format="auto"`` selection (see ``repro.kernels.engine``).
       tridiag: raw Lanczos output (alpha / beta / basis), for diagnostics.
     """
 
@@ -65,6 +71,7 @@ class EigenResult:
     num_devices: int
     partition: Optional[dict]
     timings: Dict[str, float]
+    spmv_format: Optional[object] = None  # str, or tuple of str per shard
     tridiag: Optional[LanczosResult] = None
 
     def __iter__(self):
@@ -83,9 +90,13 @@ class EigenResult:
     def summary(self) -> str:
         """One-paragraph human-readable report."""
         lam = np.asarray(self.eigenvalues, dtype=np.float64)
+        fmt = self.spmv_format
+        if isinstance(fmt, (tuple, list)):
+            fmt = fmt[0] if fmt else None
         lines = [
             f"eigsh: k={self.k} n={self.n:,} backend={self.backend} "
-            f"policy={self.policy} devices={self.num_devices}",
+            f"policy={self.policy} devices={self.num_devices}"
+            + (f" spmv={fmt}" if fmt else ""),
             f"  iterations={self.iterations} restarts={self.restarts} "
             f"tol={self.tol:.1e} converged={int(self.converged.sum())}/{self.k} "
             f"wall={self.wall_time_s:.3f}s",

@@ -58,7 +58,9 @@ def _tok(shape, dtype=jnp.int32):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def input_specs(cfg: ModelConfig, shape: ShapeSpec, batch_override: Optional[int] = None) -> Dict[str, Any]:
+def input_specs(
+    cfg: ModelConfig, shape: ShapeSpec, batch_override: Optional[int] = None
+) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
 
     For 'train'/'prefill': a batch dict.  For 'decode': a batch dict with a

@@ -19,6 +19,13 @@ The entire Lanczos loop executes inside ONE ``shard_map`` region, so the
 only cross-device traffic per iteration is: 1 all-gather (n floats) +
 2 scalar psums + (optionally) 1 k-length psum — matching the paper's
 communication analysis.
+
+Per-shard SpMV runs through the :class:`~repro.kernels.engine.SpmvEngine`
+layer: each shard's COO slice is converted host-side to ELL or blocked-ELL
+(``sparse.formats.shard_to_*``) and the Lanczos hot loop calls the Pallas
+kernels (interpret mode off-TPU).  ``spmv_format="auto"`` picks ELL vs BSR
+from per-shard statistics; COO ``segment_sum`` remains only as an explicit
+opt-out (``spmv_format="coo"``).
 """
 
 from __future__ import annotations
@@ -32,14 +39,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..sparse.formats import CSR
+from ..kernels.engine import SpmvEngine, make_engine, shard_stats
+from ..sparse.formats import CSR, shard_to_blocked_ell, shard_to_ell
 from .eigensolver import EigResult
 from .jacobi import jacobi_eigh_host, tridiag_to_dense
 from .lanczos import LanczosResult, Ops, _lanczos_loop
-from .partition import PartitionedMatrix, partition_matrix
+from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
 from .precision import PrecisionPolicy, FDF, compensated_sum
 
-__all__ = ["ShardedSolveOutput", "solve_sharded", "topk_eigs_sharded", "sharded_lanczos"]
+__all__ = [
+    "DISTRIBUTED_FORMATS",
+    "ShardedSolveOutput",
+    "solve_sharded",
+    "topk_eigs_sharded",
+    "sharded_lanczos",
+]
+
+# Formats the distributed hot loop may auto-select: kernel-backed only (the
+# paper's design point).  "coo" stays available as an explicit request.
+DISTRIBUTED_FORMATS = ("ell", "bsr")
 
 # jax.shard_map is top-level (with check_vma) only on newer jax; fall back to
 # the jax.experimental spelling (check_rep) so the engine runs on both.
@@ -52,12 +70,26 @@ else:  # jax <= 0.4.x
     _SHARD_MAP_KW = {"check_rep": False}
 
 
-def _make_sharded_ops(row, col, val, n_pad: int, policy: PrecisionPolicy, axis: str) -> Ops:
+def _make_sharded_ops(
+    mats: tuple,
+    n_pad: int,
+    policy: PrecisionPolicy,
+    axis: str,
+    engine: Optional[SpmvEngine] = None,
+) -> Ops:
     cdt = policy.compute
+    fmt = engine.format if engine is not None else "coo"
 
     def matvec(x_local):
         # Replicate the SpMV input: the paper's round-robin partition swap.
         x_full = jax.lax.all_gather(x_local, axis, tiled=True)  # (G * n_pad,)
+        if fmt == "ell":
+            val, col = mats
+            return engine.ell_matvec(val, col, x_full)[:n_pad].astype(cdt)
+        if fmt == "bsr":
+            val, bcol = mats
+            return engine.bsr_matvec(val, bcol, x_full)[:n_pad].astype(cdt)
+        row, col, val = mats
         prod = val.astype(cdt) * jnp.take(x_full, col).astype(cdt)
         return jax.ops.segment_sum(prod, row, num_segments=n_pad)
 
@@ -81,24 +113,33 @@ def sharded_lanczos(
     mesh: Mesh,
     reorth: str = "full",
     axis: str = "data",
+    engine: Optional[SpmvEngine] = None,
+    mats: Optional[tuple] = None,
 ) -> LanczosResult:
-    """Run the distributed Lanczos loop. ``v1_padded``: (G, n_pad) layout."""
-    policy = policy.effective()
+    """Run the distributed Lanczos loop. ``v1_padded``: (G, n_pad) layout.
 
-    def local_fn(row, col, val, v1):
-        row, col, val, v1 = (a[0] for a in (row, col, val, v1))  # drop shard axis
-        ops = _make_sharded_ops(row, col, val, pm.n_pad, policy, axis)
+    ``mats`` are the shard-stacked SpMV arrays matching ``engine.format``
+    (default: the COO triplets of ``pm`` — the legacy segment-sum path).
+    """
+    policy = policy.effective()
+    if mats is None:
+        mats = (pm.row, pm.col, pm.val)
+
+    def local_fn(v1, *shard_mats):
+        v1 = v1[0]  # drop shard axis
+        local = tuple(m[0] for m in shard_mats)
+        ops = _make_sharded_ops(local, pm.n_pad, policy, axis, engine=engine)
         res = _lanczos_loop(v1, ops, num_iters, policy, reorth)
         return res.alpha, res.beta, res.beta_last, res.basis[None]  # re-add shard axis
 
     fn = _shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis),) * (1 + len(mats)),
         out_specs=(P(), P(), P(), P(axis, None, None)),
         **_SHARD_MAP_KW,
     )
-    alpha, beta, beta_last, basis_sh = jax.jit(fn)(pm.row, pm.col, pm.val, v1_padded)
+    alpha, beta, beta_last, basis_sh = jax.jit(fn)(v1_padded, *mats)
     return LanczosResult(alpha=alpha, beta=beta, basis=basis_sh, beta_last=beta_last)
 
 
@@ -111,8 +152,9 @@ class ShardedSolveOutput(NamedTuple):
     eigenvalues_f64: np.ndarray  # (k,) float64 — pre-output-cast, for tol checks
     tridiag: LanczosResult
     iterations: int
-    partition: dict  # num_shards / n_pad / splits / axis
+    partition: dict  # num_shards / n_pad / splits / axis / spmv
     timings: dict
+    spmv_format: tuple = ()  # per-shard executed SpMV format
 
 
 def solve_sharded(
@@ -125,12 +167,63 @@ def solve_sharded(
     seed: int = 0,
     axis: str = "data",
     v1: Optional[jax.Array] = None,
+    spmv_format: str = "auto",
+    engine: Optional[SpmvEngine] = None,
 ) -> ShardedSolveOutput:
-    """End-to-end distributed Top-K eigensolver on a 1-axis mesh."""
+    """End-to-end distributed Top-K eigensolver on a 1-axis mesh.
+
+    ``spmv_format``: "auto" picks ELL vs blocked-ELL per shard statistics
+    (kernel-backed hot loop, the paper's design); "ell" / "bsr" force a
+    kernel layout; "coo" opts back into the ``segment_sum`` reference path.
+    A prebuilt ``engine`` overrides ``spmv_format`` entirely.
+    """
     policy = policy.effective()
     g = mesh.shape[axis]
     m = num_iters or k
-    pm = partition_matrix(csr, g, dtype=policy.storage)
+
+    t_conv0 = time.perf_counter()
+    splits = nnz_balanced_splits(csr.indptr, g)
+    if engine is None:
+        allowed = DISTRIBUTED_FORMATS if spmv_format == "auto" else ("coo",) + DISTRIBUTED_FORMATS
+        engine = make_engine(
+            csr,
+            spmv_format,
+            stats=shard_stats(csr, splits, with_blocks=(spmv_format == "auto")),
+            accum_dtype=policy.compute,
+            allowed=allowed,
+            storage_dtype=policy.storage,
+        )
+    fmt = engine.format
+    row_align = {"ell": engine.tiles.block_r, "bsr": engine.tiles.block_size}.get(fmt, 1)
+    pm = partition_matrix(
+        csr, g, dtype=policy.storage, row_align=row_align, with_coo=(fmt == "coo"),
+        splits=splits,
+    )
+    spmv_meta = engine.describe()
+    if fmt == "ell":
+        ell_val, ell_col, conv_stats = shard_to_ell(
+            csr,
+            pm.splits(),
+            pm.n_pad,
+            dtype=policy.storage,
+            row_tile=engine.tiles.block_r,
+            slot_tile=128,
+        )
+        mats = (ell_val, ell_col)
+        spmv_meta.update(conv_stats)
+    elif fmt == "bsr":
+        bsr_val, bsr_bcol, conv_stats = shard_to_blocked_ell(
+            csr,
+            pm.splits(),
+            pm.n_pad,
+            block_size=engine.tiles.block_size,
+            dtype=policy.storage,
+        )
+        mats = (bsr_val, bsr_bcol)
+        spmv_meta.update(conv_stats)
+    else:
+        mats = (pm.row, pm.col, pm.val)
+    t_convert = time.perf_counter() - t_conv0
 
     if v1 is None:
         rng = np.random.default_rng(seed)
@@ -138,7 +231,9 @@ def solve_sharded(
     v1p = pm.pad_vector(jnp.asarray(v1, dtype=policy.compute))
 
     t0 = time.perf_counter()
-    lres = sharded_lanczos(pm, v1p, m, policy, mesh, reorth=reorth, axis=axis)
+    lres = sharded_lanczos(
+        pm, v1p, m, policy, mesh, reorth=reorth, axis=axis, engine=engine, mats=mats
+    )
     lres = jax.tree.map(lambda a: a.block_until_ready(), lres)  # timings = execution, not dispatch
     t_lanczos = time.perf_counter() - t0
     t1 = time.perf_counter()
@@ -163,7 +258,7 @@ def solve_sharded(
 
     beta_m = float(np.asarray(lres.beta_last, dtype=np.float64))
     residuals = np.abs(beta_m * np.asarray(w, dtype=np.float64)[m - 1, :k])
-    total = time.perf_counter() - t0
+    total = time.perf_counter() - t_conv0  # includes host-side format conversion
     return ShardedSolveOutput(
         eigenvalues=jnp.asarray(evals[:k], dtype=policy.output),
         eigenvectors=x,
@@ -176,13 +271,16 @@ def solve_sharded(
             "n_pad": int(pm.n_pad),
             "splits": [int(s) for s in splits],
             "axis": axis,
+            "spmv": spmv_meta,
         },
         timings={
+            "convert_s": t_convert,
             "lanczos_s": t_lanczos,
             "jacobi_s": t_jacobi,
             "project_s": t_project,
             "total_s": total,
         },
+        spmv_format=(fmt,) * int(g),
     )
 
 

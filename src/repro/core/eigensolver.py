@@ -103,7 +103,9 @@ def solve_fixed(
     t_project = time.perf_counter() - t2
 
     # Classical Ritz residual bound: ||A x_i - theta_i x_i|| = |beta_m W[m-1,i]|.
-    beta_m = float(np.asarray(lres.beta_last, dtype=np.float64)) if lres.beta_last is not None else 0.0
+    beta_m = (
+        float(np.asarray(lres.beta_last, dtype=np.float64)) if lres.beta_last is not None else 0.0
+    )
     residuals = np.abs(beta_m * np.asarray(w, dtype=np.float64)[m - 1, :k])
 
     total = time.perf_counter() - t0

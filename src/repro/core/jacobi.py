@@ -48,7 +48,9 @@ def _rotation(app, aqq, apq, eps):
 
 
 @partial(jax.jit, static_argnames=("max_sweeps",))
-def jacobi_eigh(a: jax.Array, max_sweeps: int = 30, tol: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+def jacobi_eigh(
+    a: jax.Array, max_sweeps: int = 30, tol: float = 0.0
+) -> Tuple[jax.Array, jax.Array]:
     """Cyclic Jacobi eigendecomposition of a symmetric matrix (pure JAX).
 
     Returns (eigenvalues (k,), eigenvectors (k, k) column-wise), sorted by
@@ -102,7 +104,9 @@ def jacobi_eigh(a: jax.Array, max_sweeps: int = 30, tol: float = 0.0) -> Tuple[j
     return evals[order], v_f[:, order]
 
 
-def jacobi_eigh_host(a: np.ndarray, max_sweeps: int = 30, tol: float = 1e-14) -> Tuple[np.ndarray, np.ndarray]:
+def jacobi_eigh_host(
+    a: np.ndarray, max_sweeps: int = 30, tol: float = 1e-14
+) -> Tuple[np.ndarray, np.ndarray]:
     """NumPy cyclic Jacobi — the paper's host-CPU placement of phase 2."""
     a = np.array(a, dtype=np.float64, copy=True)
     k = a.shape[0]

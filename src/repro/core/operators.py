@@ -17,14 +17,22 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 
-from ..sparse.formats import CSR, DeviceCOO, DeviceELL, to_device_coo, to_device_ell
+from ..kernels.engine import SpmvEngine
+from ..sparse.formats import (
+    CSR,
+    DeviceCOO,
+    DeviceELL,
+    to_device_bsr,
+    to_device_coo,
+    to_device_ell,
+)
 from .precision import PrecisionPolicy
 
 __all__ = [
@@ -70,10 +78,13 @@ class DenseOperator(LinearOperator):
 
 @dataclasses.dataclass
 class SparseOperator(LinearOperator):
-    """Explicit sparse matrix; ``impl`` picks the SpMV engine."""
+    """Explicit sparse matrix; ``impl`` (or an :class:`SpmvEngine`) picks the
+    SpMV execution path.  With an engine attached, the container format and
+    tile parameters come from the engine (`kernels/engine.py`)."""
 
-    mat: object  # DeviceCOO | DeviceELL
-    impl: str = "coo"  # "coo" | "ell" | "ell_kernel" | "bsr_kernel"
+    mat: object  # DeviceCOO | DeviceELL | DeviceBSR
+    impl: str = "coo"  # "coo" | "ell" | "ell_kernel" | "bsr_kernel" | "engine"
+    engine: Optional[SpmvEngine] = None
 
     @property
     def n(self) -> int:
@@ -81,7 +92,15 @@ class SparseOperator(LinearOperator):
             return int(self.mat[2])
         return self.mat.n_rows
 
+    @property
+    def spmv_format(self) -> str:
+        if self.engine is not None:
+            return self.engine.format
+        return {"ell_kernel": "ell", "bsr_kernel": "bsr"}.get(self.impl, self.impl)
+
     def matvec(self, x, accum_dtype=None):
+        if self.engine is not None:
+            return self.engine.spmv(self.mat, x, accum_dtype=accum_dtype)
         if self.impl in ("coo", "ell"):
             return self.mat.matvec(x, accum_dtype=accum_dtype)
         if self.impl == "ell_kernel":
@@ -96,18 +115,42 @@ class SparseOperator(LinearOperator):
 
 
 class ChunkedOperator(LinearOperator):
-    """Out-of-core SpMV: COO triplets stay in host NumPy; each matvec streams
+    """Out-of-core SpMV: matrix data stays in host NumPy; each matvec streams
     fixed-size chunks to the device and accumulates partial products.
 
     This reproduces the paper's unified-memory out-of-core mode: at any moment
-    only ``chunk_nnz`` non-zeros are device-resident.  On a real TPU the
+    only ~``chunk_nnz`` non-zeros are device-resident.  On a real TPU the
     staging is host-DRAM -> HBM DMA; here the same code path exercises the
     chunking logic.
+
+    With an ELL-format :class:`SpmvEngine` attached, chunks are row ranges
+    staged as uniform-shape ELL tiles and the partial SpMV runs the Pallas
+    kernel (per-chunk ELL staging); otherwise the COO ``segment_sum``
+    reference path streams nnz-sized slices.
     """
 
-    def __init__(self, csr: CSR, chunk_nnz: int = 1 << 20, dtype=jnp.float32):
+    def __init__(
+        self,
+        csr: CSR,
+        chunk_nnz: int = 1 << 20,
+        dtype=jnp.float32,
+        engine: Optional[SpmvEngine] = None,
+    ):
         self.n = csr.n
         self._dtype = dtype
+        self.engine = engine
+        self.spmv_format = engine.format if engine is not None else "coo"
+        if self.spmv_format == "bsr":
+            raise ValueError(
+                "ChunkedOperator stages chunks as COO or ELL; per-chunk BSR is "
+                "not supported (pick format='ell' or 'coo')"
+            )
+        if self.spmv_format == "ell":
+            self._init_ell_chunks(csr, chunk_nnz, dtype, engine)
+        else:
+            self._init_coo_chunks(csr, chunk_nnz, dtype)
+
+    def _init_coo_chunks(self, csr: CSR, chunk_nnz: int, dtype):
         row = np.repeat(np.arange(csr.n, dtype=np.int32), csr.row_nnz())
         self._chunks = []
         nnz = csr.nnz
@@ -118,7 +161,9 @@ class ChunkedOperator(LinearOperator):
                 (
                     np.pad(row[lo:hi], (0, pad)),
                     np.pad(csr.indices[lo:hi], (0, pad)),
-                    np.pad(csr.data[lo:hi], (0, pad)).astype(np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32),
+                    np.pad(csr.data[lo:hi], (0, pad)).astype(
+                        np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32
+                    ),
                 )
             )
         self.num_chunks = len(self._chunks)
@@ -132,8 +177,64 @@ class ChunkedOperator(LinearOperator):
 
         self._partial_spmv = _partial_spmv
 
+    def _init_ell_chunks(self, csr: CSR, chunk_nnz: int, dtype, engine: SpmvEngine):
+        # Row-contiguous chunks sized so each holds <= chunk_nnz non-zeros
+        # (single rows larger than the budget get a chunk of their own).
+        indptr, n = csr.indptr, csr.n
+        starts = [0]
+        while starts[-1] < n:
+            r0 = starts[-1]
+            r1 = int(np.searchsorted(indptr, indptr[r0] + chunk_nnz, side="right")) - 1
+            starts.append(min(n, max(r1, r0 + 1)))
+        bounds = list(zip(starts[:-1], starts[1:]))
+
+        row_nnz = csr.row_nnz()
+        row_tile = engine.tiles.block_r
+        rows_max = max(r1 - r0 for r0, r1 in bounds)
+        rows_pad = -(-rows_max // row_tile) * row_tile
+        width = int(max(1, row_nnz.max()))
+        width = -(-width // 128) * 128
+        np_dtype = np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32
+
+        self._chunks = []
+        for r0, r1 in bounds:
+            lo, hi = int(indptr[r0]), int(indptr[r1])
+            local_nnz = row_nnz[r0:r1]
+            rix = np.repeat(np.arange(r1 - r0), local_nnz)
+            pos = np.arange(hi - lo) - np.repeat(indptr[r0:r1] - lo, local_nnz)
+            val = np.zeros((rows_pad, width), dtype=np_dtype)
+            col = np.zeros((rows_pad, width), dtype=np.int32)
+            val[rix, pos] = csr.data[lo:hi]
+            col[rix, pos] = csr.indices[lo:hi]
+            self._chunks.append((r0, val, col))
+        self.num_chunks = len(self._chunks)
+        self._n_out_pad = max(r0 for r0, _, _ in self._chunks) + rows_pad
+
+        # Jitted per-chunk kernel SpMV; static over the engine (hashable) so a
+        # different accum dtype retraces once, not per chunk.
+        @partial(jax.jit, static_argnames=("eng",))
+        def _partial_ell(val, col, x, y, r0, *, eng):
+            yk = eng.ell_matvec(val, col, x).astype(y.dtype)
+            seg = jax.lax.dynamic_slice(y, (r0,), (yk.shape[0],))
+            return jax.lax.dynamic_update_slice(y, seg + yk, (r0,))
+
+        self._partial_ell = _partial_ell
+
     def matvec(self, x, accum_dtype=None):
         acc = jnp.dtype(accum_dtype or self._dtype)
+        if self.spmv_format == "ell":
+            import dataclasses as _dc
+
+            eng = self.engine
+            if jnp.dtype(eng.accum_dtype) != acc:
+                eng = _dc.replace(eng, accum_dtype=acc)
+            y = jnp.zeros((self._n_out_pad,), acc)
+            for r0, val, col in self._chunks:  # host loop = the UM page stream
+                y = self._partial_ell(
+                    jnp.asarray(val, dtype=self._dtype), jnp.asarray(col), x, y,
+                    jnp.asarray(r0, jnp.int32), eng=eng,
+                )
+            return y[: self.n]
         y = jnp.zeros((self.n,), acc)
         for row, col, val in self._chunks:  # host loop = the UM page stream
             y = self._partial_spmv(
@@ -215,7 +316,28 @@ class HvpOperator(LinearOperator):
         return y.astype(accum_dtype) if accum_dtype else y
 
 
-def make_operator(csr: CSR, impl: str = "coo", dtype=jnp.float32) -> LinearOperator:
+def make_operator(
+    csr: CSR,
+    impl: str = "coo",
+    dtype=jnp.float32,
+    engine: Optional[SpmvEngine] = None,
+) -> LinearOperator:
+    """Build a solver operator for an explicit sparse matrix.
+
+    With an :class:`SpmvEngine`, the engine's chosen format drives the device
+    container and the kernel tile parameters (``impl`` is ignored); otherwise
+    ``impl`` picks the legacy fixed path.
+    """
+    if engine is not None:
+        if engine.format == "ell":
+            mat = to_device_ell(
+                csr, dtype=dtype, row_tile=engine.tiles.block_r, slot_tile=128
+            )
+        elif engine.format == "bsr":
+            mat = to_device_bsr(csr, block_size=engine.tiles.block_size, dtype=dtype)
+        else:
+            mat = to_device_coo(csr, dtype=dtype)
+        return SparseOperator(mat, impl="engine", engine=engine)
     if impl == "coo":
         return SparseOperator(to_device_coo(csr, dtype=dtype), impl="coo")
     if impl in ("ell", "ell_kernel"):

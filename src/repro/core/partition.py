@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sparse.formats import CSR
+from ..sparse.formats import CSR, padded_col_map
 
 __all__ = ["PartitionedMatrix", "nnz_balanced_splits", "partition_matrix"]
 
@@ -89,32 +89,54 @@ class PartitionedMatrix:
 
 
 def partition_matrix(
-    csr: CSR, num_shards: int, dtype=jnp.float32, nnz_align: int = 128
+    csr: CSR,
+    num_shards: int,
+    dtype=jnp.float32,
+    nnz_align: int = 128,
+    row_align: int = 1,
+    with_coo: bool = True,
+    splits: np.ndarray = None,
 ) -> PartitionedMatrix:
-    """Build the paper's nnz-balanced partition as stacked padded COO shards."""
+    """Build the paper's nnz-balanced partition as stacked padded COO shards.
+
+    ``row_align`` rounds the per-shard row count ``n_pad`` up to a multiple
+    (the Pallas kernel formats need it: ELL row tiles and BSR blocks must
+    divide the padded-global coordinate stride).  ``with_coo=False`` skips
+    materializing the COO triplets when the SpMV will run a kernel format
+    (``sparse.formats.shard_to_ell`` / ``shard_to_blocked_ell``) instead.
+    ``splits`` accepts precomputed split rows (one source of truth when the
+    caller also feeds them to shard statistics/conversions).
+    """
     n = csr.n
-    splits = nnz_balanced_splits(csr.indptr, num_shards)
+    if splits is None:
+        splits = nnz_balanced_splits(csr.indptr, num_shards)
     n_pad = int(max(1, (splits[1:] - splits[:-1]).max()))
-    local_nnz = np.array(
-        [csr.indptr[splits[s + 1]] - csr.indptr[splits[s]] for s in range(num_shards)]
-    )
-    nnz_pad = int(max(nnz_align, -(-int(local_nnz.max()) // nnz_align) * nnz_align))
+    n_pad = -(-n_pad // row_align) * row_align
+    if with_coo:
+        local_nnz = np.array(
+            [csr.indptr[splits[s + 1]] - csr.indptr[splits[s]] for s in range(num_shards)]
+        )
+        nnz_pad = int(max(nnz_align, -(-int(local_nnz.max()) // nnz_align) * nnz_align))
 
-    # Map each global column to its padded-global coordinate.
-    owner = np.searchsorted(splits, np.arange(n), side="right") - 1
-    col_map = (owner * n_pad + (np.arange(n) - splits[owner])).astype(np.int32)
+        # Map each global column to its padded-global coordinate (the same
+        # scheme the kernel-format conversions use — single definition).
+        col_map = padded_col_map(splits, n_pad, n).astype(np.int32)
 
-    rows = np.zeros((num_shards, nnz_pad), dtype=np.int32)
-    cols = np.zeros((num_shards, nnz_pad), dtype=np.int32)
-    vals = np.zeros((num_shards, nnz_pad), dtype=np.float64)
-    row_of_nnz = np.repeat(np.arange(n, dtype=np.int64), csr.row_nnz())
-    for s in range(num_shards):
-        lo, hi = int(csr.indptr[splits[s]]), int(csr.indptr[splits[s + 1]])
-        k = hi - lo
-        rows[s, :k] = (row_of_nnz[lo:hi] - splits[s]).astype(np.int32)
-        cols[s, :k] = col_map[csr.indices[lo:hi]]
-        vals[s, :k] = csr.data[lo:hi]
-        # Padding: row 0, col 0, val 0 — contributes 0 to row 0.
+        rows = np.zeros((num_shards, nnz_pad), dtype=np.int32)
+        cols = np.zeros((num_shards, nnz_pad), dtype=np.int32)
+        vals = np.zeros((num_shards, nnz_pad), dtype=np.float64)
+        row_of_nnz = np.repeat(np.arange(n, dtype=np.int64), csr.row_nnz())
+        for s in range(num_shards):
+            lo, hi = int(csr.indptr[splits[s]]), int(csr.indptr[splits[s + 1]])
+            k = hi - lo
+            rows[s, :k] = (row_of_nnz[lo:hi] - splits[s]).astype(np.int32)
+            cols[s, :k] = col_map[csr.indices[lo:hi]]
+            vals[s, :k] = csr.data[lo:hi]
+            # Padding: row 0, col 0, val 0 — contributes 0 to row 0.
+    else:
+        rows = np.zeros((num_shards, 0), dtype=np.int32)
+        cols = np.zeros((num_shards, 0), dtype=np.int32)
+        vals = np.zeros((num_shards, 0), dtype=np.float64)
 
     pm = PartitionedMatrix(
         row=jnp.asarray(rows),

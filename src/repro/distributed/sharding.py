@@ -127,7 +127,9 @@ def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Dict] = None):
         _STACK.pop()
 
 
-def logical_spec(shape: Sequence[int], axes: Sequence[Optional[str]], ctx: Optional[ShardingCtx] = None) -> P:
+def logical_spec(
+    shape: Sequence[int], axes: Sequence[Optional[str]], ctx: Optional[ShardingCtx] = None
+) -> P:
     """Resolve logical axis names to a PartitionSpec for this shape."""
     ctx = ctx or current_ctx()
     if ctx is None or ctx.mesh is None:
@@ -166,7 +168,9 @@ def hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
 
 
-def named_sharding(shape: Sequence[int], axes: Sequence[Optional[str]], ctx: Optional[ShardingCtx] = None) -> Optional[NamedSharding]:
+def named_sharding(
+    shape: Sequence[int], axes: Sequence[Optional[str]], ctx: Optional[ShardingCtx] = None
+) -> Optional[NamedSharding]:
     ctx = ctx or current_ctx()
     if ctx is None or ctx.mesh is None:
         return None

@@ -1,3 +1,12 @@
-from . import ops, ref
+from . import engine, ops, ref
+from .engine import SpmvEngine, choose_format, make_engine, select_tiles
 
-__all__ = ["ops", "ref"]
+__all__ = [
+    "engine",
+    "ops",
+    "ref",
+    "SpmvEngine",
+    "choose_format",
+    "make_engine",
+    "select_tiles",
+]

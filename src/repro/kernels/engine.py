@@ -1,0 +1,485 @@
+"""Pluggable SpMV execution layer: format selection + tile configuration.
+
+The paper's headline speedup is the SpMV hot loop, but which *layout* wins is
+a property of the matrix, not the solver: ELL when row lengths are near
+uniform (padding overhead bounded), blocked-ELL/BSR when the non-zeros
+cluster into dense blocks (SpMV becomes a stream of MXU matmuls — see
+``spmv_bsr.py`` for the ~1/BS fill crossover), COO ``segment_sum`` otherwise.
+:class:`SpmvEngine` packages that decision — format + accumulation dtype +
+Pallas tile parameters — behind one object so every solver engine
+(``solve_fixed``, ``solve_sharded``, ``ChunkedOperator``) executes the same
+kernels instead of each open-coding its own SpMV.
+
+Format auto-selection (``choose_format``) runs on cheap O(nnz) statistics of
+the host CSR:
+
+  * ``ell_overhead``  — padded ELL slots / nnz = ``max_row_nnz * n / nnz``.
+    ELL is chosen when this is bounded (default <= 3.0: at most 2/3 of the
+    kernel's work is padding).
+  * ``block_fill``    — nnz / (touched BS x BS blocks * BS^2).  BSR wins when
+    a stored block is dense enough that one MXU matvec beats BS scalar-gather
+    rows; the absolute flop crossover is ~1/BS (spmv_bsr.py), but padding and
+    bandwidth push the practical line higher, so the default requires
+    ``block_fill >= BSR_FILL_FACTOR / BS`` (factor 4 => half-dense blocks at
+    BS=8).
+
+Tile parameters come from a small static table keyed on the shard shape and
+storage dtype — the first step toward the ROADMAP autotuner — overridable via
+``REPRO_SPMV_TILES="block_r,block_w[,block_size]"`` or per-call arguments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FORMATS",
+    "TileConfig",
+    "SpmvStats",
+    "SpmvEngine",
+    "matrix_stats",
+    "shard_stats",
+    "choose_format",
+    "select_tiles",
+    "make_engine",
+]
+
+FORMATS = ("coo", "ell", "bsr")
+
+# ELL accepted while padded slots <= ELL_MAX_OVERHEAD * nnz.
+ELL_MAX_OVERHEAD = 3.0
+# BSR accepted while block_fill >= BSR_FILL_FACTOR / block_size.
+BSR_FILL_FACTOR = 4.0
+DEFAULT_BLOCK_SIZE = 8
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ[name])
+    except (KeyError, ValueError):
+        return default
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Pallas grid tile parameters for the SpMV kernels.
+
+    ``block_r`` / ``block_w`` tile the ELL (rows, width) grid; ``block_size``
+    is the dense block edge of the blocked-ELL/BSR layout.  Conversions pad
+    rows to ``block_r`` and widths to ``block_w`` so the kernel BlockSpecs
+    always divide evenly.
+    """
+
+    block_r: int = 8
+    block_w: int = 128
+    block_size: int = DEFAULT_BLOCK_SIZE
+
+
+# Static tile table: (max_rows, max_width) upper bounds -> (block_r, block_w).
+# Larger shards get taller/wider tiles to amortize grid steps; entries are
+# scanned in order and the first row that fits is used.  bf16/f16 rows double
+# block_r to honor the TPU (16, 128) sublane minimum for 16-bit dtypes.
+_TILE_TABLE: Tuple[Tuple[int, int, int, int], ...] = (
+    # max_rows, max_width, block_r, block_w
+    (1 << 10, 1 << 8, 8, 128),
+    (1 << 10, 1 << 30, 8, 256),
+    (1 << 14, 1 << 8, 16, 128),
+    (1 << 14, 1 << 30, 16, 256),
+    (1 << 30, 1 << 8, 32, 128),
+    (1 << 30, 1 << 30, 32, 512),
+)
+
+
+def select_tiles(
+    n_rows: int,
+    width: int,
+    dtype=jnp.float32,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    interpret: bool = False,
+) -> TileConfig:
+    """Pick kernel tiles from the static table (env override wins).
+
+    ``REPRO_SPMV_TILES="block_r,block_w[,block_size]"`` pins the tiles for
+    experiments (the env/config hook the ROADMAP autotuner will replace).
+
+    ``interpret=True`` (CPU validation): the Pallas interpreter executes grid
+    steps sequentially with high per-step overhead and has no VMEM ceiling,
+    so it gets few, large tiles — same kernel code, tractable wall time.
+    """
+    env = os.environ.get("REPRO_SPMV_TILES")
+    if env:
+        parts = [int(p) for p in env.split(",")]
+        if len(parts) not in (2, 3):
+            raise ValueError(
+                f"REPRO_SPMV_TILES={env!r}: expected 'block_r,block_w[,block_size]'"
+            )
+        bs = parts[2] if len(parts) == 3 else block_size
+        return TileConfig(block_r=parts[0], block_w=parts[1], block_size=bs)
+
+    if interpret:
+        return TileConfig(block_r=512, block_w=2048, block_size=block_size)
+
+    block_r, block_w = _TILE_TABLE[-1][2:]
+    for max_rows, max_width, br, bw in _TILE_TABLE:
+        if n_rows <= max_rows and width <= max_width:
+            block_r, block_w = br, bw
+            break
+    if jnp.dtype(dtype).itemsize == 2:  # bf16/f16 sublane minimum is 16
+        block_r = max(block_r, 16)
+    return TileConfig(block_r=block_r, block_w=block_w, block_size=block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvStats:
+    """Cheap per-matrix (or per-shard) layout statistics driving selection."""
+
+    n_rows: int
+    nnz: int
+    max_row_nnz: int
+    mean_row_nnz: float
+    ell_overhead: float  # padded ELL slots / nnz (1.0 = no padding)
+    block_size: int
+    n_blocks: int  # touched BS x BS blocks
+    block_fill: float  # nnz / (n_blocks * BS^2)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _stats_from_triplets(
+    row_nnz: np.ndarray,
+    rows: Optional[np.ndarray],
+    cols: Optional[np.ndarray],
+    n_rows: int,
+    block_size: int,
+    width: Optional[int] = None,
+) -> SpmvStats:
+    """``rows``/``cols`` may be None to skip the (sort-heavy) block census —
+    used when the format is forced and block density is never consulted.
+    ``width`` overrides the ELL width used for the overhead estimate (shards
+    of a distributed solve all pay the *global* max row width, since
+    shard_map forces one shared ELL shape)."""
+    nnz = int(row_nnz.sum())
+    max_row = int(row_nnz.max()) if row_nnz.size else 0
+    mean_row = nnz / max(1, n_rows)
+    overhead = (max(max_row, width or 0) * n_rows) / max(1, nnz)
+    bs = block_size
+    if nnz and rows is not None:
+        nbc = -(-int(cols.max() + 1) // bs)
+        keys = (rows // bs).astype(np.int64) * nbc + cols // bs
+        n_blocks = int(np.unique(keys).size)
+    else:
+        n_blocks = 0
+    # No census (skipped or empty matrix) must read as "no block structure",
+    # never as infinite fill — otherwise auto-selection would pick BSR.
+    fill = nnz / (n_blocks * bs * bs) if n_blocks else 0.0
+    return SpmvStats(
+        n_rows=n_rows,
+        nnz=nnz,
+        max_row_nnz=max_row,
+        mean_row_nnz=mean_row,
+        ell_overhead=overhead,
+        block_size=bs,
+        n_blocks=n_blocks,
+        block_fill=fill,
+    )
+
+
+def matrix_stats(
+    csr, block_size: int = DEFAULT_BLOCK_SIZE, with_blocks: bool = True
+) -> SpmvStats:
+    """O(nnz) layout statistics of a host CSR (the block census is the only
+    super-linear part; skip it with ``with_blocks=False``)."""
+    row_nnz = csr.row_nnz()
+    if with_blocks:
+        rows = np.repeat(np.arange(csr.n, dtype=np.int64), row_nnz)
+        return _stats_from_triplets(row_nnz, rows, csr.indices, csr.n, block_size)
+    return _stats_from_triplets(row_nnz, None, None, csr.n, block_size)
+
+
+def shard_stats(
+    csr,
+    splits: np.ndarray,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    with_blocks: bool = True,
+) -> Tuple[SpmvStats, ...]:
+    """Per-shard statistics for a row-partitioned CSR (splits from
+    ``core.partition.nnz_balanced_splits``).
+
+    Block density is measured in the *remapped padded-global* column
+    coordinates the distributed BSR layout actually uses
+    (``sparse.formats.shard_to_blocked_ell``: columns become
+    ``owner * n_pad + local`` with ``n_pad`` block-aligned), and each shard's
+    ``ell_overhead`` is charged at the *global* max row width (shard_map
+    forces one shared ELL shape — ``shard_to_ell`` pads every shard to it),
+    so the selector judges the layout it would build, not a local optimum.
+    """
+    out = []
+    row_nnz = csr.row_nnz()
+    global_width = int(row_nnz.max()) if row_nnz.size else 0
+    # Every shard is padded to the SAME row count (n_pad ~ max shard rows) and
+    # the same width, so each shard's overhead is charged at that uniform
+    # shape — a shard with few dense rows still allocates max_rows x width.
+    max_rows = int((splits[1:] - splits[:-1]).max()) if len(splits) > 1 else csr.n
+    max_rows = max(1, max_rows)
+    cols_pg = None
+    if with_blocks:
+        n_pad_bsr = -(-max_rows // block_size) * block_size
+        owner = np.searchsorted(splits, csr.indices, side="right") - 1
+        cols_pg = owner * n_pad_bsr + (csr.indices - splits[owner])
+    for s in range(len(splits) - 1):
+        r0, r1 = int(splits[s]), int(splits[s + 1])
+        lo, hi = int(csr.indptr[r0]), int(csr.indptr[r1])
+        local_nnz = row_nnz[r0:r1]
+        if with_blocks:
+            rows = np.repeat(np.arange(r1 - r0, dtype=np.int64), local_nnz)
+            cols = cols_pg[lo:hi]
+        else:
+            rows = cols = None
+        out.append(
+            _stats_from_triplets(
+                local_nnz, rows, cols, max_rows, block_size, width=global_width
+            )
+        )
+    return tuple(out)
+
+
+def choose_format(
+    stats,
+    allowed: Sequence[str] = FORMATS,
+    *,
+    ell_max_overhead: Optional[float] = None,
+    bsr_fill_factor: Optional[float] = None,
+) -> str:
+    """Pick a SpMV format from layout statistics (see module docstring).
+
+    ``stats`` is one :class:`SpmvStats` or a sequence of per-shard stats; with
+    several shards the choice must hold for *every* shard (shard_map runs one
+    program on all of them), so the worst shard decides.
+
+    ``allowed`` restricts the candidates: the distributed engine passes
+    ``("ell", "bsr")`` because its hot loop is kernel-only (COO remains an
+    explicit opt-out there), the chunked engine passes ``("coo", "ell")``
+    because per-chunk BSR staging is not implemented.
+    """
+    if isinstance(stats, SpmvStats):
+        stats = (stats,)
+    ell_max = (
+        ell_max_overhead
+        if ell_max_overhead is not None
+        else _env_float("REPRO_SPMV_ELL_OVERHEAD", ELL_MAX_OVERHEAD)
+    )
+    bsr_factor = (
+        bsr_fill_factor
+        if bsr_fill_factor is not None
+        else _env_float("REPRO_SPMV_BSR_FILL", BSR_FILL_FACTOR)
+    )
+    bsr_ok = "bsr" in allowed and all(
+        s.block_fill >= bsr_factor / s.block_size for s in stats
+    )
+    if bsr_ok:
+        return "bsr"
+    ell_ok = "ell" in allowed and all(s.ell_overhead <= ell_max for s in stats)
+    if ell_ok:
+        return "ell"
+    if "coo" in allowed:
+        return "coo"
+    if "ell" in allowed:
+        # Kernel-only paths (distributed): ELL is always *correct*; the bound
+        # above only optimizes padding, so fall back to it rather than fail —
+        # but loudly: padded ELL costs O(n * max_row_nnz) memory, which on
+        # hub-dominated (power-law) matrices can dwarf the O(nnz) COO path.
+        worst = max(s.ell_overhead for s in stats)
+        warnings.warn(
+            f"SpMV auto-selection is restricted to kernel formats here and "
+            f"fell back to ELL despite a {worst:.0f}x padding overhead "
+            f"(bound: {ell_max:.1f}x); for hub-dominated matrices consider "
+            f"format='coo' (segment-sum reference path) or a larger "
+            f"REPRO_SPMV_ELL_OVERHEAD",
+            stacklevel=2,
+        )
+        return "ell"
+    raise ValueError(f"no admissible SpMV format among {tuple(allowed)}")
+
+
+def _default_interpret() -> bool:
+    from .ops import default_interpret  # lazy: keeps package init order simple
+
+    return default_interpret()
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvEngine:
+    """One SpMV execution configuration: format + accum dtype + tiles.
+
+    Frozen and hashable so it can ride through ``jax.jit`` static arguments.
+    ``interpret`` selects the Pallas interpreter (CPU containers) vs compiled
+    Mosaic (real TPU).  f64 accumulation is TPU-unsupported, so off-interpret
+    it falls back to the vectorized jnp layouts (still ELL/BSR, never
+    ``segment_sum``).
+    """
+
+    format: str = "auto"
+    accum_dtype: Any = jnp.float32
+    tiles: TileConfig = TileConfig()
+    interpret: bool = True
+    requested: str = "auto"
+    stats: Optional[Tuple[SpmvStats, ...]] = None
+
+    def __post_init__(self):
+        if self.format not in FORMATS:
+            raise ValueError(f"unknown SpMV format {self.format!r}; expected {FORMATS}")
+
+    # --- raw-array kernel dispatch (used inside shard_map / jit) -----------
+
+    def _use_kernel(self) -> bool:
+        return not (
+            jnp.dtype(self.accum_dtype) == jnp.dtype(jnp.float64) and not self.interpret
+        )
+
+    def ell_matvec(self, val: jax.Array, col: jax.Array, x: jax.Array) -> jax.Array:
+        """y = ELL(val, col) @ x -> (rows_padded,) in the accum dtype."""
+        acc = jnp.dtype(self.accum_dtype)
+        if not self._use_kernel():
+            from .ref import spmv_ell_ref
+
+            return spmv_ell_ref(val, col, x, accum_dtype=acc)
+        from .spmv_ell import spmv_ell_kernel_call
+
+        # Largest width tile <= the configured one that divides the (128-
+        # aligned) ELL width, so the kernel grid always divides evenly.
+        block_w = max(1, min(self.tiles.block_w, val.shape[1]))
+        while val.shape[1] % block_w:
+            block_w //= 2
+        return spmv_ell_kernel_call(
+            val,
+            col,
+            x,
+            block_r=self.tiles.block_r,
+            block_w=block_w,
+            accum_dtype=acc,
+            interpret=self.interpret,
+        )
+
+    def bsr_matvec(self, val: jax.Array, bcol: jax.Array, x: jax.Array) -> jax.Array:
+        """y = BSR(val, bcol) @ x -> (nbr * BS,) in the accum dtype."""
+        acc = jnp.dtype(self.accum_dtype)
+        nbr, slots, bs, _ = val.shape
+        if x.shape[0] % bs:
+            x = jnp.pad(x, (0, bs - x.shape[0] % bs))
+        if not self._use_kernel():
+            # Same einsum as DeviceBSR.matvec, without the [:n_rows] slice
+            # (callers hold the logical row count).
+            gathered = jnp.take(x.reshape(-1, bs), bcol, axis=0)  # (nbr, slots, bs)
+            y = jnp.einsum("rsij,rsj->ri", val.astype(acc), gathered.astype(acc))
+            return y.reshape(nbr * bs)
+        from .spmv_bsr import spmv_bsr_kernel_call
+
+        return spmv_bsr_kernel_call(
+            val, bcol, x, accum_dtype=acc, interpret=self.interpret
+        )
+
+    # --- container-level dispatch (single-device operators) ----------------
+
+    def spmv(self, mat, x: jax.Array, accum_dtype=None) -> jax.Array:
+        """SpMV on a device container (DeviceCOO / DeviceELL / DeviceBSR)."""
+        from ..sparse.formats import DeviceBSR, DeviceCOO, DeviceELL
+
+        acc = accum_dtype or self.accum_dtype
+        if isinstance(mat, DeviceCOO):
+            return mat.matvec(x, accum_dtype=acc)
+        eng = self if acc == self.accum_dtype else dataclasses.replace(self, accum_dtype=acc)
+        if isinstance(mat, DeviceELL):
+            return eng.ell_matvec(mat.val, mat.col, x)[: mat.n_rows]
+        if isinstance(mat, DeviceBSR):
+            return eng.bsr_matvec(mat.val, mat.bcol, x)[: mat.n_rows]
+        raise TypeError(f"SpmvEngine.spmv: unsupported container {type(mat).__name__}")
+
+    def describe(self) -> dict:
+        """Loggable summary (what ``EigenResult.partition`` records)."""
+        return {
+            "format": self.format,
+            "requested": self.requested,
+            "accum_dtype": str(jnp.dtype(self.accum_dtype)),
+            "block_r": self.tiles.block_r,
+            "block_w": self.tiles.block_w,
+            "block_size": self.tiles.block_size,
+            "interpret": self.interpret,
+        }
+
+
+def make_engine(
+    csr=None,
+    format: str = "auto",
+    *,
+    stats=None,
+    accum_dtype: Any = jnp.float32,
+    allowed: Sequence[str] = FORMATS,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    interpret: Optional[bool] = None,
+    tiles: Optional[TileConfig] = None,
+    storage_dtype: Any = None,
+    ell_max_overhead: Optional[float] = None,
+    bsr_fill_factor: Optional[float] = None,
+) -> SpmvEngine:
+    """Build a :class:`SpmvEngine` for a matrix (or precomputed shard stats).
+
+    ``format="auto"`` runs :func:`choose_format` on the statistics; an
+    explicit format is validated against ``allowed`` and used as-is.
+    """
+    requested = format
+    if stats is None:
+        if csr is None:
+            raise ValueError("make_engine needs a csr or precomputed stats")
+        # The block census (an O(nnz log nnz) sort) only matters when BSR is
+        # actually in play; forced COO/ELL solves skip it.
+        with_blocks = format == "auto" and "bsr" in allowed
+        stats = (matrix_stats(csr, block_size=block_size, with_blocks=with_blocks),)
+    elif isinstance(stats, SpmvStats):
+        stats = (stats,)
+    else:
+        stats = tuple(stats)
+
+    if format == "auto":
+        fmt = choose_format(
+            stats,
+            allowed,
+            ell_max_overhead=ell_max_overhead,
+            bsr_fill_factor=bsr_fill_factor,
+        )
+    else:
+        if format not in FORMATS:
+            raise ValueError(f"unknown SpMV format {format!r}; expected {FORMATS} or 'auto'")
+        if format not in allowed:
+            raise ValueError(
+                f"format={format!r} is not supported by this backend (allowed: {tuple(allowed)})"
+            )
+        fmt = format
+
+    interp = _default_interpret() if interpret is None else interpret
+    if tiles is None:
+        n_rows = max(s.n_rows for s in stats)
+        width = max(s.max_row_nnz for s in stats)
+        # The storage dtype governs the TPU sublane minimum of the value tiles.
+        tiles = select_tiles(
+            n_rows,
+            width,
+            dtype=storage_dtype or accum_dtype,
+            block_size=block_size,
+            interpret=interp,
+        )
+    return SpmvEngine(
+        format=fmt,
+        accum_dtype=accum_dtype,
+        tiles=tiles,
+        interpret=interp,
+        requested=requested,
+        stats=stats,
+    )

@@ -58,7 +58,9 @@ def spmv_bsr(blocked, x: jax.Array, accum_dtype=None, **kw) -> jax.Array:
     return y[:n_rows]
 
 
-def mixed_dot(a: jax.Array, b: jax.Array, accum_dtype=None, compensated: bool = False, **kw) -> jax.Array:
+def mixed_dot(
+    a: jax.Array, b: jax.Array, accum_dtype=None, compensated: bool = False, **kw
+) -> jax.Array:
     acc = jnp.dtype(accum_dtype or jnp.float32)
     if acc == jnp.dtype(jnp.float64):
         return jnp.sum(a.astype(acc) * b.astype(acc))

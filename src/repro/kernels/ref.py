@@ -12,7 +12,9 @@ import jax.numpy as jnp
 __all__ = ["spmv_ell_ref", "mixed_dot_ref", "lanczos_update_ref"]
 
 
-def spmv_ell_ref(val: jax.Array, col: jax.Array, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+def spmv_ell_ref(
+    val: jax.Array, col: jax.Array, x: jax.Array, accum_dtype=jnp.float32
+) -> jax.Array:
     """ELL SpMV: y[r] = sum_s val[r, s] * x[col[r, s]] with wide accumulation."""
     gathered = jnp.take(x, col).astype(accum_dtype)
     return (val.astype(accum_dtype) * gathered).sum(axis=1)

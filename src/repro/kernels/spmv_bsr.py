@@ -73,33 +73,12 @@ def spmv_bsr_kernel_call(
 
 
 def blocked_ell_from_csr(csr, block_size: int = 8, dtype=jnp.float32):
-    """Host conversion: CSR -> (val, bcol, n_rows). Zero-pads to uniform slots."""
-    import numpy as np
+    """Host conversion: CSR -> (val, bcol, n_rows). Zero-pads to uniform slots.
 
-    n = csr.n
-    bs = block_size
-    nbr = -(-n // bs)
-    npad = nbr * bs
-    # collect nonzero block coordinates
-    rows = np.repeat(np.arange(n), csr.row_nnz())
-    br, bc = rows // bs, csr.indices // bs
-    keys = np.unique(br.astype(np.int64) * nbr + bc)
-    kbr, kbc = keys // nbr, keys % nbr
-    counts = np.bincount(kbr, minlength=nbr)
-    slots = max(1, int(counts.max()))
-    val = np.zeros((nbr, slots, bs, bs), dtype=np.float64)
-    bcol = np.zeros((nbr, slots), dtype=np.int32)
-    slot_of = {}
-    next_slot = np.zeros(nbr, dtype=np.int64)
-    for k in keys:
-        i, j = int(k // nbr), int(k % nbr)
-        s = int(next_slot[i])
-        next_slot[i] += 1
-        slot_of[(i, j)] = s
-        bcol[i, s] = j
-    # scatter values into their blocks
-    for r, c, v in zip(rows, csr.indices, csr.data):
-        i, j = int(r // bs), int(c // bs)
-        s = slot_of[(i, j)]
-        val[i, s, r % bs, c % bs] = v
-    return jnp.asarray(val, dtype=dtype), jnp.asarray(bcol), n
+    Thin tuple-returning shim over the vectorized container conversion in
+    ``sparse/formats.py`` (kept for callers predating :class:`DeviceBSR`).
+    """
+    from ..sparse.formats import to_device_bsr
+
+    bsr = to_device_bsr(csr, block_size=block_size, dtype=dtype)
+    return bsr.val, bsr.bcol, bsr.n_rows

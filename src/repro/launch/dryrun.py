@@ -134,7 +134,9 @@ def estimate_param_count(cfg) -> int:
         per_layer = d * (2 * di + 2 * cfg.ssm_state + cfg.n_ssm_heads) + di * d
     elif cfg.family == "hybrid_rglru":
         w = cfg.lru_width or d
-        per_layer = (2 * d * w + w * d + 2 * w * w + mlp + attn) // len(cfg.block_pattern or (1, 1, 1)) * 1
+        per_layer = (
+            (2 * d * w + w * d + 2 * w * w + mlp + attn) // len(cfg.block_pattern or (1, 1, 1)) * 1
+        )
         per_layer = (2 * (2 * d * w + w * d + 2 * w * w + 3 * d * f) + (attn + 3 * d * f)) // 3
     else:
         per_layer = attn + mlp
@@ -243,8 +245,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True
             else:
                 opt_sds = OptState(
                     step=jax.ShapeDtypeStruct((), jnp.int32),
-                    m=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds),
-                    v=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds),
+                    m=jax.tree.map(
+                        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds
+                    ),
+                    v=jax.tree.map(
+                        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds
+                    ),
                 )
                 o_shard = OptState(step=None, m=p_shard, v=p_shard)
             b_shard = {k: tree_shardings(v, batch_axes[k]) for k, v in specs.items()}
@@ -299,8 +305,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True
         rec["cost_analysis"] = {
             k: float(v)
             for k, v in (cost or {}).items()
-            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "transcendentals",
-                                                     "utilization operand 0 {}", "bytes accessed output {}")
+            if isinstance(v, (int, float))
+            and k
+            in (
+                "flops",
+                "bytes accessed",
+                "transcendentals",
+                "utilization operand 0 {}",
+                "bytes accessed output {}",
+            )
         }
         hlo = compiled.as_text()
         rec["collectives"] = collective_bytes(hlo)

@@ -131,8 +131,12 @@ def _chunked_gqa(q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int],
     kc = k.reshape(b, nc, chunk, kvh, d)
     vc = v.reshape(b, nc, chunk, kvh, d)
     pc = kv_pos.reshape(b, nc, chunk)
-    ksc = k_scale.reshape(b, nc, chunk, kvh) if k_scale is not None else jnp.zeros((b, nc, chunk, 0))
-    vsc = v_scale.reshape(b, nc, chunk, kvh) if v_scale is not None else jnp.zeros((b, nc, chunk, 0))
+    ksc = (
+        k_scale.reshape(b, nc, chunk, kvh) if k_scale is not None else jnp.zeros((b, nc, chunk, 0))
+    )
+    vsc = (
+        v_scale.reshape(b, nc, chunk, kvh) if v_scale is not None else jnp.zeros((b, nc, chunk, 0))
+    )
     quantized = k_scale is not None
 
     @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)

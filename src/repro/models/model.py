@@ -105,14 +105,18 @@ def init_model(key, cfg: ModelConfig):
     vp = cfg.vocab_padded
     params: Dict[str, Any] = {
         "embed": Leaf(
-            (jax.random.normal(ks[0], (vp, cfg.d_model), jnp.float32) * 0.02).astype(cfg.param_dtype),
+            (jax.random.normal(ks[0], (vp, cfg.d_model), jnp.float32) * 0.02).astype(
+                cfg.param_dtype
+            ),
             ("vocab", "embed"),
         ),
         "final_norm": _norm_leaf(cfg),
     }
     if not cfg.tie_embeddings:
         params["lm_head"] = Leaf(
-            (jax.random.normal(ks[1], (cfg.d_model, vp), jnp.float32) * 0.02).astype(cfg.param_dtype),
+            (jax.random.normal(ks[1], (cfg.d_model, vp), jnp.float32) * 0.02).astype(
+                cfg.param_dtype
+            ),
             ("embed", "vocab"),
         )
     if cfg.family == "encdec":
@@ -269,7 +273,9 @@ def _logits(params, cfg: ModelConfig, x):
     logits = (x @ head.astype(dt)).astype(jnp.float32)
     if cfg.vocab_padded != cfg.vocab:  # mask padded vocab slots
         pad = cfg.vocab_padded - cfg.vocab
-        mask = jnp.concatenate([jnp.zeros((cfg.vocab,)), jnp.full((pad,), -1e30)]).astype(jnp.float32)
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab,)), jnp.full((pad,), -1e30)]).astype(
+            jnp.float32
+        )
         logits = logits + mask
     return hint(logits, "batch", "seq", "act_vocab")
 
@@ -417,7 +423,9 @@ def init_decode_state(
             jnp.zeros((cfg.n_layers, batch, enc_len, kv, hd), cfg.compute_dtype),
             jnp.zeros((batch, enc_len), jnp.int32),
         )
-    return DecodeState(step=jnp.asarray(step, jnp.int32), layers=layers, rem=rem_states, cross=cross)
+    return DecodeState(
+        step=jnp.asarray(step, jnp.int32), layers=layers, rem=rem_states, cross=cross
+    )
 
 
 def _layer_state_axes(cfg: ModelConfig, kind: str):
@@ -447,7 +455,9 @@ def decode_state_axes(cfg: ModelConfig) -> DecodeState:
     pat = _pattern(cfg)
     n_full, rem = divmod(cfg.n_layers, len(pat))
     prepend = lambda st: jax.tree.map(
-        lambda a: ("layers",) + a, st, is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "_fields")
+        lambda a: ("layers",) + a,
+        st,
+        is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "_fields"),
     )
     layers = {
         f"{kind}_{i}": prepend(_layer_state_axes(cfg, kind)) for i, kind in enumerate(pat)
@@ -624,6 +634,8 @@ def prefill(params, cfg: ModelConfig, batch, max_len: int):
         else:
             new_rem.append(side)
     return (
-        DecodeState(step=jnp.asarray(s, jnp.int32), layers=new_layers, rem=tuple(new_rem), cross=cross),
+        DecodeState(
+            step=jnp.asarray(s, jnp.int32), layers=new_layers, rem=tuple(new_rem), cross=cross
+        ),
         logits,
     )

@@ -118,7 +118,9 @@ def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
     )
 
 
-def rglru_decode_step(p, cfg: ModelConfig, x: jax.Array, state: RGLRUState) -> Tuple[jax.Array, RGLRUState]:
+def rglru_decode_step(
+    p, cfg: ModelConfig, x: jax.Array, state: RGLRUState
+) -> Tuple[jax.Array, RGLRUState]:
     """Single-token form. x: (B,1,d) -> (B,1,d); O(1) in sequence length."""
     dt = cfg.compute_dtype
     x = x.astype(dt)

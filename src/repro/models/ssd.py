@@ -157,14 +157,18 @@ def init_ssd_state(cfg: ModelConfig, batch: int) -> SSDState:
     )
 
 
-def ssd_decode_step(p, cfg: ModelConfig, u: jax.Array, state: SSDState) -> Tuple[jax.Array, SSDState]:
+def ssd_decode_step(
+    p, cfg: ModelConfig, u: jax.Array, state: SSDState
+) -> Tuple[jax.Array, SSDState]:
     """Single-token form: O(1) state update. u: (B,1,d)."""
     di, nh, hp, n, conv_dim = _dims(cfg)
     dt_ = cfg.compute_dtype
     z, xbc, dtp = _split_proj(p, cfg, u)
     conv_in = jnp.concatenate([state.conv, xbc], axis=1)  # (B,cw,conv_dim)
     w = p["conv_w"].astype(dt_)
-    xbc_c = sum(conv_in[:, i : i + 1, :] * w[i] for i in range(w.shape[0])) + p["conv_b"].astype(dt_)
+    xbc_c = sum(conv_in[:, i : i + 1, :] * w[i] for i in range(w.shape[0])) + p["conv_b"].astype(
+        dt_
+    )
     xbc_c = jax.nn.silu(xbc_c)
     x = xbc_c[..., :di].reshape(-1, nh, hp).astype(jnp.float32)  # (B,H,P)
     b = xbc_c[:, 0, di : di + n].astype(jnp.float32)  # (B,N)

@@ -1,11 +1,26 @@
-from .formats import CSR, DeviceCOO, DeviceELL, csr_from_coo, to_device_coo, to_device_ell
+from .formats import (
+    CSR,
+    DeviceBSR,
+    DeviceCOO,
+    DeviceELL,
+    csr_from_coo,
+    shard_to_blocked_ell,
+    shard_to_ell,
+    to_device_bsr,
+    to_device_coo,
+    to_device_ell,
+)
 from .generate import SUITE, generate, suite_matrix
 
 __all__ = [
     "CSR",
+    "DeviceBSR",
     "DeviceCOO",
     "DeviceELL",
     "csr_from_coo",
+    "shard_to_blocked_ell",
+    "shard_to_ell",
+    "to_device_bsr",
     "to_device_coo",
     "to_device_ell",
     "SUITE",

@@ -6,21 +6,40 @@ Host-side construction is NumPy (CSR); device-side compute formats are:
   reference path; also the per-shard format of the distributed solver.
 * ``DeviceELL``  — row-tiled ELLPACK (uniform width, padded), the layout the
   Pallas TPU kernel consumes (DESIGN.md §4).
+* ``DeviceBSR``  — blocked-ELL (uniform block-slots per block-row, padded),
+  the MXU-native layout of ``kernels/spmv_bsr.py``.
 
 All device containers are registered pytrees so they can cross ``jit`` /
-``shard_map`` boundaries.
+``shard_map`` boundaries.  The ``shard_to_*`` converters build *shard-local*
+kernel layouts (uniform shapes across shards, columns remapped to the
+padded-global coordinates of ``core/partition.py``) so the distributed
+engine's hot loop runs the Pallas kernels instead of ``segment_sum``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CSR", "DeviceCOO", "DeviceELL", "csr_from_coo", "to_device_coo", "to_device_ell"]
+__all__ = [
+    "CSR",
+    "DeviceCOO",
+    "DeviceELL",
+    "DeviceBSR",
+    "csr_from_coo",
+    "to_device_coo",
+    "to_device_ell",
+    "to_device_bsr",
+    "ell_padding_stats",
+    "blocked_ell_from_triplets",
+    "padded_col_map",
+    "shard_to_ell",
+    "shard_to_blocked_ell",
+]
 
 
 @dataclasses.dataclass
@@ -171,3 +190,210 @@ def to_device_ell(
         n_rows=n,
         n_cols=n,
     )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceBSR:
+    """Blocked-ELL ("BSR-style"): dense (BS, BS) blocks at sparse block
+    coordinates, uniform slot count per block-row, zero-padded.
+
+    ``val[i, s]`` is the s-th stored block of block-row i; ``bcol[i, s]`` its
+    block-column (0 on padding slots — the zero block makes padding inert).
+    This is exactly the layout ``kernels/spmv_bsr.py`` consumes.
+    """
+
+    val: jax.Array  # (n_block_rows, slots, BS, BS) storage dtype
+    bcol: jax.Array  # (n_block_rows, slots) int32
+    n_rows: int  # logical rows (static)
+    n_cols: int  # static
+
+    def tree_flatten(self):
+        return (self.val, self.bcol), (self.n_rows, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        val, bcol = children
+        return cls(val, bcol, *aux)
+
+    @property
+    def block_size(self) -> int:
+        return int(self.val.shape[2])
+
+    @property
+    def slots(self) -> int:
+        return int(self.val.shape[1])
+
+    def matvec(self, x: jax.Array, accum_dtype=None) -> jax.Array:
+        """jnp reference SpMV (the Pallas path lives in ``kernels/engine.py``)."""
+        acc = accum_dtype or self.val.dtype
+        nbr, slots, bs, _ = self.val.shape
+        if x.shape[0] % bs:
+            x = jnp.pad(x, (0, bs - x.shape[0] % bs))
+        gathered = jnp.take(x.reshape(-1, bs), self.bcol, axis=0)  # (nbr, slots, bs)
+        y = jnp.einsum("rsij,rsj->ri", self.val.astype(acc), gathered.astype(acc))
+        return y.reshape(nbr * bs)[: self.n_rows]
+
+
+def ell_padding_stats(row_nnz: np.ndarray) -> dict:
+    """Padding cost of an ELL layout over rows with the given nnz counts:
+    ``overhead`` = stored slots / nnz (1.0 = perfectly uniform rows)."""
+    nnz = int(row_nnz.sum())
+    width = int(row_nnz.max()) if row_nnz.size else 0
+    return {
+        "width": width,
+        "mean_row_nnz": nnz / max(1, row_nnz.size),
+        "overhead": (width * int(row_nnz.size)) / max(1, nnz),
+    }
+
+
+def blocked_ell_from_triplets(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    n_rows: int,
+    n_cols: int,
+    block_size: int = 8,
+    slots: Optional[int] = None,
+    dtype=jnp.float32,
+) -> DeviceBSR:
+    """Build a blocked-ELL layout from COO triplets (host, vectorized).
+
+    ``slots`` forces a uniform slot count (>= the required maximum) so shards
+    of a distributed solve share one shape; None sizes it to this matrix.
+    """
+    bs = block_size
+    nbr = max(1, -(-n_rows // bs))
+    nbc = max(1, -(-n_cols // bs))
+    br = rows.astype(np.int64) // bs
+    bc = cols.astype(np.int64) // bs
+    keys = np.unique(br * nbc + bc)  # sorted: groups contiguous per block-row
+    kbr = keys // nbc
+    counts = np.bincount(kbr, minlength=nbr)
+    needed = int(counts.max()) if keys.size else 1
+    if slots is None:
+        slots = max(1, needed)
+    elif slots < needed:
+        raise ValueError(f"slots={slots} < required {needed}")
+
+    val = np.zeros((nbr, slots, bs, bs), dtype=np.float64)
+    bcol = np.zeros((nbr, slots), dtype=np.int32)
+    if keys.size:
+        # Slot index of each stored block = its rank within its block-row.
+        first = np.searchsorted(kbr, np.arange(nbr), side="left")
+        slot_of_key = np.arange(keys.size) - first[kbr]
+        bcol[kbr, slot_of_key] = (keys % nbc).astype(np.int32)
+        # Scatter nnz into their block slot (CSR inputs are deduplicated).
+        kidx = np.searchsorted(keys, br * nbc + bc)
+        val[br, slot_of_key[kidx], rows % bs, cols % bs] = vals
+    return DeviceBSR(
+        val=jnp.asarray(val, dtype=dtype),
+        bcol=jnp.asarray(bcol),
+        n_rows=n_rows,
+        n_cols=n_cols,
+    )
+
+
+def to_device_bsr(csr: CSR, block_size: int = 8, dtype=jnp.float32) -> DeviceBSR:
+    """Convert CSR to the blocked-ELL/BSR kernel layout."""
+    rows = np.repeat(np.arange(csr.n, dtype=np.int64), csr.row_nnz())
+    return blocked_ell_from_triplets(
+        rows, csr.indices, csr.data, csr.n, csr.n, block_size=block_size, dtype=dtype
+    )
+
+
+def padded_col_map(splits: np.ndarray, n_pad: int, n: int) -> np.ndarray:
+    """Global column -> padded-global coordinate ``shard * n_pad + local``.
+
+    The single definition of the distributed coordinate scheme: the COO path
+    (``core.partition.partition_matrix``) and the kernel-format conversions
+    below must index the all-gathered vector identically.
+    """
+    owner = np.searchsorted(splits, np.arange(n), side="right") - 1
+    return (owner * n_pad + (np.arange(n) - splits[owner])).astype(np.int64)
+
+
+def shard_to_ell(
+    csr: CSR,
+    splits: np.ndarray,
+    n_pad: int,
+    dtype=jnp.float32,
+    row_tile: int = 8,
+    slot_tile: int = 128,
+) -> Tuple[jax.Array, jax.Array, dict]:
+    """Row-shard a CSR into stacked uniform ELL arrays for ``shard_map``.
+
+    Returns ``(val, col)`` of shape (G, rows_pad, width) — one identical-shape
+    ELL block per shard, columns remapped to the padded-global coordinate
+    system of ``core/partition.py`` (``g = shard * n_pad + local_row``) so the
+    all-gathered replicated vector is indexed directly — plus a stats dict
+    with the realized padding overhead.
+    """
+    g = len(splits) - 1
+    n = csr.n
+    row_nnz = csr.row_nnz()
+    width = int(max(1, row_nnz.max()))
+    width = -(-width // slot_tile) * slot_tile
+    rows_pad = -(-n_pad // row_tile) * row_tile
+
+    col_map = padded_col_map(splits, n_pad, n)
+    rix = np.repeat(np.arange(n, dtype=np.int64), row_nnz)
+    owner = np.searchsorted(splits, rix, side="right") - 1
+    local_r = rix - splits[owner]
+    pos = np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], row_nnz)
+
+    val = np.zeros((g, rows_pad, width), dtype=np.float64)
+    col = np.zeros((g, rows_pad, width), dtype=np.int32)
+    val[owner, local_r, pos] = csr.data
+    col[owner, local_r, pos] = col_map[csr.indices]
+    stats = ell_padding_stats(row_nnz)
+    stats["rows_pad"] = rows_pad
+    stats["width_padded"] = width
+    return jnp.asarray(val, dtype=dtype), jnp.asarray(col), stats
+
+
+def shard_to_blocked_ell(
+    csr: CSR,
+    splits: np.ndarray,
+    n_pad: int,
+    block_size: int = 8,
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array, dict]:
+    """Row-shard a CSR into stacked blocked-ELL arrays for ``shard_map``.
+
+    Returns ``(val, bcol)`` of shapes (G, nbr, slots, BS, BS) / (G, nbr,
+    slots) with a uniform slot count (the max over shards), block columns in
+    the *flat padded-global* index space of the all-gathered vector.  Requires
+    ``n_pad % block_size == 0`` (use ``partition_matrix(..., row_align=BS)``)
+    so shard-local block rows stay aligned with the replicated vector.
+    """
+    if n_pad % block_size:
+        raise ValueError(f"n_pad={n_pad} must be a multiple of block_size={block_size}")
+    g = len(splits) - 1
+    n = csr.n
+    col_map = padded_col_map(splits, n_pad, n)
+    row_nnz = csr.row_nnz()
+    rix = np.repeat(np.arange(n, dtype=np.int64), row_nnz)
+
+    shard_trip = []
+    slots = 1
+    for s in range(g):
+        lo, hi = int(csr.indptr[splits[s]]), int(csr.indptr[splits[s + 1]])
+        rows_l = rix[lo:hi] - splits[s]
+        cols_g = col_map[csr.indices[lo:hi]]
+        shard_trip.append((rows_l, cols_g, csr.data[lo:hi]))
+        if rows_l.size:
+            bkeys = (rows_l // block_size) * (g * n_pad // block_size) + cols_g // block_size
+            counts = np.bincount(np.unique(bkeys) // (g * n_pad // block_size))
+            slots = max(slots, int(counts.max()))
+
+    vals, bcols = [], []
+    for rows_l, cols_g, data in shard_trip:
+        bsr = blocked_ell_from_triplets(
+            rows_l, cols_g, data, n_pad, g * n_pad, block_size=block_size,
+            slots=slots, dtype=dtype,
+        )
+        vals.append(bsr.val)
+        bcols.append(bsr.bcol)
+    stats = {"slots": slots, "block_size": block_size, "n_block_rows": n_pad // block_size}
+    return jnp.stack(vals), jnp.stack(bcols), stats

@@ -107,7 +107,9 @@ def _road_edges(n: int, rng: np.random.Generator):
     return edges[:, 0], edges[:, 1], n
 
 
-def generate(kind: str, n: int, avg_deg: float = 8.0, seed: int = 0, values: str = "normalized") -> CSR:
+def generate(
+    kind: str, n: int, avg_deg: float = 8.0, seed: int = 0, values: str = "normalized"
+) -> CSR:
     """Generate a symmetric sparse matrix of the given family."""
     rng = np.random.default_rng(seed)
     target_nnz = int(n * avg_deg)

@@ -40,7 +40,9 @@ def init_opt_state(params) -> OptState:
 def lr_at(cfg: OptConfig, step) -> jax.Array:
     step = step.astype(jnp.float32)
     warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
-    prog = jnp.clip((step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
     cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1.0 + jnp.cos(jnp.pi * prog))
     return jnp.where(step < cfg.warmup_steps, warm, cos)
 
@@ -66,7 +68,9 @@ class FactoredState(NamedTuple):
 
 def init_factored_state(params) -> FactoredState:
     def rows(p):
-        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32)
+        return (
+            jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32)
+        )
 
     def cols(p):
         return (
@@ -82,7 +86,9 @@ def init_factored_state(params) -> FactoredState:
     )
 
 
-def adafactor_update(grads, state: FactoredState, params, cfg: OptConfig) -> Tuple[Any, FactoredState, dict]:
+def adafactor_update(
+    grads, state: FactoredState, params, cfg: OptConfig
+) -> Tuple[Any, FactoredState, dict]:
     """Adafactor (no momentum, fixed beta2) with update clipping."""
     step = state.step + 1
     gnorm = global_norm(grads)

@@ -23,7 +23,6 @@ import numpy as np, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.sparse import generate
 from repro.core import make_operator, FDF, FFF
-from repro.core.distributed import topk_eigs_sharded
 from repro.core.eigensolver import topk_eigs
 from repro.core.metrics import eigsh_reference, reconstruction_error
 
@@ -33,9 +32,14 @@ ref_vals, _ = eigsh_reference(csr, 4)
 devs = np.array(jax.devices())
 out["num_devices"] = len(devs)
 
+from repro.api import eigsh
+
 for g in (2, 8):
     mesh = Mesh(devs[:g].reshape(g), ("data",))
-    r = topk_eigs_sharded(csr, 4, mesh, policy=FDF, reorth="full", num_iters=24, seed=1)
+    # Pin the segment-sum reference path so the kernel run below has an
+    # independent baseline (format="auto" would also pick the kernels).
+    r = eigsh(csr, 4, backend="distributed", mesh=mesh, policy=FDF,
+              reorth="full", num_iters=24, seed=1, format="coo")
     out[f"vals_g{g}"] = np.asarray(r.eigenvalues, dtype=np.float64).tolist()
     op = make_operator(csr, "coo")
     out[f"recon_g{g}"] = reconstruction_error(op, r.eigenvalues, r.eigenvectors, accum_dtype=jnp.float64)
@@ -45,6 +49,15 @@ r1 = topk_eigs(make_operator(csr, "coo", dtype=jnp.float32), 4, policy=FDF,
                v1=jnp.asarray(np.random.default_rng(1).standard_normal(csr.n)))
 out["vals_single"] = np.asarray(r1.eigenvalues, dtype=np.float64).tolist()
 out["vals_ref"] = ref_vals.tolist()
+
+# eigsh frontend on the full mesh with format="auto": the hot loop must run a
+# Pallas kernel format (never COO segment_sum) and report the decision.
+mesh8 = Mesh(devs.reshape(len(devs)), ("data",))
+rk = eigsh(csr, 4, backend="distributed", policy=FDF, reorth="full",
+           num_iters=24, seed=1, mesh=mesh8)
+out["kernel_spmv_format"] = list(rk.spmv_format)
+out["kernel_partition_spmv"] = rk.partition["spmv"]["format"]
+out["vals_kernel"] = np.asarray(rk.eigenvalues, dtype=np.float64).tolist()
 print("JSON:" + json.dumps(out))
 """
 
@@ -89,3 +102,22 @@ def test_shard_count_invariance(dist_results):
 
 def test_reconstruction_quality(dist_results):
     assert dist_results["recon_g8"] < 1e-2
+
+
+def test_distributed_spmv_is_kernel_backed(dist_results):
+    """format="auto" on the distributed backend picks a Pallas kernel layout
+    for every shard and reports it through EigenResult."""
+    import numpy as np
+
+    fmts = dist_results["kernel_spmv_format"]
+    assert len(fmts) == 8
+    assert all(f in ("ell", "bsr") for f in fmts)
+    assert dist_results["kernel_partition_spmv"] == fmts[0]
+    # same solver, same start vector: the kernel path must agree with the
+    # independent segment-sum run (vals_g8 pins format="coo") to
+    # reduction-order tolerance
+    np.testing.assert_allclose(
+        np.array(dist_results["vals_kernel"]),
+        np.array(dist_results["vals_g8"]),
+        rtol=1e-6,
+    )

@@ -111,8 +111,12 @@ def test_chunked_out_of_core_matches_incore(web_csr):
 
 def test_ell_impl_matches_coo(web_csr):
     v1 = jnp.ones((web_csr.n,), jnp.float64)
-    r_coo = topk_eigs(make_operator(web_csr, "coo"), 3, policy=FFF, reorth="full", num_iters=9, v1=v1)
-    r_ell = topk_eigs(make_operator(web_csr, "ell"), 3, policy=FFF, reorth="full", num_iters=9, v1=v1)
+    r_coo = topk_eigs(
+        make_operator(web_csr, "coo"), 3, policy=FFF, reorth="full", num_iters=9, v1=v1
+    )
+    r_ell = topk_eigs(
+        make_operator(web_csr, "ell"), 3, policy=FFF, reorth="full", num_iters=9, v1=v1
+    )
     np.testing.assert_allclose(
         np.asarray(r_coo.eigenvalues), np.asarray(r_ell.eigenvalues), rtol=1e-5
     )

@@ -36,7 +36,9 @@ def test_spmv_ell_block_shapes(block_r, block_w):
     csr = generate("web", 1024, 6.0, seed=1, values="uniform")
     ell = to_device_ell(csr, dtype=jnp.float32, row_tile=16, slot_tile=512)
     x = jnp.asarray(np.random.default_rng(1).standard_normal(ell.val.shape[0]), jnp.float32)
-    y_k = spmv_ell_kernel_call(ell.val, ell.col, x, block_r=block_r, block_w=block_w, interpret=True)
+    y_k = spmv_ell_kernel_call(
+        ell.val, ell.col, x, block_r=block_r, block_w=block_w, interpret=True
+    )
     y_r = ref.spmv_ell_ref(ell.val, ell.col, x)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=2e-5, atol=1e-4)
 
@@ -63,7 +65,9 @@ def test_mixed_dot_compensation_beats_naive_f32():
     a = jnp.asarray(a_np, jnp.float32)
     one = jnp.ones_like(a)
     want = float(np.sum(a_np.astype(np.float64)))
-    naive = float(mixed_dot_kernel_call(a, one, compensated=False, block=1024, interpret=True).sum())
+    naive = float(
+        mixed_dot_kernel_call(a, one, compensated=False, block=1024, interpret=True).sum()
+    )
     comp = float(mixed_dot_kernel_call(a, one, compensated=True, block=1024, interpret=True).sum())
     assert abs(comp - want) <= abs(naive - want)
 
@@ -89,7 +93,10 @@ def test_ops_wrappers_dispatch(web_csr):
     y32 = ops.spmv_ell(ell, x, accum_dtype=jnp.float32)
     y64 = ops.spmv_ell(ell, x[: ell.n_rows], accum_dtype=jnp.float64)
     np.testing.assert_allclose(
-        np.asarray(y32, np.float64), np.asarray(y64, np.float64)[: y32.shape[0]], rtol=1e-4, atol=1e-4
+        np.asarray(y32, np.float64),
+        np.asarray(y64, np.float64)[: y32.shape[0]],
+        rtol=1e-4,
+        atol=1e-4,
     )
 
 

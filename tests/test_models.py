@@ -128,7 +128,12 @@ def test_chunked_attention_matches_naive():
 
 
 def test_rglru_decode_matches_sequence():
-    from repro.models.rglru import init_rglru_block, init_rglru_state, rglru_block, rglru_decode_step
+    from repro.models.rglru import (
+        init_rglru_block,
+        init_rglru_state,
+        rglru_block,
+        rglru_decode_step,
+    )
 
     cfg = get_config("recurrentgemma-2b", smoke=True)
     p, _ = split_tree(init_rglru_block(jax.random.PRNGKey(1), cfg))
