@@ -1,0 +1,50 @@
+"""CI smoke for the SpMV tile autotuner (structural assertions, no wall-clock).
+
+Runs a real tune pass on a tiny matrix with a tiny candidate grid (interpret
+mode), then proves the cache contract:
+
+  * first engine build measures and persists the JSON cache;
+  * a fresh tuner (simulating the next CI run restoring the cache) resolves
+    the same bucket WITHOUT re-measuring;
+  * provenance is surfaced through ``SpmvEngine.describe()``.
+
+Timings on shared runners are noisy, so nothing here gates on "faster" —
+only on the decision trail.  Usage (CI caches ``$REPRO_SPMV_TUNE_CACHE``):
+
+    REPRO_SPMV_TUNE=1 REPRO_SPMV_TUNE_CACHE=.cache/spmv_tune.json \
+        python -m benchmarks.autotune_smoke
+"""
+
+import json
+import os
+
+
+def main() -> None:
+    os.environ.setdefault("REPRO_SPMV_TUNE", "1")
+    os.environ.setdefault("REPRO_SPMV_TUNE_BUDGET", "3")
+    os.environ.setdefault("REPRO_SPMV_TUNE_CACHE", ".cache/spmv_tune.json")
+    cache = os.environ["REPRO_SPMV_TUNE_CACHE"]
+
+    import repro.kernels.engine as eng_mod
+    from repro.sparse import generate
+
+    csr = generate("road", 400, 3.0, seed=1, values="normalized")
+    e1 = eng_mod.make_engine(csr, "ell")
+    assert e1.tiles_from == "tuned", e1.tiles_from
+    assert os.path.exists(cache), f"tune cache not persisted at {cache}"
+    payload = json.load(open(cache))
+    assert payload.get("version") == 1 and payload["entries"], payload
+    print(f"tuned: {e1.tiles} (measures={eng_mod.get_tuner().measure_count})")
+
+    # Fresh tuner = next CI run with the cache restored: must be a pure hit.
+    eng_mod._TUNER = None
+    e2 = eng_mod.make_engine(csr, "ell")
+    t2 = eng_mod.get_tuner()
+    assert t2.measure_count == 0, "restored cache must not re-measure"
+    assert e2.tiles == e1.tiles and e2.tiles_from == "tuned"
+    assert e2.describe()["tiles_from"] == "tuned"
+    print(f"cache-hit: {e2.tiles} from {cache} ({len(payload['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,16 @@
 """SpmvEngine layer: per-format SpMV wall time + the auto-selector's choice.
 
 One section per matrix family (banded road lattice, power-law web, block
-diagonal): times the COO / ELL / BSR execution paths through the engine on
-the same matrix and reports which format ``format="auto"`` picks.  Interpret
-mode on CPU — absolute numbers are CPU wall time of the kernel interpreter,
-useful as a regression trajectory, not as TPU projections (those live in
-kernels_bench.py / roofline.py).
+diagonal): times the COO / ELL / BSR / hybrid execution paths through the
+engine on the same matrix and reports which format ``format="auto"`` picks.
+A trailing section times one fused Lanczos update step (Pallas kernel) vs
+the unfused three-op reference.  Interpret mode on CPU — absolute numbers
+are CPU wall time of the kernel interpreter, useful as a regression
+trajectory, not as TPU projections (those live in kernels_bench.py /
+roofline.py).
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -57,7 +60,7 @@ def run(scale: float = 1.0):
             block_fill=stats.block_fill,
             auto_format=auto_fmt,
         )
-        for fmt in ("coo", "ell", "bsr"):
+        for fmt in ("coo", "ell", "bsr", "hybrid"):
             engine = make_engine(csr, fmt, accum_dtype=jnp.float32)
             op = make_operator(csr, dtype=jnp.float32, engine=engine)
             t = timeit(lambda: op.matvec(x).block_until_ready())
@@ -66,8 +69,46 @@ def run(scale: float = 1.0):
             emit(f"engine/{name}/{fmt}", t * 1e6,
                  f"n={csr.n} nnz={csr.nnz} auto={auto_fmt}{chosen}")
         rows.append(case)
+    rows.append(_lanczos_step(scale))
     save_artifact("engine_bench.json", rows)
     return rows
+
+
+def _lanczos_step(scale: float) -> dict:
+    """Fused three-term recurrence + norm (one memory pass) vs the unfused
+    reference (update then separate dot) — the core/lanczos.py hot step."""
+    from repro.kernels import ops as kops
+
+    n = max(4096, int((1 << 16) * scale))
+    rng = np.random.default_rng(0)
+    w, v, vp = (jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(3))
+    alpha, beta = jnp.float32(0.37), jnp.float32(1.21)
+
+    def fused():
+        u, nrm = kops.lanczos_update(w, v, vp, alpha, beta, accum_dtype=jnp.float32)
+        u.block_until_ready()
+        return nrm
+
+    @jax.jit
+    def _unfused(w, v, vp):
+        u = w - alpha * v - beta * vp
+        return u, jnp.sum(u * u)
+
+    def unfused():
+        u, nrm = _unfused(w, v, vp)
+        u.block_until_ready()
+        return nrm
+
+    t_f = timeit(fused)
+    t_u = timeit(unfused)
+    emit("engine/lanczos_step/fused", t_f * 1e6, f"n={n} fused Pallas update+norm")
+    emit("engine/lanczos_step/unfused", t_u * 1e6, f"n={n} separate ops reference")
+    return {
+        "matrix": "lanczos_step",
+        "n": n,
+        "t_fused_us": t_f * 1e6,
+        "t_unfused_us": t_u * 1e6,
+    }
 
 
 if __name__ == "__main__":

@@ -80,11 +80,13 @@ class SolverConfig:
     max_restarts: int = 30
     seed: int = 0
     # SpMV layout for explicit sparse inputs: "auto" selects COO / ELL /
-    # blocked-ELL(BSR) from matrix statistics (repro.kernels.engine); an
-    # explicit value forces it.  The decision lands in EigenResult.spmv_format.
+    # blocked-ELL(BSR) / hybrid(ELL+COO hub split) from matrix statistics
+    # (repro.kernels.engine); an explicit value forces it.  The decision
+    # lands in EigenResult.spmv_format.
     format: str = "auto"
     impl: str = "coo"  # deprecated fixed SpMV path; use ``format`` instead
     chunk_nnz: int = 1 << 20  # chunked backend: device-resident nnz per chunk
+    stage_depth: int = 1  # chunked backend: chunks prefetched ahead of compute
     jacobi: str = "host"  # phase-2 placement, "host" (paper) or "jax"
     axis: str = "data"  # mesh axis name for the distributed backend
 
@@ -123,6 +125,7 @@ def eigsh(
     format: str = "auto",
     impl: str = "coo",
     chunk_nnz: int = 1 << 20,
+    stage_depth: int = 1,
     jacobi: str = "host",
     mesh=None,
     axis: str = "data",
@@ -158,10 +161,12 @@ def eigsh(
       subspace: restarted backend's subspace size m.
       max_restarts: restart cap (ignored when ``num_iters`` already caps it).
       format: SpMV layout for explicit sparse matrices — "auto" (default)
-        picks COO vs ELL vs blocked-ELL/BSR from cheap row-length and
-        block-density statistics (``repro.kernels.engine``); "coo" / "ell" /
-        "bsr" force one.  The kernel formats execute through the Pallas SpMV
-        kernels (interpret mode off-TPU); the executed choice is reported as
+        picks COO vs ELL vs blocked-ELL/BSR vs hybrid (quantile-capped ELL
+        plus a COO hub tail — how power-law matrices reach the kernel path)
+        from cheap row-length and block-density statistics
+        (``repro.kernels.engine``); "coo" / "ell" / "bsr" / "hybrid" force
+        one.  The kernel formats execute through the Pallas SpMV kernels
+        (interpret mode off-TPU); the executed choice is reported as
         ``EigenResult.spmv_format``.  The distributed backend auto-selects
         kernel formats only (pass format="coo" to opt back into
         ``segment_sum``); the chunked backend supports "coo" / "ell".
@@ -171,6 +176,11 @@ def eigsh(
         "unset": to pin the COO segment-sum reference path, pass
         ``format="coo"`` instead.
       chunk_nnz: chunk size (nnz) for the out-of-core backend.
+      stage_depth: out-of-core double buffering — how many chunks the
+        chunked backend prefetches (``jax.device_put``) ahead of the chunk
+        being computed on; device residency is bounded by ``stage_depth +
+        1`` chunks.  0 disables the overlap.  Staging counters are reported
+        in ``EigenResult.partition["staging"]``.
       jacobi: phase-2 Jacobi placement ("host" = the paper's, or "jax").
       mesh: optional ``jax.sharding.Mesh``; passing one under
         ``backend="auto"`` is an explicit request for the distributed
@@ -192,6 +202,7 @@ def eigsh(
         format=format,
         impl=impl,
         chunk_nnz=chunk_nnz,
+        stage_depth=stage_depth,
         jacobi=jacobi,
         axis=axis,
     )
@@ -254,6 +265,18 @@ def eigsh(
             jacobi=cfg.jacobi,
         )
         restarts, partition = 0, None
+        if isinstance(solver_op, ChunkedOperator):
+            # Out-of-core placement facts: how the chunk stream behaved.
+            partition = {
+                "num_chunks": solver_op.num_chunks,
+                "stage_depth": solver_op.stage_depth,
+                "staging": dict(solver_op.staging),
+                "spmv": (
+                    solver_op.engine.describe()
+                    if solver_op.engine is not None
+                    else {"format": "coo"}
+                ),
+            }
 
     # Judge convergence on the engines' full-precision eigenvalues so the
     # flags agree with the restarted engine's own stopping decision (the
@@ -299,25 +322,38 @@ def _build_operator(op, csr: Optional[CSR], cfg: SolverConfig, pol, backend: str
     kernel tiles; caller-provided operators are used as-is.
     """
     if backend == "chunked":
+        fmt = cfg.format if cfg.format != "auto" else "ell"
+        # Build the ELL engine first even under "auto": its tiles determine
+        # the per-chunk row padding, which the selection below must charge.
         engine = make_engine(
             csr,
-            cfg.format,
+            fmt,
             accum_dtype=pol.compute,
-            allowed=("coo", "ell"),  # per-chunk BSR staging is not implemented
+            allowed=("coo", "ell"),  # per-chunk BSR/hybrid staging not implemented
             storage_dtype=pol.storage,
         )
-        if engine.format == "ell" and cfg.format == "auto":
-            # The chunked backend exists because memory is tight; ELL staging
-            # pads rows to the 128-aligned max width, which on narrow
-            # matrices can dwarf the COO triplets it replaces.  Under "auto",
-            # keep COO when the padded footprint clearly loses (explicit
-            # format="ell" still forces the kernel staging).
-            max_row = max(s.max_row_nnz for s in engine.stats)
-            width_pad = -(-max(1, max_row) // 128) * 128
-            n, nnz = csr.n, csr.nnz
-            ell_bytes = n * width_pad * (jnp.dtype(pol.storage).itemsize + 4)
-            coo_bytes = nnz * 12
-            if ell_bytes > 4 * coo_bytes:
+        if cfg.format == "auto":
+            # The chunked engine stages ELL per chunk at each chunk's OWN
+            # 128-aligned max row width, so its ELL eligibility must be
+            # judged on that realized layout — the whole-matrix selector's
+            # global-max-row overhead would veto exactly the hub matrices
+            # the per-chunk split handles (one hub inflates one chunk, not
+            # all), while narrow matrices still lose to the 128-lane pad.
+            # Memory being the backend's constraint, the padded footprint
+            # must also not dwarf the COO triplets it replaces.
+            from ..core.operators import chunk_row_bounds, chunk_rows_pad
+            from ..kernels.engine import ell_overhead_bound
+
+            row_nnz = csr.row_nnz()
+            padded_slots = 0
+            for r0, r1 in chunk_row_bounds(csr.indptr, csr.n, cfg.chunk_nnz):
+                w = int(row_nnz[r0:r1].max()) if r1 > r0 else 1
+                rows_pad = chunk_rows_pad(r1 - r0, engine.tiles.block_r, pol.storage)
+                padded_slots += rows_pad * (-(-max(1, w) // 128) * 128)
+            nnz = max(1, csr.nnz)
+            ell_bytes = padded_slots * (jnp.dtype(pol.storage).itemsize + 4)
+            overhead_ok = padded_slots / nnz <= ell_overhead_bound()
+            if not (overhead_ok and ell_bytes <= 4 * nnz * 12):
                 engine = make_engine(
                     csr,
                     "coo",
@@ -326,7 +362,11 @@ def _build_operator(op, csr: Optional[CSR], cfg: SolverConfig, pol, backend: str
                     storage_dtype=pol.storage,
                 )
         chunked = ChunkedOperator(
-            csr, chunk_nnz=cfg.chunk_nnz, dtype=pol.storage, engine=engine
+            csr,
+            chunk_nnz=cfg.chunk_nnz,
+            dtype=pol.storage,
+            engine=engine,
+            stage_depth=cfg.stage_depth,
         )
         return chunked, engine.format
     if op is not None:

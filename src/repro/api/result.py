@@ -44,16 +44,23 @@ class EigenResult:
         x64-unavailable downgrade, e.g. ``"FDF(x32!)"``).
       tol: the effective relative tolerance convergence was judged against.
       num_devices: devices the solve ran on.
-      partition: row-partition layout for the distributed backend
-        (num_shards / n_pad / splits / axis, plus a ``"spmv"`` dict with the
-        executed kernel format, tiles, and padding stats), else None.
+      partition: placement facts, backend-dependent: the distributed backend
+        records the row partition (num_shards / n_pad / splits / axis); the
+        chunked backend records the chunk stream (num_chunks / stage_depth /
+        ``"staging"`` counters: one-time host conversions, cumulative
+        device_put transfers, peak device-resident chunks).  Both carry a
+        ``"spmv"`` dict with the executed kernel format, tiles, tile
+        provenance (``"tiles_from"``: "table" | "tuned" | "override" — the
+        autotuner's decision trail), and padding stats.  None on the other
+        backends.
       timings: seconds per phase — always contains ``"total_s"``; fixed-m
         backends add ``"lanczos_s"`` / ``"jacobi_s"`` / ``"project_s"``.
       spmv_format: SpMV layout the hot loop executed — "coo" | "ell" | "bsr"
-        for explicit sparse inputs ("dense" / "matfree" otherwise).  The
-        distributed backend reports one entry per shard (a tuple; shard_map
-        runs one program, so entries agree).  This is the outcome of the
-        ``format="auto"`` selection (see ``repro.kernels.engine``).
+        | "hybrid" (quantile-capped ELL + COO hub tail) for explicit sparse
+        inputs ("dense" / "matfree" otherwise).  The distributed backend
+        reports one entry per shard (a tuple; shard_map runs one program, so
+        entries agree).  This is the outcome of the ``format="auto"``
+        selection (see ``repro.kernels.engine``).
       tridiag: raw Lanczos output (alpha / beta / basis), for diagnostics.
     """
 

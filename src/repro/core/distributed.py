@@ -21,11 +21,13 @@ only cross-device traffic per iteration is: 1 all-gather (n floats) +
 communication analysis.
 
 Per-shard SpMV runs through the :class:`~repro.kernels.engine.SpmvEngine`
-layer: each shard's COO slice is converted host-side to ELL or blocked-ELL
-(``sparse.formats.shard_to_*``) and the Lanczos hot loop calls the Pallas
-kernels (interpret mode off-TPU).  ``spmv_format="auto"`` picks ELL vs BSR
-from per-shard statistics; COO ``segment_sum`` remains only as an explicit
-opt-out (``spmv_format="coo"``).
+layer: each shard's COO slice is converted host-side to ELL, blocked-ELL,
+or the hybrid hub split (``sparse.formats.shard_to_*``) and the Lanczos hot
+loop calls the Pallas kernels (interpret mode off-TPU).  ``spmv_format=
+"auto"`` picks ELL vs BSR vs hybrid from per-shard statistics — hybrid keeps
+power-law shards on the kernel path by capping the ELL width and spilling
+hub overflow to a small ``segment_sum`` tail; plain COO remains only as an
+explicit opt-out (``spmv_format="coo"``).
 """
 
 from __future__ import annotations
@@ -40,10 +42,10 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.engine import SpmvEngine, make_engine, shard_stats
-from ..sparse.formats import CSR, shard_to_blocked_ell, shard_to_ell
+from ..sparse.formats import CSR, shard_to_blocked_ell, shard_to_ell, shard_to_hybrid
 from .eigensolver import EigResult
 from .jacobi import jacobi_eigh_host, tridiag_to_dense
-from .lanczos import LanczosResult, Ops, _lanczos_loop
+from .lanczos import LanczosResult, Ops, _lanczos_loop, fused_update_enabled
 from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
 from .precision import PrecisionPolicy, FDF, compensated_sum
 
@@ -56,8 +58,9 @@ __all__ = [
 ]
 
 # Formats the distributed hot loop may auto-select: kernel-backed only (the
-# paper's design point).  "coo" stays available as an explicit request.
-DISTRIBUTED_FORMATS = ("ell", "bsr")
+# paper's design point; hybrid's tail segment_sum is bounded by the hub
+# split, so it still counts).  "coo" stays available as an explicit request.
+DISTRIBUTED_FORMATS = ("ell", "bsr", "hybrid")
 
 # jax.shard_map is top-level (with check_vma) only on newer jax; fall back to
 # the jax.experimental spelling (check_rep) so the engine runs on both.
@@ -89,6 +92,10 @@ def _make_sharded_ops(
         if fmt == "bsr":
             val, bcol = mats
             return engine.bsr_matvec(val, bcol, x_full)[:n_pad].astype(cdt)
+        if fmt == "hybrid":
+            val, col, trow, tcol, tval = mats
+            y = engine.hybrid_matvec(val, col, trow, tcol, tval, x_full, n_pad)
+            return y.astype(cdt)
         row, col, val = mats
         prod = val.astype(cdt) * jnp.take(x_full, col).astype(cdt)
         return jax.ops.segment_sum(prod, row, num_segments=n_pad)
@@ -102,7 +109,31 @@ def _make_sharded_ops(
         local = vs.astype(cdt) @ u.astype(cdt)
         return jax.lax.psum(local, axis)  # sync point C
 
-    return Ops(matvec=matvec, dot=dot, gram=gram)
+    def project_out(vs, u, mask):
+        vs_c = vs.astype(cdt) * mask[:, None]  # ONE (m, n_pad) cast per pass
+        # u rounds through the storage dtype first — legacy gram-path policy
+        # semantics (see make_local_ops.project_out).
+        local = vs_c @ u.astype(policy.storage).astype(cdt)
+        coeffs = jax.lax.psum(local, axis)  # sync point C
+        return u - coeffs @ vs_c
+
+    fused_update = None
+    if fused_update_enabled(policy):
+        from ..kernels import ops as kops
+
+        def fused_update(w, v, v_prev, alpha, beta, need_norm=True):
+            u, nrm_sq = kops.lanczos_update(w, v, v_prev, alpha, beta, accum_dtype=cdt)
+            # Only pay the collective when the caller will use the norm
+            # (under reorth the loop recomputes beta post-projection, and an
+            # extra psum per iteration would break the paper's sync budget).
+            if need_norm:
+                nrm_sq = jax.lax.psum(nrm_sq, axis)  # sync point B
+            return u, nrm_sq
+
+    return Ops(
+        matvec=matvec, dot=dot, gram=gram, project_out=project_out,
+        fused_update=fused_update,
+    )
 
 
 def sharded_lanczos(
@@ -194,7 +225,11 @@ def solve_sharded(
             storage_dtype=policy.storage,
         )
     fmt = engine.format
-    row_align = {"ell": engine.tiles.block_r, "bsr": engine.tiles.block_size}.get(fmt, 1)
+    row_align = {
+        "ell": engine.tiles.block_r,
+        "hybrid": engine.tiles.block_r,
+        "bsr": engine.tiles.block_size,
+    }.get(fmt, 1)
     pm = partition_matrix(
         csr, g, dtype=policy.storage, row_align=row_align, with_coo=(fmt == "coo"),
         splits=splits,
@@ -220,6 +255,16 @@ def solve_sharded(
             dtype=policy.storage,
         )
         mats = (bsr_val, bsr_bcol)
+        spmv_meta.update(conv_stats)
+    elif fmt == "hybrid":
+        mats, conv_stats = shard_to_hybrid(
+            csr,
+            pm.splits(),
+            pm.n_pad,
+            dtype=policy.storage,
+            width_cap=max(s.hyb_width for s in engine.stats) if engine.stats else None,
+            row_tile=engine.tiles.block_r,
+        )
         spmv_meta.update(conv_stats)
     else:
         mats = (pm.row, pm.col, pm.val)

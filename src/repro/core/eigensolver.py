@@ -74,7 +74,10 @@ def solve_fixed(
         v1 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype=policy.compute)
 
     t0 = time.perf_counter()
-    lres = lanczos_tridiag(op.bound_matvec(policy), v1, m, policy, reorth=reorth)
+    # Operators that stream host data per step (ChunkedOperator) must run the
+    # Lanczos loop eagerly: see LinearOperator.prefers_jit / lanczos module doc.
+    use_jit = getattr(op, "prefers_jit", True)
+    lres = lanczos_tridiag(op.bound_matvec(policy), v1, m, policy, reorth=reorth, jit=use_jit)
     lres = jax.tree.map(lambda x: x.block_until_ready(), lres)
     t_lanczos = time.perf_counter() - t0
 

@@ -19,11 +19,23 @@ Re-orthogonalization modes:
 The loop body is generic over an ``Ops`` record so the same code runs
 single-device (plain reductions) and multi-device (psum reductions inside
 ``shard_map`` — see ``core/distributed.py``).
+
+Two memory-roofline optimizations ride on the record (beyond-paper):
+
+  * ``fused_update`` — the three-term recurrence + squared norm execute as
+    ONE pass over the n-length vectors through the Pallas kernel in
+    ``kernels/lanczos_update.py`` (policy-gated: compensated policies keep
+    the reference reductions; f64 compute falls back to ``kernels/ref.py``
+    inside the wrapper).  ``REPRO_FUSED_LANCZOS=0`` disables it.
+  * ``project_out`` — the masked re-orthogonalization casts the stored basis
+    to the compute dtype ONCE per pass (coefficients and subtraction reuse
+    the same masked cast) instead of materializing two full (m, n) copies.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Callable, NamedTuple, Optional
 
@@ -32,7 +44,13 @@ import jax.numpy as jnp
 
 from .precision import PrecisionPolicy, compensated_sum
 
-__all__ = ["LanczosResult", "lanczos_tridiag", "make_local_ops", "Ops"]
+__all__ = [
+    "LanczosResult",
+    "lanczos_tridiag",
+    "make_local_ops",
+    "fused_update_enabled",
+    "Ops",
+]
 
 
 class LanczosResult(NamedTuple):
@@ -51,6 +69,23 @@ class Ops:
     matvec: Callable[[jax.Array], jax.Array]  # storage-in, compute-out
     dot: Callable[[jax.Array, jax.Array], jax.Array]  # compute-dtype scalar
     gram: Callable[[jax.Array, jax.Array], jax.Array]  # (m,n)@(n,) -> (m,)
+    # (basis, u, mask) -> u minus its projection onto the masked rows;
+    # None falls back to the legacy gram-based two-cast path.
+    project_out: Optional[Callable] = None
+    # (w, v, v_prev, alpha, beta, need_norm) -> (w - alpha v - beta v_prev,
+    # ||.||^2) in one memory pass; None keeps the separate recurrence + dot.
+    # ``need_norm=False`` tells distributed variants the caller will discard
+    # the norm (reorth recomputes beta), so they must not psum it.
+    fused_update: Optional[Callable] = None
+
+
+def fused_update_enabled(policy: PrecisionPolicy) -> bool:
+    """Policy gate for the fused Pallas update: compensated policies need
+    the compensated reductions for beta, so they keep the reference path;
+    ``REPRO_FUSED_LANCZOS=0`` is the kill switch."""
+    if os.environ.get("REPRO_FUSED_LANCZOS", "1").lower() in ("0", "false", "off"):
+        return False
+    return not policy.compensated
 
 
 def _local_reduce(x: jax.Array, policy: PrecisionPolicy) -> jax.Array:
@@ -59,16 +94,38 @@ def _local_reduce(x: jax.Array, policy: PrecisionPolicy) -> jax.Array:
     return jnp.sum(x)
 
 
-def make_local_ops(matvec: Callable, policy: PrecisionPolicy) -> Ops:
+def make_local_ops(
+    matvec: Callable, policy: PrecisionPolicy, fused: Optional[bool] = None
+) -> Ops:
     """Single-device ops: plain reductions in the compute dtype."""
+    cdt = policy.compute
 
     def dot(a, b):
-        return _local_reduce(a.astype(policy.compute) * b.astype(policy.compute), policy)
+        return _local_reduce(a.astype(cdt) * b.astype(cdt), policy)
 
     def gram(vs, u):
-        return vs.astype(policy.compute) @ u.astype(policy.compute)
+        return vs.astype(cdt) @ u.astype(cdt)
 
-    return Ops(matvec=matvec, dot=dot, gram=gram)
+    def project_out(basis, u, mask):
+        basis_c = basis.astype(cdt) * mask[:, None]  # ONE (m, n) cast, masked rows hot
+        # u rounds through the storage dtype before the coefficient dot —
+        # the same policy semantics the legacy gram path applied (the
+        # fig4 precision ablation measures exactly this rounding).
+        coeffs = basis_c @ u.astype(policy.storage).astype(cdt)
+        return u - coeffs @ basis_c
+
+    use_fused = fused_update_enabled(policy) if fused is None else fused
+    fused_update = None
+    if use_fused:
+        from ..kernels import ops as kops  # lazy: core sits below kernels
+
+        def fused_update(w, v, v_prev, alpha, beta, need_norm=True):
+            return kops.lanczos_update(w, v, v_prev, alpha, beta, accum_dtype=cdt)
+
+    return Ops(
+        matvec=matvec, dot=dot, gram=gram, project_out=project_out,
+        fused_update=fused_update,
+    )
 
 
 def _reorth_mask(m: int, i: jax.Array, mode: str, dtype) -> jax.Array:
@@ -97,7 +154,14 @@ def _lanczos_jit(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: 
     return _lanczos_loop(v1, ops, num_iters, policy, reorth)
 
 
-def _lanczos_loop(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str):
+def _lanczos_loop(
+    v1,
+    ops: Ops,
+    num_iters: int,
+    policy: PrecisionPolicy,
+    reorth: str,
+    host_loop: bool = False,
+):
     m = num_iters
     n = v1.shape[0]
     cdt, sdt = policy.compute, policy.storage
@@ -120,22 +184,47 @@ def _lanczos_loop(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth:
         # --- alpha (line 10): sync point A ---
         alpha = ops.dot(v, u)
         alphas = alphas.at[i].set(alpha)
-        # --- three-term recurrence (line 11) ---
-        u = u - alpha * v - beta_prev * v_prev
+        # --- three-term recurrence (line 11): one fused memory pass when the
+        # policy permits (the kernel also yields ||u||^2 for free) ---
+        nrm_sq = None
+        if ops.fused_update is not None:
+            u, fused_nrm = ops.fused_update(
+                u, v, v_prev, alpha, beta_prev, need_norm=(reorth == "none")
+            )
+            if reorth == "none":
+                nrm_sq = fused_nrm
+        else:
+            u = u - alpha * v - beta_prev * v_prev
         # --- re-orthogonalization (lines 12-21): sync point C ---
         if reorth != "none":
             mask = _reorth_mask(m, i, reorth, cdt)
             passes = 2 if reorth == "full2" else 1  # CGS2: "twice is enough"
             for _ in range(passes):
-                coeffs = ops.gram(basis, u.astype(sdt)) * mask  # (m,)
-                u = u - coeffs @ basis.astype(cdt)
+                if ops.project_out is not None:
+                    u = ops.project_out(basis, u, mask)
+                else:
+                    coeffs = ops.gram(basis, u.astype(sdt)) * mask  # (m,)
+                    u = u - coeffs @ basis.astype(cdt)
         # --- beta (line 6, next iteration): sync point B ---
-        beta = jnp.sqrt(jnp.maximum(ops.dot(u, u), 0.0))
+        if nrm_sq is not None:
+            beta = jnp.sqrt(jnp.maximum(nrm_sq.astype(cdt), 0.0))
+        else:
+            beta = jnp.sqrt(jnp.maximum(ops.dot(u, u), 0.0))
         betas = betas.at[i].set(beta)
         return (basis, alphas, betas, v, u, beta)
 
     init = (basis0, alphas0, betas0, jnp.zeros((n,), cdt), jnp.zeros((n,), cdt), jnp.zeros((), cdt))
-    basis, alphas, betas, _, _, _ = jax.lax.fori_loop(0, m, body, init)
+    if host_loop:
+        # Eager Python loop: required by operators whose matvec must execute
+        # host-side per step (ChunkedOperator streams chunks through the
+        # device; tracing it would bake every chunk into one executable and
+        # defeat the bounded-residency staging).
+        carry = init
+        for i in range(m):
+            carry = body(i, carry)
+        basis, alphas, betas = carry[:3]
+    else:
+        basis, alphas, betas, _, _, _ = jax.lax.fori_loop(0, m, body, init)
     return LanczosResult(
         alpha=alphas, beta=betas[: m - 1], basis=basis, beta_last=betas[m - 1]
     )
@@ -150,8 +239,14 @@ def lanczos_tridiag(
     ops: Optional[Ops] = None,
     jit: bool = True,
 ) -> LanczosResult:
-    """Run ``num_iters`` Lanczos steps. See module docstring."""
+    """Run ``num_iters`` Lanczos steps. See module docstring.
+
+    ``jit=False`` runs an eager host loop (no ``fori_loop``), letting the
+    matvec perform host-side work per iteration — the out-of-core engine's
+    mode (see :class:`~repro.core.operators.ChunkedOperator`).
+    """
     policy = policy.effective()
     ops = ops or make_local_ops(matvec, policy)
-    fn = _lanczos_jit if jit else _lanczos_loop
-    return fn(v1, ops, num_iters, policy, reorth)
+    if jit:
+        return _lanczos_jit(v1, ops, num_iters, policy, reorth)
+    return _lanczos_loop(v1, ops, num_iters, policy, reorth, host_loop=True)

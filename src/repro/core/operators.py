@@ -32,6 +32,7 @@ from ..sparse.formats import (
     to_device_bsr,
     to_device_coo,
     to_device_ell,
+    to_device_hybrid,
 )
 from .precision import PrecisionPolicy
 
@@ -42,8 +43,35 @@ __all__ = [
     "ChunkedOperator",
     "CallableOperator",
     "HvpOperator",
+    "chunk_row_bounds",
     "make_operator",
 ]
+
+
+def chunk_row_bounds(indptr: np.ndarray, n: int, chunk_nnz: int) -> list:
+    """Row-contiguous chunk bounds holding <= ``chunk_nnz`` non-zeros each
+    (single rows larger than the budget get a chunk of their own).  Shared
+    by :class:`ChunkedOperator` and the frontend's staging-footprint
+    estimate so both reason about the same chunking."""
+    starts = [0]
+    while starts[-1] < n:
+        r0 = starts[-1]
+        r1 = int(np.searchsorted(indptr, indptr[r0] + chunk_nnz, side="right")) - 1
+        starts.append(min(n, max(r1, r0 + 1)))
+    return list(zip(starts[:-1], starts[1:]))
+
+
+def chunk_rows_pad(rows: int, block_r: int, storage_dtype) -> int:
+    """Padded row count of one staged ELL chunk: rows round up to the chunk's
+    own row tile — the kernel's ``block_r`` capped at the next power of two
+    of the row count (floored at the TPU sublane minimum), so a chunk with
+    FEW rows (e.g. a hub row chunked alone) never allocates the full global
+    row tile times its huge width.  ``ell_matvec`` adapts its row tile down
+    to whatever divides this."""
+    min_r = 16 if jnp.dtype(storage_dtype).itemsize == 2 else 8
+    np2 = 1 << max(0, max(rows, min_r) - 1).bit_length()  # next pow2 >= rows
+    tile = max(min_r, min(block_r, np2))
+    return -(-rows // tile) * tile
 
 
 class LinearOperator:
@@ -119,15 +147,29 @@ class ChunkedOperator(LinearOperator):
     fixed-size chunks to the device and accumulates partial products.
 
     This reproduces the paper's unified-memory out-of-core mode: at any moment
-    only ~``chunk_nnz`` non-zeros are device-resident.  On a real TPU the
+    at most ``stage_depth + 1`` chunks are device-resident.  On a real TPU the
     staging is host-DRAM -> HBM DMA; here the same code path exercises the
-    chunking logic.
+    chunking and double-buffering logic.
+
+    Staging is double-buffered: chunks are *pre-pinned* once at construction
+    (host buffers already in the on-device storage dtype, so the per-matvec
+    path is a pure ``jax.device_put`` transfer — no repeated dtype/layout
+    conversion), and the transfer of chunk ``i+1 .. i+stage_depth`` is issued
+    asynchronously while chunk ``i``'s partial SpMV is in flight.  Transfer /
+    conversion / residency counters live in ``self.staging`` (surfaced by
+    ``eigsh`` in ``EigenResult.partition``).
 
     With an ELL-format :class:`SpmvEngine` attached, chunks are row ranges
-    staged as uniform-shape ELL tiles and the partial SpMV runs the Pallas
-    kernel (per-chunk ELL staging); otherwise the COO ``segment_sum``
-    reference path streams nnz-sized slices.
+    staged as per-chunk-width ELL tiles (a hub row inflates only its own
+    chunk's padding, not every chunk's) and the partial SpMV runs the Pallas
+    kernel; otherwise the COO ``segment_sum`` reference path streams
+    nnz-sized slices.
     """
+
+    # The Lanczos loop must stay a host loop for this operator: tracing the
+    # chunk stream would bake every chunk into one executable as constants,
+    # defeating the bounded-residency staging (see lanczos_tridiag(jit=...)).
+    prefers_jit = False
 
     def __init__(
         self,
@@ -135,16 +177,19 @@ class ChunkedOperator(LinearOperator):
         chunk_nnz: int = 1 << 20,
         dtype=jnp.float32,
         engine: Optional[SpmvEngine] = None,
+        stage_depth: int = 1,
     ):
         self.n = csr.n
         self._dtype = dtype
         self.engine = engine
+        self.stage_depth = max(0, int(stage_depth))
         self.spmv_format = engine.format if engine is not None else "coo"
-        if self.spmv_format == "bsr":
+        if self.spmv_format in ("bsr", "hybrid"):
             raise ValueError(
-                "ChunkedOperator stages chunks as COO or ELL; per-chunk BSR is "
-                "not supported (pick format='ell' or 'coo')"
+                "ChunkedOperator stages chunks as COO or ELL; per-chunk "
+                f"{self.spmv_format.upper()} is not supported (pick format='ell' or 'coo')"
             )
+        self.staging = {"conversions": 0, "transfers": 0, "max_resident": 0}
         if self.spmv_format == "ell":
             self._init_ell_chunks(csr, chunk_nnz, dtype, engine)
         else:
@@ -152,6 +197,7 @@ class ChunkedOperator(LinearOperator):
 
     def _init_coo_chunks(self, csr: CSR, chunk_nnz: int, dtype):
         row = np.repeat(np.arange(csr.n, dtype=np.int32), csr.row_nnz())
+        np_dtype = np.dtype(jnp.dtype(dtype))  # bf16 host buffers via ml_dtypes
         self._chunks = []
         nnz = csr.nnz
         for lo in range(0, nnz, chunk_nnz):
@@ -161,11 +207,10 @@ class ChunkedOperator(LinearOperator):
                 (
                     np.pad(row[lo:hi], (0, pad)),
                     np.pad(csr.indices[lo:hi], (0, pad)),
-                    np.pad(csr.data[lo:hi], (0, pad)).astype(
-                        np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32
-                    ),
+                    np.pad(csr.data[lo:hi], (0, pad)).astype(np_dtype),
                 )
             )
+            self.staging["conversions"] += 1  # host layout/dtype prep: once
         self.num_chunks = len(self._chunks)
 
         # One jitted partial-SpMV per instance, keyed on the (static) accum
@@ -178,40 +223,42 @@ class ChunkedOperator(LinearOperator):
         self._partial_spmv = _partial_spmv
 
     def _init_ell_chunks(self, csr: CSR, chunk_nnz: int, dtype, engine: SpmvEngine):
-        # Row-contiguous chunks sized so each holds <= chunk_nnz non-zeros
-        # (single rows larger than the budget get a chunk of their own).
         indptr, n = csr.indptr, csr.n
-        starts = [0]
-        while starts[-1] < n:
-            r0 = starts[-1]
-            r1 = int(np.searchsorted(indptr, indptr[r0] + chunk_nnz, side="right")) - 1
-            starts.append(min(n, max(r1, r0 + 1)))
-        bounds = list(zip(starts[:-1], starts[1:]))
+        bounds = chunk_row_bounds(indptr, n, chunk_nnz)
 
         row_nnz = csr.row_nnz()
-        row_tile = engine.tiles.block_r
-        rows_max = max(r1 - r0 for r0, r1 in bounds)
-        rows_pad = -(-rows_max // row_tile) * row_tile
-        width = int(max(1, row_nnz.max()))
-        width = -(-width // 128) * 128
-        np_dtype = np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32
+        np_dtype = np.dtype(jnp.dtype(dtype))  # bf16 host buffers via ml_dtypes
 
         self._chunks = []
+        self._r0s = []
+        n_out_pad = 0
         for r0, r1 in bounds:
             lo, hi = int(indptr[r0]), int(indptr[r1])
             local_nnz = row_nnz[r0:r1]
+            # Per-chunk width (128-lane aligned) AND per-chunk row padding:
+            # a hub row pays for its own chunk only — neither its width nor
+            # the global row tile inflates any other chunk, and a few-row
+            # hub chunk never allocates block_r x hub_width zeros.
+            width = int(max(1, local_nnz.max() if local_nnz.size else 1))
+            width = -(-width // 128) * 128
+            rows_pad = chunk_rows_pad(r1 - r0, engine.tiles.block_r, dtype)
             rix = np.repeat(np.arange(r1 - r0), local_nnz)
             pos = np.arange(hi - lo) - np.repeat(indptr[r0:r1] - lo, local_nnz)
             val = np.zeros((rows_pad, width), dtype=np_dtype)
             col = np.zeros((rows_pad, width), dtype=np.int32)
             val[rix, pos] = csr.data[lo:hi]
             col[rix, pos] = csr.indices[lo:hi]
-            self._chunks.append((r0, val, col))
+            self._chunks.append((val, col))
+            self._r0s.append(r0)
+            n_out_pad = max(n_out_pad, r0 + rows_pad)
+            self.staging["conversions"] += 1  # host layout/dtype prep: once
         self.num_chunks = len(self._chunks)
-        self._n_out_pad = max(r0 for r0, _, _ in self._chunks) + rows_pad
+        self._n_out_pad = n_out_pad
+        self.padded_slots = sum(v.size for v, _ in self._chunks)
 
         # Jitted per-chunk kernel SpMV; static over the engine (hashable) so a
-        # different accum dtype retraces once, not per chunk.
+        # different accum dtype retraces once per distinct chunk width, not
+        # per chunk per call.
         @partial(jax.jit, static_argnames=("eng",))
         def _partial_ell(val, col, x, y, r0, *, eng):
             yk = eng.ell_matvec(val, col, x).astype(y.dtype)
@@ -219,6 +266,25 @@ class ChunkedOperator(LinearOperator):
             return jax.lax.dynamic_update_slice(y, seg + yk, (r0,))
 
         self._partial_ell = _partial_ell
+
+    def _stream(self, consume):
+        """Double-buffered chunk stream: stage (device_put) up to
+        ``stage_depth`` chunks ahead of the one being consumed; references
+        are dropped as soon as a chunk's partial SpMV is dispatched, so at
+        most ``stage_depth + 1`` chunks are device-resident."""
+        staged = {}
+
+        def stage(j):
+            if j < self.num_chunks and j not in staged:
+                staged[j] = tuple(jax.device_put(a) for a in self._chunks[j])
+                self.staging["transfers"] += 1
+
+        for i in range(self.num_chunks):
+            stage(i)
+            for j in range(i + 1, min(i + 1 + self.stage_depth, self.num_chunks)):
+                stage(j)  # issued while chunk i's compute is in flight
+            self.staging["max_resident"] = max(self.staging["max_resident"], len(staged))
+            consume(i, staged.pop(i))
 
     def matvec(self, x, accum_dtype=None):
         acc = jnp.dtype(accum_dtype or self._dtype)
@@ -228,20 +294,24 @@ class ChunkedOperator(LinearOperator):
             eng = self.engine
             if jnp.dtype(eng.accum_dtype) != acc:
                 eng = _dc.replace(eng, accum_dtype=acc)
-            y = jnp.zeros((self._n_out_pad,), acc)
-            for r0, val, col in self._chunks:  # host loop = the UM page stream
-                y = self._partial_ell(
-                    jnp.asarray(val, dtype=self._dtype), jnp.asarray(col), x, y,
-                    jnp.asarray(r0, jnp.int32), eng=eng,
+            y = [jnp.zeros((self._n_out_pad,), acc)]
+
+            def consume(i, arrs):
+                val, col = arrs
+                y[0] = self._partial_ell(
+                    val, col, x, y[0], jnp.asarray(self._r0s[i], jnp.int32), eng=eng
                 )
-            return y[: self.n]
-        y = jnp.zeros((self.n,), acc)
-        for row, col, val in self._chunks:  # host loop = the UM page stream
-            y = self._partial_spmv(
-                jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype=self._dtype), x, y,
-                acc=acc,
-            )
-        return y
+
+            self._stream(consume)
+            return y[0][: self.n]
+        y = [jnp.zeros((self.n,), acc)]
+
+        def consume(i, arrs):
+            row, col, val = arrs
+            y[0] = self._partial_spmv(row, col, val, x, y[0], acc=acc)
+
+        self._stream(consume)
+        return y[0]
 
 
 @dataclasses.dataclass
@@ -335,6 +405,13 @@ def make_operator(
             )
         elif engine.format == "bsr":
             mat = to_device_bsr(csr, block_size=engine.tiles.block_size, dtype=dtype)
+        elif engine.format == "hybrid":
+            # Reuse the cap the selection statistics were computed with, so
+            # the built layout matches the overhead the selector accepted.
+            cap = max(s.hyb_width for s in engine.stats) if engine.stats else None
+            mat = to_device_hybrid(
+                csr, dtype=dtype, width_cap=cap, row_tile=engine.tiles.block_r
+            )
         else:
             mat = to_device_coo(csr, dtype=dtype)
         return SparseOperator(mat, impl="engine", engine=engine)

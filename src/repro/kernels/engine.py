@@ -23,17 +23,30 @@ the host CSR:
     ``block_fill >= BSR_FILL_FACTOR / BS`` (factor 4 => half-dense blocks at
     BS=8).
 
-Tile parameters come from a small static table keyed on the shard shape and
-storage dtype — the first step toward the ROADMAP autotuner — overridable via
-``REPRO_SPMV_TILES="block_r,block_w[,block_size]"`` or per-call arguments.
+A fourth format, ``hybrid``, is the hub-row split: ELL width is capped at a
+quantile of the row lengths and the overflow of the few hub rows spills into
+a COO tail (``segment_sum``).  Power-law matrices whose max row blows the ELL
+bound still run the Pallas kernel for the bounded bulk of their non-zeros
+(``hyb_overhead`` / ``hyb_tail_frac`` in :class:`SpmvStats` drive the choice).
+
+Tile parameters come from the static table (``select_tiles``) by default, or
+from the **measured autotuner** (:func:`tuned_tiles`) when
+``REPRO_SPMV_TUNE=1``: a small candidate grid is timed on probe SpMVs for the
+actual (shape-bucket, dtype, format), memoized in-process and persisted to a
+JSON cache (``REPRO_SPMV_TUNE_CACHE``).  The static table remains the prior
+and the cold-start fallback, and ``REPRO_SPMV_TILES`` pins tiles outright;
+the decision's provenance ("table" | "tuned" | "override") is surfaced in
+``partition["spmv"]``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import time
 import warnings
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,22 +55,30 @@ import numpy as np
 __all__ = [
     "FORMATS",
     "TileConfig",
+    "TileTuner",
     "SpmvStats",
     "SpmvEngine",
     "matrix_stats",
     "shard_stats",
     "choose_format",
     "select_tiles",
+    "tuned_tiles",
+    "get_tuner",
     "make_engine",
 ]
 
-FORMATS = ("coo", "ell", "bsr")
+FORMATS = ("coo", "ell", "bsr", "hybrid")
 
 # ELL accepted while padded slots <= ELL_MAX_OVERHEAD * nnz.
 ELL_MAX_OVERHEAD = 3.0
 # BSR accepted while block_fill >= BSR_FILL_FACTOR / block_size.
 BSR_FILL_FACTOR = 4.0
 DEFAULT_BLOCK_SIZE = 8
+# Hybrid ELL+COO: cap the ELL width at this quantile of the row lengths...
+HYBRID_QUANTILE = 0.95
+# ...and accept while the spilled tail stays a minority of the nnz (the
+# kernel must do the bulk of the work for the split to beat plain COO).
+HYBRID_MAX_TAIL = 0.6
 
 
 def _env_float(name: str, default: float) -> float:
@@ -65,6 +86,20 @@ def _env_float(name: str, default: float) -> float:
         return float(os.environ[name])
     except (KeyError, ValueError):
         return default
+
+
+def ell_overhead_bound() -> float:
+    """The effective ELL padding bound (env-overridable) — the single parse
+    every consumer of ``REPRO_SPMV_ELL_OVERHEAD`` shares."""
+    return _env_float("REPRO_SPMV_ELL_OVERHEAD", ELL_MAX_OVERHEAD)
+
+
+def _fit_tile(tile: int, extent: int) -> int:
+    """Largest tile <= ``tile`` that divides ``extent`` (halving search)."""
+    t = max(1, min(tile, extent))
+    while extent % t:
+        t //= 2
+    return t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +171,235 @@ def select_tiles(
     return TileConfig(block_r=block_r, block_w=block_w, block_size=block_size)
 
 
+# ------------------------------ tile autotuner -------------------------------
+
+DEFAULT_TUNE_CACHE = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "spmv_tune.json"
+)
+# Formats whose kernel exposes tile knobs (the BSR kernel's tiling is fixed by
+# its block size, so only the ELL-family grids are tunable).
+_TUNABLE_FORMATS = ("ell", "hybrid")
+
+
+def tune_enabled() -> bool:
+    """Measured tuning is opt-in: the static table is the default behavior."""
+    return os.environ.get("REPRO_SPMV_TUNE", "0").lower() in ("1", "true", "on", "yes")
+
+
+class TileTuner:
+    """Measured tile cache: in-process memo + persistent JSON.
+
+    One entry per (format, dtype, shape-bucket, execution mode) key; the value
+    is the fastest :class:`TileConfig` of the measured candidate grid plus the
+    raw per-candidate timings (kept for postmortems).  The JSON survives
+    processes (CI caches it between runs); a missing/corrupt file degrades to
+    an empty cache, never an error.
+    """
+
+    def __init__(self, cache_path: Optional[str] = None):
+        self.cache_path = cache_path or DEFAULT_TUNE_CACHE
+        self._mem: Dict[str, TileConfig] = {}
+        self._meta: Dict[str, dict] = {}
+        self._loaded = False
+        self.measure_count = 0  # tune passes actually run (tests assert on it)
+
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        try:
+            with open(self.cache_path) as f:
+                payload = json.load(f)
+            for key, rec in payload.get("entries", {}).items():
+                self._mem[key] = TileConfig(
+                    block_r=int(rec["block_r"]),
+                    block_w=int(rec["block_w"]),
+                    block_size=int(rec.get("block_size", DEFAULT_BLOCK_SIZE)),
+                )
+                self._meta[key] = rec
+        except (OSError, ValueError, KeyError, TypeError):
+            pass  # absent or corrupt cache = cold start
+
+    def lookup(self, key: str) -> Optional[TileConfig]:
+        self._load()
+        return self._mem.get(key)
+
+    def record(self, key: str, tiles: TileConfig, timings: Dict[str, float]) -> None:
+        self._load()
+        self._mem[key] = tiles
+        self._meta[key] = {
+            "block_r": tiles.block_r,
+            "block_w": tiles.block_w,
+            "block_size": tiles.block_size,
+            "best_us": min(timings.values()) if timings else None,
+            "candidates_us": timings,
+        }
+        try:
+            os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)), exist_ok=True)
+            tmp = self.cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"version": 1, "entries": self._meta}, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        except OSError:
+            pass  # read-only cache dir: keep the in-process memo only
+
+
+_TUNER: Optional[TileTuner] = None
+
+
+def get_tuner() -> TileTuner:
+    """Process-wide tuner bound to the current ``REPRO_SPMV_TUNE_CACHE``."""
+    global _TUNER
+    path = os.environ.get("REPRO_SPMV_TUNE_CACHE") or DEFAULT_TUNE_CACHE
+    if _TUNER is None or _TUNER.cache_path != path:
+        _TUNER = TileTuner(path)
+    return _TUNER
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def _tune_key(fmt: str, dtype, n_rows: int, width: int, interpret: bool) -> str:
+    """Shape-bucketed cache key: tiles depend on the size class, not the
+    exact shard shape, so nearby problems share one measurement."""
+    mode = "interp" if interpret else "mosaic"
+    return f"{fmt}|{jnp.dtype(dtype).name}|r{_next_pow2(n_rows)}|w{_next_pow2(width)}|{mode}"
+
+
+def _candidate_tiles(
+    prior: TileConfig, dtype, interpret: bool, block_size: int
+) -> Tuple[TileConfig, ...]:
+    """Small grid around the static-table prior (the prior is always in it,
+    so a tuned choice can never be worse than the table on the probe)."""
+    budget = int(os.environ.get("REPRO_SPMV_TUNE_BUDGET", "6"))
+    min_r = 16 if jnp.dtype(dtype).itemsize == 2 else 8
+    if interpret:
+        # The interpreter pays ~ms per grid step: only few-large-tile layouts
+        # are viable, so the grid just probes the step-count tradeoff.
+        rows = (prior.block_r, prior.block_r * 2, max(min_r, prior.block_r // 2))
+        widths = (prior.block_w,)
+    else:
+        rows = (prior.block_r, prior.block_r * 2, max(min_r, prior.block_r // 2))
+        widths = (prior.block_w, max(128, prior.block_w // 2), min(2048, prior.block_w * 2))
+    out = []
+    for r in rows:
+        for w in widths:
+            cfg = TileConfig(block_r=r, block_w=w, block_size=block_size)
+            if cfg not in out:
+                out.append(cfg)
+    return tuple(out[: max(1, budget)])
+
+
+def _measure_ell_tiles(
+    n_rows: int,
+    width: int,
+    dtype,
+    candidates: Sequence[TileConfig],
+    interpret: bool,
+    reps: int = 3,
+) -> Dict[str, float]:
+    """Median wall time (us) of probe ELL SpMVs per candidate tile config.
+
+    The probe is a synthetic uniform ELL at the *layout* width the caller's
+    conversions would build (callers pass the aligned width, see
+    ``make_engine``), so the width tile each candidate is timed with is the
+    one ``ell_matvec``'s divisibility clamp would actually run — the
+    recorded key holds that runtime-adapted tile, never an unmeasured one.
+    Rows are pow2-bucketed and capped so a tune pass stays sub-second-ish
+    per candidate in interpret mode; the result is a *relative* ranking for
+    this (shape, dtype, mode), not an absolute projection.
+    """
+    from .spmv_ell import spmv_ell_kernel_call
+
+    # Probe at the problem's own row bucket: candidates whose block_r exceeds
+    # it are skipped below (building the layout at such a tile would inflate
+    # the real padded rows — a cost a bigger probe could never see).
+    min_br = min(c.block_r for c in candidates)
+    rows_cap = 1 << 12 if interpret else 1 << 16
+    rows = min(max(_next_pow2(n_rows), min_br), max(rows_cap, min_br))
+    # Probe width: the real (already-aligned) layout width, capped for cost —
+    # the cap rounds DOWN to the width's own alignment so candidate tiles
+    # divide the probe exactly when they divide the real layout.
+    width = max(8, width)
+    width_cap = 1 << 11
+    if width <= width_cap:
+        width_b = width
+    else:
+        align = 128 if width % 128 == 0 else 8
+        width_b = max(align, (width_cap // align) * align)
+    rng = np.random.default_rng(0)
+    val = jnp.asarray(rng.standard_normal((rows, width_b)), dtype=dtype)
+    col = jnp.asarray(rng.integers(0, rows, (rows, width_b)), jnp.int32)
+    x = jnp.asarray(rng.standard_normal(rows), dtype=dtype)
+    # Dedup on the runtime-adapted tile: candidates differing only in a
+    # block_w that _fit_tile collapses to the same width are one measurement.
+    fitted = []
+    for cfg in candidates:
+        if rows % cfg.block_r:
+            continue
+        bw_real = _fit_tile(cfg.block_w, width)  # what ell_matvec would run
+        if (cfg.block_r, bw_real) not in fitted:
+            fitted.append((cfg.block_r, bw_real))
+    timings: Dict[str, float] = {}
+    for block_r, bw_real in fitted:
+        bw_probe = _fit_tile(bw_real, width_b)
+        acc = jnp.float32
+
+        def run(br=block_r, bw=bw_probe):
+            return spmv_ell_kernel_call(
+                val, col, x, block_r=br, block_w=bw, accum_dtype=acc, interpret=interpret
+            ).block_until_ready()
+
+        run()  # compile/trace outside the timed reps
+        ts = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        timings[f"{block_r}x{bw_real}"] = float(np.median(ts) * 1e6)
+    return timings
+
+
+def tuned_tiles(
+    n_rows: int,
+    width: int,
+    dtype=jnp.float32,
+    format: str = "ell",
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    interpret: bool = False,
+) -> Tuple[TileConfig, str]:
+    """Resolve kernel tiles with provenance: "table" | "tuned" | "override".
+
+    Resolution order: the ``REPRO_SPMV_TILES`` pin wins outright ("override");
+    otherwise the static table is the prior, and — only when
+    ``REPRO_SPMV_TUNE=1`` and the format has tunable tiles — a measured pass
+    over a small candidate grid refines it ("tuned"), cached under
+    ``REPRO_SPMV_TUNE_CACHE`` so each (shape-bucket, dtype, format, mode) is
+    measured at most once per cache lifetime.
+    """
+    if os.environ.get("REPRO_SPMV_TILES"):
+        return select_tiles(n_rows, width, dtype, block_size, interpret), "override"
+    prior = select_tiles(n_rows, width, dtype, block_size, interpret)
+    if not tune_enabled() or format not in _TUNABLE_FORMATS or n_rows <= 0 or width <= 0:
+        return prior, "table"
+    tuner = get_tuner()
+    key = _tune_key(format, dtype, n_rows, width, interpret)
+    hit = tuner.lookup(key)
+    if hit is not None:
+        return dataclasses.replace(hit, block_size=block_size), "tuned"
+    candidates = _candidate_tiles(prior, dtype, interpret, block_size)
+    timings = _measure_ell_tiles(n_rows, width, dtype, candidates, interpret)
+    tuner.measure_count += 1
+    if not timings:  # no candidate survived shape constraints: keep the prior
+        return prior, "table"
+    best_name = min(timings, key=timings.get)
+    br, bw = (int(p) for p in best_name.split("x"))
+    best = TileConfig(block_r=br, block_w=bw, block_size=block_size)
+    tuner.record(key, best, timings)
+    return best, "tuned"
+
+
 @dataclasses.dataclass(frozen=True)
 class SpmvStats:
     """Cheap per-matrix (or per-shard) layout statistics driving selection."""
@@ -148,9 +412,29 @@ class SpmvStats:
     block_size: int
     n_blocks: int  # touched BS x BS blocks
     block_fill: float  # nnz / (n_blocks * BS^2)
+    # Hybrid ELL+COO split: ELL width capped at the HYBRID_QUANTILE of row
+    # lengths, hub overflow spilled to a COO tail.
+    hyb_width: int = 0  # the capped ELL width
+    hyb_tail_nnz: int = 0  # nnz spilled past the cap
+    hyb_overhead: float = 0.0  # (capped ELL slots + tail) / nnz
+    hyb_tail_frac: float = 0.0  # tail nnz / nnz
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def hybrid_quantile() -> float:
+    return _env_float("REPRO_SPMV_HYBRID_Q", HYBRID_QUANTILE)
+
+
+def hybrid_width_cap(row_nnz: np.ndarray, quantile: Optional[float] = None) -> int:
+    """The hybrid split's ELL width: the given quantile of the row lengths
+    (hub rows above it spill their overflow into the COO tail)."""
+    if not row_nnz.size or not int(row_nnz.max()):
+        return 0
+    q = hybrid_quantile() if quantile is None else quantile
+    cap = int(np.ceil(np.quantile(row_nnz, min(max(q, 0.0), 1.0))))
+    return max(1, min(cap, int(row_nnz.max())))
 
 
 def _stats_from_triplets(
@@ -160,12 +444,14 @@ def _stats_from_triplets(
     n_rows: int,
     block_size: int,
     width: Optional[int] = None,
+    hyb_width: Optional[int] = None,
 ) -> SpmvStats:
     """``rows``/``cols`` may be None to skip the (sort-heavy) block census —
     used when the format is forced and block density is never consulted.
     ``width`` overrides the ELL width used for the overhead estimate (shards
     of a distributed solve all pay the *global* max row width, since
-    shard_map forces one shared ELL shape)."""
+    shard_map forces one shared ELL shape); ``hyb_width`` likewise overrides
+    the hybrid cap (shards share one capped width too)."""
     nnz = int(row_nnz.sum())
     max_row = int(row_nnz.max()) if row_nnz.size else 0
     mean_row = nnz / max(1, n_rows)
@@ -180,6 +466,8 @@ def _stats_from_triplets(
     # No census (skipped or empty matrix) must read as "no block structure",
     # never as infinite fill — otherwise auto-selection would pick BSR.
     fill = nnz / (n_blocks * bs * bs) if n_blocks else 0.0
+    cap = hybrid_width_cap(row_nnz) if hyb_width is None else int(hyb_width)
+    tail = int(np.maximum(row_nnz - cap, 0).sum()) if (nnz and cap) else 0
     return SpmvStats(
         n_rows=n_rows,
         nnz=nnz,
@@ -189,6 +477,10 @@ def _stats_from_triplets(
         block_size=bs,
         n_blocks=n_blocks,
         block_fill=fill,
+        hyb_width=cap,
+        hyb_tail_nnz=tail,
+        hyb_overhead=(cap * n_rows + tail) / max(1, nnz),
+        hyb_tail_frac=tail / max(1, nnz),
     )
 
 
@@ -224,6 +516,7 @@ def shard_stats(
     out = []
     row_nnz = csr.row_nnz()
     global_width = int(row_nnz.max()) if row_nnz.size else 0
+    global_cap = hybrid_width_cap(row_nnz)  # hybrid too shares one shape
     # Every shard is padded to the SAME row count (n_pad ~ max shard rows) and
     # the same width, so each shard's overhead is charged at that uniform
     # shape — a shard with few dense rows still allocates max_rows x width.
@@ -245,7 +538,13 @@ def shard_stats(
             rows = cols = None
         out.append(
             _stats_from_triplets(
-                local_nnz, rows, cols, max_rows, block_size, width=global_width
+                local_nnz,
+                rows,
+                cols,
+                max_rows,
+                block_size,
+                width=global_width,
+                hyb_width=global_cap,
             )
         )
     return tuple(out)
@@ -271,16 +570,13 @@ def choose_format(
     """
     if isinstance(stats, SpmvStats):
         stats = (stats,)
-    ell_max = (
-        ell_max_overhead
-        if ell_max_overhead is not None
-        else _env_float("REPRO_SPMV_ELL_OVERHEAD", ELL_MAX_OVERHEAD)
-    )
+    ell_max = ell_max_overhead if ell_max_overhead is not None else ell_overhead_bound()
     bsr_factor = (
         bsr_fill_factor
         if bsr_fill_factor is not None
         else _env_float("REPRO_SPMV_BSR_FILL", BSR_FILL_FACTOR)
     )
+    tail_max = _env_float("REPRO_SPMV_HYBRID_TAIL", HYBRID_MAX_TAIL)
     bsr_ok = "bsr" in allowed and all(
         s.block_fill >= bsr_factor / s.block_size for s in stats
     )
@@ -289,23 +585,43 @@ def choose_format(
     ell_ok = "ell" in allowed and all(s.ell_overhead <= ell_max for s in stats)
     if ell_ok:
         return "ell"
+    # Hub-row split: the quantile-capped ELL part must respect the same
+    # padding bound plain ELL failed (a *memory* bound: per shard), and the
+    # spilled tail must stay a minority of the nnz (a *throughput* ratio:
+    # judged on the aggregate — nnz-balanced splits concentrate hubs into
+    # few-row shards whose local tail share is skewed by construction).
+    # Otherwise segment_sum is doing the work anyway and plain COO is the
+    # honest choice.
+    tail_frac = sum(s.hyb_tail_nnz for s in stats) / max(1, sum(s.nnz for s in stats))
+    hyb_ok = (
+        "hybrid" in allowed
+        and tail_frac <= tail_max
+        and all(s.hyb_overhead <= ell_max for s in stats)
+    )
+    if hyb_ok:
+        return "hybrid"
     if "coo" in allowed:
         return "coo"
-    if "ell" in allowed:
-        # Kernel-only paths (distributed): ELL is always *correct*; the bound
-        # above only optimizes padding, so fall back to it rather than fail —
-        # but loudly: padded ELL costs O(n * max_row_nnz) memory, which on
-        # hub-dominated (power-law) matrices can dwarf the O(nnz) COO path.
-        worst = max(s.ell_overhead for s in stats)
+    for fmt in ("hybrid", "ell"):
+        if fmt not in allowed:
+            continue
+        # Kernel-only paths (distributed): ELL/hybrid are always *correct*;
+        # the bounds above only optimize padding, so fall back rather than
+        # fail — but loudly: padded ELL costs O(n * max_row_nnz) memory,
+        # which on hub-dominated (power-law) matrices can dwarf the O(nnz)
+        # COO path (the hybrid split bounds that, hence it is preferred).
+        worst = max(
+            (s.hyb_overhead if fmt == "hybrid" else s.ell_overhead) for s in stats
+        )
         warnings.warn(
             f"SpMV auto-selection is restricted to kernel formats here and "
-            f"fell back to ELL despite a {worst:.0f}x padding overhead "
-            f"(bound: {ell_max:.1f}x); for hub-dominated matrices consider "
-            f"format='coo' (segment-sum reference path) or a larger "
+            f"fell back to {fmt.upper()} despite a {worst:.0f}x padding "
+            f"overhead (bound: {ell_max:.1f}x); for hub-dominated matrices "
+            f"consider format='coo' (segment-sum reference path) or a larger "
             f"REPRO_SPMV_ELL_OVERHEAD",
             stacklevel=2,
         )
-        return "ell"
+        return fmt
     raise ValueError(f"no admissible SpMV format among {tuple(allowed)}")
 
 
@@ -332,6 +648,7 @@ class SpmvEngine:
     interpret: bool = True
     requested: str = "auto"
     stats: Optional[Tuple[SpmvStats, ...]] = None
+    tiles_from: str = "table"  # "table" | "tuned" | "override"
 
     def __post_init__(self):
         if self.format not in FORMATS:
@@ -353,16 +670,17 @@ class SpmvEngine:
             return spmv_ell_ref(val, col, x, accum_dtype=acc)
         from .spmv_ell import spmv_ell_kernel_call
 
-        # Largest width tile <= the configured one that divides the (128-
-        # aligned) ELL width, so the kernel grid always divides evenly.
-        block_w = max(1, min(self.tiles.block_w, val.shape[1]))
-        while val.shape[1] % block_w:
-            block_w //= 2
+        # Largest tiles <= the configured ones that divide the padded ELL
+        # shape, so the kernel grid always divides evenly (per-chunk layouts
+        # pad rows to their own small tile rather than the global block_r —
+        # see ChunkedOperator — hence the row adaptation too).
+        block_r = _fit_tile(self.tiles.block_r, val.shape[0])
+        block_w = _fit_tile(self.tiles.block_w, val.shape[1])
         return spmv_ell_kernel_call(
             val,
             col,
             x,
-            block_r=self.tiles.block_r,
+            block_r=block_r,
             block_w=block_w,
             accum_dtype=acc,
             interpret=self.interpret,
@@ -386,11 +704,31 @@ class SpmvEngine:
             val, bcol, x, accum_dtype=acc, interpret=self.interpret
         )
 
+    def hybrid_matvec(
+        self,
+        val: jax.Array,
+        col: jax.Array,
+        tail_row: jax.Array,
+        tail_col: jax.Array,
+        tail_val: jax.Array,
+        x: jax.Array,
+        n_rows: int,
+    ) -> jax.Array:
+        """Hub-split SpMV: capped-width ELL kernel + COO ``segment_sum`` tail.
+
+        ``tail_row`` indexes the output rows; padding slots (val 0, row 0)
+        contribute nothing.  Returns (n_rows,) in the accum dtype.
+        """
+        acc = jnp.dtype(self.accum_dtype)
+        y = self.ell_matvec(val, col, x)[:n_rows]
+        prod = tail_val.astype(acc) * jnp.take(x, tail_col).astype(acc)
+        return y + jax.ops.segment_sum(prod, tail_row, num_segments=n_rows)
+
     # --- container-level dispatch (single-device operators) ----------------
 
     def spmv(self, mat, x: jax.Array, accum_dtype=None) -> jax.Array:
-        """SpMV on a device container (DeviceCOO / DeviceELL / DeviceBSR)."""
-        from ..sparse.formats import DeviceBSR, DeviceCOO, DeviceELL
+        """SpMV on a device container (DeviceCOO/ELL/BSR/Hybrid)."""
+        from ..sparse.formats import DeviceBSR, DeviceCOO, DeviceELL, DeviceHybrid
 
         acc = accum_dtype or self.accum_dtype
         if isinstance(mat, DeviceCOO):
@@ -400,6 +738,11 @@ class SpmvEngine:
             return eng.ell_matvec(mat.val, mat.col, x)[: mat.n_rows]
         if isinstance(mat, DeviceBSR):
             return eng.bsr_matvec(mat.val, mat.bcol, x)[: mat.n_rows]
+        if isinstance(mat, DeviceHybrid):
+            return eng.hybrid_matvec(
+                mat.ell_val, mat.ell_col, mat.tail_row, mat.tail_col, mat.tail_val,
+                x, mat.n_rows,
+            )
         raise TypeError(f"SpmvEngine.spmv: unsupported container {type(mat).__name__}")
 
     def describe(self) -> dict:
@@ -412,6 +755,7 @@ class SpmvEngine:
             "block_w": self.tiles.block_w,
             "block_size": self.tiles.block_size,
             "interpret": self.interpret,
+            "tiles_from": self.tiles_from,
         }
 
 
@@ -464,14 +808,25 @@ def make_engine(
         fmt = format
 
     interp = _default_interpret() if interpret is None else interpret
+    tiles_from = "override"
     if tiles is None:
         n_rows = max(s.n_rows for s in stats)
-        width = max(s.max_row_nnz for s in stats)
+        # Tiles (and autotune probes) must see the width the built layout
+        # will actually have, not the raw row statistic: hybrid runs the ELL
+        # kernel at the capped width (8-slot aligned, to_device_hybrid),
+        # plain ELL pads to the 128-lane tile (to_device_ell/shard_to_ell).
+        if fmt == "hybrid":
+            width = -(-max(1, max(s.hyb_width for s in stats)) // 8) * 8
+        elif fmt == "ell":
+            width = -(-max(1, max(s.max_row_nnz for s in stats)) // 128) * 128
+        else:
+            width = max(s.max_row_nnz for s in stats)
         # The storage dtype governs the TPU sublane minimum of the value tiles.
-        tiles = select_tiles(
+        tiles, tiles_from = tuned_tiles(
             n_rows,
             width,
             dtype=storage_dtype or accum_dtype,
+            format=fmt,
             block_size=block_size,
             interpret=interp,
         )
@@ -482,4 +837,5 @@ def make_engine(
         interpret=interp,
         requested=requested,
         stats=stats,
+        tiles_from=tiles_from,
     )

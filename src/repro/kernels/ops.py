@@ -70,11 +70,23 @@ def mixed_dot(
 
 
 def lanczos_update(w, v, v_prev, alpha, beta, accum_dtype=None, **kw):
+    """Fused ``u = w - alpha v - beta v_prev`` + ``||u||^2`` (one memory pass).
+
+    Arbitrary lengths are zero-padded up to the kernel block (padding lanes
+    produce u = 0 and contribute nothing to the norm) and sliced back.
+    """
     acc = jnp.dtype(accum_dtype or jnp.float32)
     if acc == jnp.dtype(jnp.float64):
         from .ref import lanczos_update_ref
 
         return lanczos_update_ref(w, v, v_prev, alpha, beta, accum_dtype=acc)
     kw.setdefault("interpret", default_interpret())
-    u, nrm = lanczos_update_kernel_call(w, v, v_prev, alpha, beta, accum_dtype=acc, **kw)
-    return u, nrm[0]
+    n = w.shape[0]
+    block = min(kw.pop("block", 4096), n)
+    pad = (-n) % block
+    if pad:
+        w, v, v_prev = (jnp.pad(a, (0, pad)) for a in (w, v, v_prev))
+    u, nrm = lanczos_update_kernel_call(
+        w, v, v_prev, alpha, beta, block=block, accum_dtype=acc, **kw
+    )
+    return u[:n], nrm[0]

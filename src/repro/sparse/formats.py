@@ -8,6 +8,9 @@ Host-side construction is NumPy (CSR); device-side compute formats are:
   Pallas TPU kernel consumes (DESIGN.md §4).
 * ``DeviceBSR``  — blocked-ELL (uniform block-slots per block-row, padded),
   the MXU-native layout of ``kernels/spmv_bsr.py``.
+* ``DeviceHybrid`` — hub-row split: ELL capped at a quantile of the row
+  lengths (Pallas kernel part) plus a COO overflow tail (``segment_sum``),
+  so power-law matrices reach the kernel path without padding blowup.
 
 All device containers are registered pytrees so they can cross ``jit`` /
 ``shard_map`` boundaries.  The ``shard_to_*`` converters build *shard-local*
@@ -30,15 +33,18 @@ __all__ = [
     "DeviceCOO",
     "DeviceELL",
     "DeviceBSR",
+    "DeviceHybrid",
     "csr_from_coo",
     "to_device_coo",
     "to_device_ell",
     "to_device_bsr",
+    "to_device_hybrid",
     "ell_padding_stats",
     "blocked_ell_from_triplets",
     "padded_col_map",
     "shard_to_ell",
     "shard_to_blocked_ell",
+    "shard_to_hybrid",
 ]
 
 
@@ -155,6 +161,15 @@ class DeviceELL:
         return y[: self.n_rows]
 
 
+def _row_positions(csr: CSR) -> Tuple[np.ndarray, np.ndarray]:
+    """(row index, position-within-row) of every stored nnz, in CSR order —
+    the scatter coordinates every padded-layout conversion below shares."""
+    row_nnz = csr.row_nnz()
+    rix = np.repeat(np.arange(csr.n, dtype=np.int64), row_nnz)
+    pos = np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], row_nnz)
+    return rix, pos
+
+
 def to_device_coo(csr: CSR, dtype=jnp.float32) -> DeviceCOO:
     n = csr.n
     row = np.repeat(np.arange(n, dtype=np.int32), csr.row_nnz())
@@ -179,14 +194,112 @@ def to_device_ell(
 
     val = np.zeros((rows_pad, width), dtype=np.float64)
     col = np.zeros((rows_pad, width), dtype=np.int32)
-    # Vectorized fill: position of each nnz within its row.
-    pos = np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], nnz_per_row)
-    rix = np.repeat(np.arange(n), nnz_per_row)
+    rix, pos = _row_positions(csr)  # vectorized fill coordinates
     val[rix, pos] = csr.data
     col[rix, pos] = csr.indices
     return DeviceELL(
         val=jnp.asarray(val, dtype=dtype),
         col=jnp.asarray(col),
+        n_rows=n,
+        n_cols=n,
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceHybrid:
+    """Hub-row split: capped-width ELL + COO overflow tail.
+
+    Every row stores its first ``width`` entries in the uniform ELL arrays
+    (``val == 0`` / ``col == 0`` on padding slots); entries past the cap —
+    the hub rows' overflow — live as COO triplets.  SpMV is the Pallas ELL
+    kernel over the bounded part plus one ``segment_sum`` over the tail, so
+    the padding cost is ``n * width_cap`` instead of ``n * max_row_nnz``.
+    Tail arrays are zero-padded (row 0, col 0, val 0 contributes nothing).
+    """
+
+    ell_val: jax.Array  # (rows_padded, width_cap) storage dtype
+    ell_col: jax.Array  # (rows_padded, width_cap) int32
+    tail_row: jax.Array  # (tail_padded,) int32 — output row of each overflow nnz
+    tail_col: jax.Array  # (tail_padded,) int32
+    tail_val: jax.Array  # (tail_padded,) storage dtype
+    n_rows: int  # logical rows (static)
+    n_cols: int  # static
+
+    def tree_flatten(self):
+        children = (self.ell_val, self.ell_col, self.tail_row, self.tail_col, self.tail_val)
+        return children, (self.n_rows, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def width(self) -> int:
+        return int(self.ell_val.shape[1])
+
+    @property
+    def tail_slots(self) -> int:
+        return int(self.tail_val.shape[0])
+
+    def matvec(self, x: jax.Array, accum_dtype=None) -> jax.Array:
+        """jnp reference SpMV (the Pallas path lives in ``kernels/engine.py``)."""
+        acc = accum_dtype or self.ell_val.dtype
+        gathered = jnp.take(x, self.ell_col).astype(acc)
+        y = (self.ell_val.astype(acc) * gathered).sum(axis=1)[: self.n_rows]
+        prod = self.tail_val.astype(acc) * jnp.take(x, self.tail_col).astype(acc)
+        return y + jax.ops.segment_sum(prod, self.tail_row, num_segments=self.n_rows)
+
+
+def to_device_hybrid(
+    csr: CSR,
+    dtype=jnp.float32,
+    width_cap: Optional[int] = None,
+    quantile: Optional[float] = None,
+    row_tile: int = 8,
+    slot_tile: int = 8,
+    tail_align: int = 8,
+) -> DeviceHybrid:
+    """Convert CSR to the hub-split hybrid layout (capped ELL + COO tail).
+
+    ``width_cap`` pins the ELL width (the engine passes the cap its selection
+    statistics used); by default it is the ``quantile`` of the row lengths
+    (``kernels.engine.hybrid_width_cap`` — env-tunable via
+    ``REPRO_SPMV_HYBRID_Q``).  ``slot_tile`` aligns the capped width (kept
+    small by default: a 128-lane pad would reinflate exactly the padding the
+    split exists to avoid; the kernel shrinks its width tile to match).
+    """
+    from ..kernels.engine import hybrid_width_cap  # lazy: sparse sits below kernels
+
+    n = csr.n
+    row_nnz = csr.row_nnz()
+    cap = hybrid_width_cap(row_nnz, quantile) if width_cap is None else int(width_cap)
+    cap = max(1, min(cap, int(row_nnz.max()) if row_nnz.size else 1))
+    width = -(-cap // slot_tile) * slot_tile
+    rows_pad = -(-n // row_tile) * row_tile
+
+    rix, pos = _row_positions(csr)
+    keep = pos < width  # padded cap: the aligned slots might as well hold nnz
+    val = np.zeros((rows_pad, width), dtype=np.float64)
+    col = np.zeros((rows_pad, width), dtype=np.int32)
+    val[rix[keep], pos[keep]] = csr.data[keep]
+    col[rix[keep], pos[keep]] = csr.indices[keep]
+
+    spill = ~keep
+    tail_n = int(spill.sum())
+    tail_pad = -(-max(tail_n, 1) // tail_align) * tail_align
+    trow = np.zeros((tail_pad,), dtype=np.int32)
+    tcol = np.zeros((tail_pad,), dtype=np.int32)
+    tval = np.zeros((tail_pad,), dtype=np.float64)
+    trow[:tail_n] = rix[spill]
+    tcol[:tail_n] = csr.indices[spill]
+    tval[:tail_n] = csr.data[spill]
+    return DeviceHybrid(
+        ell_val=jnp.asarray(val, dtype=dtype),
+        ell_col=jnp.asarray(col),
+        tail_row=jnp.asarray(trow),
+        tail_col=jnp.asarray(tcol),
+        tail_val=jnp.asarray(tval, dtype=dtype),
         n_rows=n,
         n_cols=n,
     )
@@ -337,10 +450,9 @@ def shard_to_ell(
     rows_pad = -(-n_pad // row_tile) * row_tile
 
     col_map = padded_col_map(splits, n_pad, n)
-    rix = np.repeat(np.arange(n, dtype=np.int64), row_nnz)
+    rix, pos = _row_positions(csr)
     owner = np.searchsorted(splits, rix, side="right") - 1
     local_r = rix - splits[owner]
-    pos = np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], row_nnz)
 
     val = np.zeros((g, rows_pad, width), dtype=np.float64)
     col = np.zeros((g, rows_pad, width), dtype=np.int32)
@@ -397,3 +509,76 @@ def shard_to_blocked_ell(
         bcols.append(bsr.bcol)
     stats = {"slots": slots, "block_size": block_size, "n_block_rows": n_pad // block_size}
     return jnp.stack(vals), jnp.stack(bcols), stats
+
+
+def shard_to_hybrid(
+    csr: CSR,
+    splits: np.ndarray,
+    n_pad: int,
+    dtype=jnp.float32,
+    width_cap: Optional[int] = None,
+    quantile: Optional[float] = None,
+    row_tile: int = 8,
+    slot_tile: int = 8,
+    tail_align: int = 8,
+) -> Tuple[Tuple[jax.Array, ...], dict]:
+    """Row-shard a CSR into stacked hybrid (capped ELL + COO tail) arrays.
+
+    Returns ``(val, col, tail_row, tail_col, tail_val)`` with shapes
+    (G, rows_pad, width_cap) / (G, tail_pad): one identical-shape hybrid
+    block per shard (shard_map needs uniform shapes, so the width cap is
+    *global* — the quantile of the full matrix's row lengths — and every
+    shard's tail is padded to the largest shard tail).  Columns are remapped
+    to the padded-global coordinates of ``core/partition.py``; tail rows are
+    shard-local output rows.  Plus a stats dict with the realized split.
+    """
+    from ..kernels.engine import hybrid_width_cap  # lazy: sparse sits below kernels
+
+    g = len(splits) - 1
+    n = csr.n
+    row_nnz = csr.row_nnz()
+    cap = hybrid_width_cap(row_nnz, quantile) if width_cap is None else int(width_cap)
+    cap = max(1, min(cap, int(row_nnz.max()) if row_nnz.size else 1))
+    width = -(-cap // slot_tile) * slot_tile
+    rows_pad = -(-n_pad // row_tile) * row_tile
+
+    col_map = padded_col_map(splits, n_pad, n)
+    rix, pos = _row_positions(csr)
+    owner = np.searchsorted(splits, rix, side="right") - 1
+    local_r = rix - splits[owner]
+    keep = pos < width
+
+    val = np.zeros((g, rows_pad, width), dtype=np.float64)
+    col = np.zeros((g, rows_pad, width), dtype=np.int32)
+    val[owner[keep], local_r[keep], pos[keep]] = csr.data[keep]
+    col[owner[keep], local_r[keep], pos[keep]] = col_map[csr.indices[keep]]
+
+    spill = ~keep
+    tail_counts = np.bincount(owner[spill], minlength=g)
+    tail_pad = -(-max(int(tail_counts.max()) if g else 0, 1) // tail_align) * tail_align
+    trow = np.zeros((g, tail_pad), dtype=np.int32)
+    tcol = np.zeros((g, tail_pad), dtype=np.int32)
+    tval = np.zeros((g, tail_pad), dtype=np.float64)
+    for s in range(g):
+        sel = spill & (owner == s)
+        k = int(sel.sum())
+        trow[s, :k] = local_r[sel]
+        tcol[s, :k] = col_map[csr.indices[sel]]
+        tval[s, :k] = csr.data[sel]
+    tail_nnz = int(spill.sum())
+    stats = {
+        "width_cap": width,
+        "rows_pad": rows_pad,
+        "tail_nnz": tail_nnz,
+        "tail_pad": tail_pad,
+        "hybrid_overhead": (g * rows_pad * width + tail_nnz) / max(1, csr.nnz),
+        "tail_frac": tail_nnz / max(1, csr.nnz),
+    }
+    mats = (
+        jnp.asarray(val, dtype=dtype),
+        jnp.asarray(col),
+        jnp.asarray(trow),
+        jnp.asarray(tcol),
+        jnp.asarray(tval, dtype=dtype),
+    )
+    return mats, stats

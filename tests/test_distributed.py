@@ -111,7 +111,7 @@ def test_distributed_spmv_is_kernel_backed(dist_results):
 
     fmts = dist_results["kernel_spmv_format"]
     assert len(fmts) == 8
-    assert all(f in ("ell", "bsr") for f in fmts)
+    assert all(f in ("ell", "bsr", "hybrid") for f in fmts)
     assert dist_results["kernel_partition_spmv"] == fmts[0]
     # same solver, same start vector: the kernel path must agree with the
     # independent segment-sum run (vals_g8 pins format="coo") to

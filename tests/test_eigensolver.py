@@ -155,3 +155,66 @@ def test_thick_restart_bounded_memory(norm_csr):
     assert r.tridiag.basis.shape[0] == 12
     rec = reconstruction_error(op, r.eigenvalues, r.eigenvectors, accum_dtype=jnp.float64)
     assert rec < 1e-4
+
+
+# --------------------------- fused Lanczos update ----------------------------
+
+
+def test_fused_update_policy_gating():
+    """Non-compensated policies route through the fused Pallas kernel;
+    compensated policies keep the reference reductions for beta."""
+    from repro.core import FCF
+    from repro.core.lanczos import fused_update_enabled, make_local_ops
+
+    assert fused_update_enabled(FFF) and fused_update_enabled(FDF)
+    assert not fused_update_enabled(FCF)
+    assert make_local_ops(lambda x: x, FFF).fused_update is not None
+    assert make_local_ops(lambda x: x, FCF).fused_update is None
+
+
+def test_fused_update_kill_switch(monkeypatch):
+    from repro.core.lanczos import fused_update_enabled, make_local_ops
+
+    monkeypatch.setenv("REPRO_FUSED_LANCZOS", "0")
+    assert not fused_update_enabled(FFF)
+    assert make_local_ops(lambda x: x, FFF).fused_update is None
+
+
+@pytest.mark.parametrize("reorth", ["none", "half", "full"])
+def test_fused_lanczos_matches_reference_loop(web_csr, reorth, monkeypatch):
+    """Loop parity: the fused-kernel recurrence (and, with reorth='none',
+    its fused norm) reproduces the unfused reference loop."""
+    from repro.api import eigsh
+
+    r_fused = eigsh(web_csr, 4, num_iters=12, policy="FFF", reorth=reorth, seed=3)
+    monkeypatch.setenv("REPRO_FUSED_LANCZOS", "0")
+    r_ref = eigsh(web_csr, 4, num_iters=12, policy="FFF", reorth=reorth, seed=3)
+    np.testing.assert_allclose(
+        np.asarray(r_fused.eigenvalues), np.asarray(r_ref.eigenvalues),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_fused_update_wired_into_loop(monkeypatch):
+    """The jitted loop actually calls the kernel wrapper when permitted (the
+    call is observed at trace time) and skips it when the policy forbids."""
+    from repro.core import FCF
+    from repro.core.lanczos import lanczos_tridiag
+    from repro.kernels import ops as kops
+
+    calls = []
+    real = kops.lanczos_update
+
+    def spy(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(kops, "lanczos_update", spy)
+    a = np.diag(np.arange(1.0, 17.0))
+    mv = lambda x: jnp.asarray(a, x.dtype) @ x  # noqa: E731
+    v1 = jnp.ones((16,), jnp.float32)
+    lanczos_tridiag(mv, v1, 4, FFF, reorth="half", jit=False)
+    assert calls  # fused path traced/executed
+    calls.clear()
+    lanczos_tridiag(mv, v1, 4, FCF, reorth="half", jit=False)
+    assert not calls  # compensated policy keeps the reference recurrence

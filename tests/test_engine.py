@@ -92,20 +92,55 @@ def test_selector_banded_picks_ell(seed, bandwidth):
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_selector_powerlaw_picks_coo(seed):
+def test_selector_powerlaw_picks_hybrid(seed):
+    """Hub rows blow the plain-ELL bound, but the quantile-capped split
+    bounds the padding — power-law matrices now reach the kernel path."""
     csr = powerlaw_csr(seed=seed)
     stats = matrix_stats(csr)
     assert stats.ell_overhead > 3.0  # hub rows make ELL padding explode
-    assert choose_format(stats) == "coo"
+    assert stats.hyb_overhead <= 3.0  # ...but the capped split bounds it
+    assert 0 < stats.hyb_width < stats.max_row_nnz
+    assert choose_format(stats) == "hybrid"
+
+
+def hub_dense_csr(n: int = 400, hubs: int = 40, seed: int = 0) -> CSR:
+    """>5% of rows fully dense: the hybrid quantile cap lands on the hub
+    width itself, so even the capped split blows the padding bound."""
+    rng = np.random.default_rng(seed)
+    a = sp.lil_matrix((n, n))
+    a[:hubs, :] = rng.random((hubs, n)) + 0.1
+    a = ((a + a.T) / 2).tocsr()
+    return _csr_from_scipy(a)
+
+
+def test_selector_tail_dominated_picks_coo():
+    """When >1-quantile of the rows are hubs the cap lands on the hub width
+    itself: even the capped split blows the bound and COO wins.  (BSR is
+    excluded: contiguous dense hub strips would legitimately pick it.)"""
+    stats = matrix_stats(hub_dense_csr())
+    assert stats.ell_overhead > 3.0
+    assert stats.hyb_overhead > 3.0 or stats.hyb_tail_frac > 0.6
+    assert choose_format(stats, allowed=("coo", "ell", "hybrid")) == "coo"
 
 
 def test_selector_kernel_only_falls_back_to_ell():
-    # The distributed path excludes COO: padding-heavy matrices still get a
-    # correct (kernel) format rather than an error — with a warning, since
-    # padded ELL on hub-dominated matrices costs O(n * max_row_nnz) memory.
+    # A kernel-only path without the hybrid split: padding-heavy matrices
+    # still get a correct (kernel) format rather than an error — with a
+    # warning, since padded ELL on hub matrices costs O(n * max_row_nnz).
     stats = matrix_stats(powerlaw_csr())
     with pytest.warns(UserWarning, match="padding overhead"):
         assert choose_format(stats, allowed=("ell", "bsr")) == "ell"
+
+
+def test_selector_kernel_only_prefers_hybrid_no_warning():
+    """The distributed allow-list now contains the hub split: the power-law
+    case that used to warn-and-pad resolves to hybrid silently."""
+    import warnings as w
+
+    stats = matrix_stats(powerlaw_csr())
+    with w.catch_warnings():
+        w.simplefilter("error")
+        assert choose_format(stats, allowed=("ell", "bsr", "hybrid")) == "hybrid"
 
 
 def test_selector_respects_allowed_and_thresholds():
@@ -160,7 +195,7 @@ def test_tile_env_override(monkeypatch):
     ],
     ids=["blockdiag", "banded", "powerlaw"],
 )
-@pytest.mark.parametrize("fmt", ["coo", "ell", "bsr"])
+@pytest.mark.parametrize("fmt", ["coo", "ell", "bsr", "hybrid"])
 @pytest.mark.parametrize("acc", [jnp.float32, jnp.float64])
 def test_all_formats_match_dense_reference(make_csr, fmt, acc):
     csr = make_csr()
@@ -358,6 +393,266 @@ def test_forced_format_skips_block_census():
     e = make_engine(csr, "ell")
     assert e.stats[0].n_blocks == 0  # census skipped
     assert make_engine(csr, "auto").stats[0].n_blocks > 0
+
+
+# ------------------------------ hybrid format --------------------------------
+
+
+def test_hybrid_container_bounds_padding():
+    """Acceptance: on a hub-heavy matrix the built hybrid layout keeps
+    padded-slots/nnz within the ELL bound plain ELL blew."""
+    from repro.kernels.engine import ELL_MAX_OVERHEAD
+    from repro.sparse.formats import to_device_hybrid
+
+    csr = powerlaw_csr(seed=0)
+    hyb = to_device_hybrid(csr, dtype=jnp.float64)
+    ell_part_slots = hyb.ell_val.shape[0] * hyb.ell_val.shape[1]
+    stored = ell_part_slots + hyb.tail_slots
+    assert stored / csr.nnz <= ELL_MAX_OVERHEAD
+    # and the plain-ELL layout would NOT have been bounded
+    assert matrix_stats(csr).ell_overhead > ELL_MAX_OVERHEAD
+    x = np.random.default_rng(0).standard_normal(csr.n)
+    y = np.asarray(hyb.matvec(jnp.asarray(x), accum_dtype=jnp.float64))
+    np.testing.assert_allclose(y, csr.toarray() @ x, atol=1e-10)
+
+
+def test_eigsh_powerlaw_auto_runs_hybrid_kernel_path():
+    """format="auto" on a hub matrix now reports 'hybrid' and matches the
+    COO baseline (single-device)."""
+    csr = powerlaw_csr(seed=1)
+    r = eigsh(csr, 3, num_iters=10, seed=2)
+    assert r.spmv_format == "hybrid"
+    r_coo = eigsh(csr, 3, num_iters=10, seed=2, format="coo")
+    np.testing.assert_allclose(
+        np.asarray(r.eigenvalues), np.asarray(r_coo.eigenvalues), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("g", [2, 4])
+def test_shard_to_hybrid_matches_dense(g):
+    from repro.sparse.formats import shard_to_hybrid
+
+    csr = powerlaw_csr(700, seed=7)
+    dense = csr.toarray()
+    x = np.random.default_rng(1).standard_normal(csr.n)
+    splits = nnz_balanced_splits(csr.indptr, g)
+    n_pad = int((splits[1:] - splits[:-1]).max())
+    n_pad = -(-n_pad // 8) * 8
+    mats, stats = shard_to_hybrid(csr, splits, n_pad, dtype=jnp.float64, row_tile=8)
+    val, col, trow, tcol, tval = (np.asarray(m) for m in mats)
+    assert val.shape[0] == g and stats["tail_nnz"] > 0
+    # realized padded-slots/nnz of the split stays bounded
+    assert (val.size + stats["tail_nnz"]) / csr.nnz <= 3.0 * 2  # rows_pad inflation
+    xp = np.zeros(g * n_pad)
+    for s in range(g):
+        lo, hi = int(splits[s]), int(splits[s + 1])
+        xp[s * n_pad : s * n_pad + hi - lo] = x[lo:hi]
+    got_parts = []
+    for s in range(g):
+        y = (val[s] * xp[col[s]]).sum(axis=1)
+        np.add.at(y, trow[s], tval[s] * xp[tcol[s]])
+        got_parts.append(y[: int(splits[s + 1] - splits[s])])
+    np.testing.assert_allclose(np.concatenate(got_parts), dense @ x, atol=1e-10)
+
+
+def test_distributed_powerlaw_auto_selects_hybrid():
+    """Acceptance: the matrix class that used to trigger the padding-blowup
+    warning on the kernel-only distributed path now runs hybrid, silently,
+    and matches an independent COO baseline."""
+    import warnings as w
+
+    from jax.sharding import Mesh
+
+    csr = powerlaw_csr(700, seed=7)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    baseline = solve_sharded(csr, 3, mesh, num_iters=9, seed=1, spmv_format="coo")
+    with w.catch_warnings():
+        w.simplefilter("error")
+        out = solve_sharded(csr, 3, mesh, num_iters=9, seed=1, spmv_format="auto")
+    assert out.spmv_format == ("hybrid",)
+    assert out.partition["spmv"]["format"] == "hybrid"
+    assert out.partition["spmv"]["tail_nnz"] > 0
+    np.testing.assert_allclose(
+        np.asarray(out.eigenvalues), np.asarray(baseline.eigenvalues), rtol=1e-4
+    )
+
+
+def test_chunked_rejects_hybrid():
+    csr = powerlaw_csr(512, seed=3)
+    engine = make_engine(csr, "hybrid")
+    with pytest.raises(ValueError, match="per-chunk HYBRID"):
+        ChunkedOperator(csr, engine=engine)
+
+
+# ------------------------------ tile autotuner -------------------------------
+
+
+@pytest.fixture
+def tune_env(tmp_path, monkeypatch):
+    """Isolated tuner: fresh JSON cache path + enabled tuning."""
+    import repro.kernels.engine as eng_mod
+
+    cache = tmp_path / "spmv_tune.json"
+    monkeypatch.setenv("REPRO_SPMV_TUNE_CACHE", str(cache))
+    monkeypatch.setenv("REPRO_SPMV_TUNE", "1")
+    monkeypatch.setenv("REPRO_SPMV_TUNE_BUDGET", "2")
+    eng_mod._TUNER = None
+    yield cache
+    eng_mod._TUNER = None
+
+
+def test_autotuner_disabled_is_static_table(monkeypatch):
+    """Cold start with tuning off: behavior identical to the static table
+    (interpret-mode large tiles preserved), provenance 'table'."""
+    monkeypatch.delenv("REPRO_SPMV_TUNE", raising=False)
+    csr = banded_csr(256)
+    e = make_engine(csr, "ell")
+    assert e.tiles_from == "table"
+    assert e.tiles == TileConfig(block_r=512, block_w=2048)  # interpret tiles
+    assert e.describe()["tiles_from"] == "table"
+
+
+def test_autotuner_tunes_caches_and_persists(tune_env):
+    import json
+
+    import repro.kernels.engine as eng_mod
+
+    csr = banded_csr(256)
+    e1 = make_engine(csr, "ell")
+    tuner = eng_mod.get_tuner()
+    assert e1.tiles_from == "tuned"
+    assert tuner.measure_count == 1
+    assert tune_env.exists()
+    payload = json.loads(tune_env.read_text())
+    assert payload["version"] == 1 and len(payload["entries"]) == 1
+    (rec,) = payload["entries"].values()
+    assert rec["block_r"] == e1.tiles.block_r and rec["block_w"] == e1.tiles.block_w
+    # same shape bucket: memoized, no second measurement
+    e2 = make_engine(csr, "ell")
+    assert tuner.measure_count == 1 and e2.tiles == e1.tiles
+
+
+def test_autotuner_frozen_cache_is_deterministic(tune_env, monkeypatch):
+    """A pre-written cache is authoritative: no measurement runs (probes are
+    poisoned) and the pinned tiles come back verbatim."""
+    import json
+
+    import repro.kernels.engine as eng_mod
+
+    # width is the *layout* width the engine probes: banded max_row 5 pads
+    # to the 128-lane ELL tile
+    key = eng_mod._tune_key("ell", jnp.float32, 256, 128, interpret=True)
+    tune_env.write_text(
+        json.dumps(
+            {"version": 1, "entries": {key: {"block_r": 128, "block_w": 1024}}}
+        )
+    )
+
+    def _poisoned(*a, **k):
+        raise AssertionError("a frozen tune cache must not re-measure")
+
+    monkeypatch.setattr(eng_mod, "_measure_ell_tiles", _poisoned)
+    e = make_engine(banded_csr(256), "ell")
+    assert e.tiles_from == "tuned"
+    assert (e.tiles.block_r, e.tiles.block_w) == (128, 1024)
+
+
+def test_autotuner_override_wins(tune_env, monkeypatch):
+    monkeypatch.setenv("REPRO_SPMV_TILES", "64,256")
+    e = make_engine(banded_csr(256), "ell")
+    assert e.tiles_from == "override"
+    assert (e.tiles.block_r, e.tiles.block_w) == (64, 256)
+
+
+def test_autotuner_solve_end_to_end(tune_env):
+    """A tuned engine still solves correctly and surfaces provenance."""
+    road = generate("road", 400, 3.0, seed=3, values="normalized")
+    r_t = eigsh(road, 3, num_iters=9, format="ell")
+    assert r_t.spmv_format == "ell"
+    r_ref = eigsh(road, 3, num_iters=9, format="coo")
+    np.testing.assert_allclose(
+        np.asarray(r_t.eigenvalues), np.asarray(r_ref.eigenvalues), rtol=1e-4
+    )
+
+
+# ------------------------- chunked double buffering --------------------------
+
+
+def test_chunked_stages_each_chunk_once_per_instance():
+    """Acceptance: host->device *conversion* happens once per instance (at
+    construction), never per matvec; per-matvec work is pure transfers."""
+    road = generate("road", 900, 3.0, seed=2, values="normalized")
+    engine = make_engine(road, "ell", accum_dtype=jnp.float64)
+    op = ChunkedOperator(road, chunk_nnz=800, dtype=jnp.float64, engine=engine)
+    assert op.num_chunks > 1
+    assert op.staging["conversions"] == op.num_chunks
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(road.n))
+    for _ in range(3):
+        op.matvec(x, accum_dtype=jnp.float64).block_until_ready()
+    assert op.staging["conversions"] == op.num_chunks  # unchanged by matvecs
+    assert op.staging["transfers"] == 3 * op.num_chunks
+
+
+@pytest.mark.parametrize("depth", [0, 1, 2])
+def test_chunked_residency_bounded_by_stage_depth(depth):
+    road = generate("road", 900, 3.0, seed=2, values="normalized")
+    engine = make_engine(road, "ell", accum_dtype=jnp.float64)
+    op = ChunkedOperator(
+        road, chunk_nnz=500, dtype=jnp.float64, engine=engine, stage_depth=depth
+    )
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(road.n))
+    y = np.asarray(op.matvec(x, accum_dtype=jnp.float64))
+    assert op.staging["max_resident"] <= depth + 1
+    np.testing.assert_allclose(y, road.toarray() @ np.asarray(x), atol=1e-10)
+
+
+def test_chunked_per_chunk_widths_cut_hub_padding():
+    """Satellite bugfix: one hub row no longer inflates every chunk's ELL
+    width — total padded slots drop vs the old global-width layout."""
+    web = powerlaw_csr(512, seed=3)
+    engine = make_engine(web, "ell", accum_dtype=jnp.float32)
+    op = ChunkedOperator(web, chunk_nnz=400, dtype=jnp.float32, engine=engine)
+    assert op.num_chunks > 2
+    rows_pad = op._chunks[0][0].shape[0]
+    global_width = -(-int(web.row_nnz().max()) // 128) * 128
+    global_slots = op.num_chunks * rows_pad * global_width
+    assert op.padded_slots < global_slots
+    widths = {v.shape[1] for v, _ in op._chunks}
+    assert len(widths) > 1  # hub chunk is wide, the rest stay narrow
+    x = np.random.default_rng(5).standard_normal(web.n)
+    y = np.asarray(op.matvec(jnp.asarray(x, jnp.float64), accum_dtype=jnp.float64))
+    np.testing.assert_allclose(y, web.toarray() @ x, rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_auto_judges_ell_on_per_chunk_layout():
+    """The chunked selector judges ELL on the *realized per-chunk* padding:
+    a hub matrix the global-max-row criterion would veto (16x overhead)
+    reaches the kernel path once the chunking isolates the hub row."""
+    rng = np.random.default_rng(5)
+    n = 1000
+    diags = [rng.random(n - abs(o)) + 0.1 for o in range(-30, 31)]
+    a = sp.diags(diags, range(-30, 31), format="lil")
+    a[0, :] = rng.random(n) + 0.1  # one hub row
+    hub = _csr_from_scipy(((a + a.T) / 2).tocsr())
+    assert matrix_stats(hub).ell_overhead > 10  # whole-matrix view says no
+    r = eigsh(hub, 3, backend="chunked", num_iters=9, chunk_nnz=2000)
+    assert r.spmv_format == "ell"  # per-chunk view: hub pays for its chunk only
+    r_coo = eigsh(hub, 3, backend="chunked", num_iters=9, chunk_nnz=2000, format="coo")
+    np.testing.assert_allclose(
+        np.asarray(r.eigenvalues), np.asarray(r_coo.eigenvalues), rtol=1e-5
+    )
+
+
+def test_chunked_eigsh_surfaces_staging_stats():
+    road = generate("road", 900, 3.0, seed=2, values="normalized")
+    r = eigsh(road, 3, backend="chunked", num_iters=9, chunk_nnz=800, stage_depth=2)
+    part = r.partition
+    assert part is not None and part["stage_depth"] == 2
+    st = part["staging"]
+    assert st["conversions"] == part["num_chunks"]
+    assert st["max_resident"] <= 3
+    assert st["transfers"] >= part["num_chunks"]  # one stream per iteration
+    assert part["spmv"]["format"] == r.spmv_format
 
 
 def test_shard_stats_use_remapped_block_coordinates():

@@ -131,3 +131,19 @@ def test_spmv_bsr_eigensolver_path():
     np.testing.assert_allclose(
         np.asarray(r_coo.eigenvalues), np.asarray(r_bsr.eigenvalues), rtol=1e-4
     )
+
+
+def test_lanczos_update_wrapper_pads_arbitrary_lengths():
+    """ops.lanczos_update handles n not divisible by the kernel block
+    (zero-padded lanes produce u=0 and leave the norm untouched)."""
+    rng = np.random.default_rng(9)
+    n = 5000  # 5000 % 4096 != 0
+    w, v, vp = (jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(3))
+    alpha, beta = jnp.float32(0.37), jnp.float32(1.21)
+    u, nrm = ops.lanczos_update(w, v, vp, alpha, beta, accum_dtype=jnp.float32)
+    u_r, n_r = ref.lanczos_update_ref(w, v, vp, alpha, beta)
+    assert u.shape == (n,)
+    np.testing.assert_allclose(
+        np.asarray(u, np.float64), np.asarray(u_r, np.float64), rtol=1e-5, atol=1e-5
+    )
+    assert abs(float(nrm) - float(n_r)) < 1e-2 * max(1.0, float(n_r))
