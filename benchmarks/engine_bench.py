@@ -70,6 +70,7 @@ def run(scale: float = 1.0):
                  f"n={csr.n} nnz={csr.nnz} auto={auto_fmt}{chosen}")
         rows.append(case)
     rows.append(_lanczos_step(scale))
+    rows.append(_serving_amortization(scale))
     save_artifact("engine_bench.json", rows)
     return rows
 
@@ -108,6 +109,68 @@ def _lanczos_step(scale: float) -> dict:
         "n": n,
         "t_fused_us": t_f * 1e6,
         "t_unfused_us": t_u * 1e6,
+    }
+
+
+def _serving_amortization(scale: float) -> dict:
+    """Plan/execute split payoff: ``eigsh_many`` over N queries vs N
+    independent ``eigsh`` calls, end-to-end (cold session per call — every
+    call re-pays coercion/conversion/tuning) and solve-only (one prepared
+    session — measures the shared-sweep amortization alone).  The batched
+    path must win end-to-end: it pays one plan and one Lanczos sweep where
+    the baseline pays N of each."""
+    from repro.api import eigsh, eigsh_many, prepare, session_cache_clear
+    from repro.sparse import generate
+
+    n = max(256, int(2048 * scale))
+    csr = generate("web", n, 6.0, seed=2, values="normalized")
+    iters = 16
+    queries = [{"k": k, "num_iters": iters} for k in (2, 3, 4, 6)]
+
+    def run_many():
+        session_cache_clear()
+        return eigsh_many(csr, queries, reorth="full", backend="single")
+
+    def run_independent():
+        out = []
+        for q in queries:
+            session_cache_clear()  # cold: each call re-pays the plan phase
+            r = eigsh(csr, q["k"], num_iters=q["num_iters"], reorth="full", backend="single")
+            out.append(r)
+        return out
+
+    t_many = timeit(run_many)
+    t_ind = timeit(run_independent)
+    sess = prepare(csr, reorth="full", backend="single")
+    t_solve_many = timeit(lambda: sess.eigsh_many(queries))
+    t_solve_ind = timeit(lambda: [sess.eigsh(q["k"], num_iters=q["num_iters"]) for q in queries])
+    nq = len(queries)
+    # Persisting a full result is one json.dump away now (no ad-hoc array
+    # conversion): what a serving layer would log per query.
+    save_artifact("serving_result.json", sess.eigsh(2, num_iters=iters).to_dict())
+    emit("serving/eigsh_many_e2e", t_many * 1e6, f"n={n} {nq} queries, one plan+sweep")
+    emit("serving/n_calls_e2e", t_ind * 1e6, f"n={n} {nq} cold eigsh calls")
+    emit("serving/eigsh_many_solve", t_solve_many * 1e6, "prepared session, shared sweep")
+    emit("serving/n_calls_solve", t_solve_ind * 1e6, "prepared session, per-query sweeps")
+    speedup = t_ind / max(t_many, 1e-12)
+    emit("serving/amortization_x", speedup, f"N-calls / eigsh_many e2e ({nq} queries)")
+    if speedup < 1.0:
+        # Structural gate: batching must not LOSE to N independent calls.
+        # (The expected margin is ~Nx on the plan phase plus the extra
+        # sweeps; < 1.0 means the split regressed, not that CI was noisy.)
+        raise RuntimeError(
+            f"eigsh_many slower than {nq} independent eigsh calls: "
+            f"{t_many * 1e3:.1f}ms vs {t_ind * 1e3:.1f}ms"
+        )
+    return {
+        "matrix": "serving",
+        "n": n,
+        "queries": nq,
+        "t_eigsh_many_e2e_us": t_many * 1e6,
+        "t_n_calls_e2e_us": t_ind * 1e6,
+        "t_eigsh_many_solve_us": t_solve_many * 1e6,
+        "t_n_calls_solve_us": t_solve_ind * 1e6,
+        "amortization_x": speedup,
     }
 
 

@@ -6,8 +6,16 @@ The one-call entrypoint is :func:`repro.eigsh` (re-exported from
 single-device, distributed, thick-restarted, and out-of-core engines.
 """
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
-from .api import EigenResult, SolverConfig, eigsh
+from .api import EigenResult, EigenSession, SolverConfig, eigsh, eigsh_many, prepare
 
-__all__ = ["eigsh", "SolverConfig", "EigenResult", "__version__"]
+__all__ = [
+    "eigsh",
+    "eigsh_many",
+    "prepare",
+    "EigenSession",
+    "SolverConfig",
+    "EigenResult",
+    "__version__",
+]

@@ -4,23 +4,45 @@
     res = eigsh(A, k=8, policy="FDF")          # any input form, any backend
     evals, evecs = res                          # scipy-style unpack
 
+    from repro.api import prepare, eigsh_many   # plan/execute split
+    sess = prepare(A)                           # pay setup once
+    results = sess.eigsh_many([{"k": 4}, {"k": 8, "tol": 1e-7}])
+
 See :func:`eigsh` for the full contract, ``dispatch`` for the backend-
-selection policy, and :class:`EigenResult` for the result schema.
+selection policy, :class:`EigenResult` for the result schema, and
+``session`` for the prepared-session / batched-serving layer.
 """
 
-from .coerce import CoercedInput, coerce_input
+from .coerce import CoercedInput, coerce_input, matrix_fingerprint
 from .dispatch import BACKENDS, CHUNKED_NNZ_THRESHOLD, select_backend
 from .frontend import SolverConfig, eigsh, resolve_policy
 from .result import EigenResult
+from .session import (
+    EigQuery,
+    EigenSession,
+    config_fingerprint,
+    eigsh_many,
+    prepare,
+    session_cache_clear,
+    session_cache_info,
+)
 
 __all__ = [
     "eigsh",
+    "eigsh_many",
+    "prepare",
+    "EigenSession",
+    "EigQuery",
     "SolverConfig",
     "EigenResult",
     "resolve_policy",
     "select_backend",
     "coerce_input",
     "CoercedInput",
+    "matrix_fingerprint",
+    "config_fingerprint",
+    "session_cache_clear",
+    "session_cache_info",
     "BACKENDS",
     "CHUNKED_NNZ_THRESHOLD",
 ]

@@ -18,6 +18,7 @@ whenever the input provides it.
 
 from __future__ import annotations
 
+import hashlib
 from typing import NamedTuple, Optional
 
 import jax
@@ -32,13 +33,44 @@ from ..core.operators import (
 )
 from ..sparse.formats import CSR, DeviceCOO, DeviceELL
 
-__all__ = ["CoercedInput", "coerce_input"]
+__all__ = ["CoercedInput", "coerce_input", "matrix_fingerprint"]
 
 
 class CoercedInput(NamedTuple):
     operator: Optional[LinearOperator]  # None when only a host CSR was given
     csr: Optional[CSR]  # None for matrix-free / device-resident inputs
     n: int
+    # Content digest of the problem data (CSR arrays or dense bytes), the
+    # matrix half of the session-cache key (api/session.py); None for
+    # matrix-free / device-resident inputs, which cannot be fingerprinted.
+    fingerprint: Optional[str] = None
+
+
+def matrix_fingerprint(a) -> Optional[str]:
+    """xxhash-style content digest of an explicit matrix (CSR or dense).
+
+    Hashes the raw buffers (indptr / indices / data + shape for CSR; the
+    array bytes + dtype for dense), so mutating a matrix in place yields a
+    different digest — the session cache treats it as a new problem — while
+    a byte-identical re-submission hits.  O(nnz) blake2b: orders of
+    magnitude cheaper than one format conversion.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    if isinstance(a, CSR):
+        h.update(b"csr")
+        h.update(np.ascontiguousarray(a.indptr).tobytes())
+        h.update(np.ascontiguousarray(a.indices).tobytes())
+        h.update(np.ascontiguousarray(a.data).tobytes())
+        h.update(repr(a.shape).encode())
+        return h.hexdigest()
+    if isinstance(a, (np.ndarray, jax.Array)):
+        arr = np.asarray(a)
+        h.update(b"dense")
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+        return h.hexdigest()
+    return None
 
 
 def _csr_from_scipy(a) -> CSR:
@@ -54,13 +86,33 @@ def _csr_from_scipy(a) -> CSR:
     )
 
 
-def coerce_input(a, *, n: Optional[int] = None, storage_dtype=jnp.float32) -> CoercedInput:
-    """Normalize any accepted input into (operator, csr, n). See module doc."""
+def coerce_input(
+    a,
+    *,
+    n: Optional[int] = None,
+    storage_dtype=jnp.float32,
+    fingerprint: Optional[str] = None,
+    want_fingerprint: bool = False,
+) -> CoercedInput:
+    """Normalize any accepted input into (operator, csr, n). See module doc.
+
+    Fingerprinting is opt-in: pass ``fingerprint=`` when the digest is
+    already computed (the session cache probes CSR/dense inputs before
+    coercing), or ``want_fingerprint=True`` to have it computed here (the
+    scipy path, whose digest is of the converted CSR).  The default skips
+    the O(bytes) hash — direct ``prepare()`` sessions and cache-disabled
+    calls never pay for a digest they will not use.
+    """
     if isinstance(a, LinearOperator):
         return CoercedInput(operator=a, csr=None, n=int(a.n))
 
+    def _fp(x):
+        if fingerprint is not None:
+            return fingerprint
+        return matrix_fingerprint(x) if want_fingerprint else None
+
     if isinstance(a, CSR):
-        return CoercedInput(operator=None, csr=a, n=a.n)
+        return CoercedInput(operator=None, csr=a, n=a.n, fingerprint=_fp(a))
 
     if isinstance(a, (DeviceCOO, DeviceELL)):
         impl = "coo" if isinstance(a, DeviceCOO) else "ell"
@@ -72,7 +124,7 @@ def coerce_input(a, *, n: Optional[int] = None, storage_dtype=jnp.float32) -> Co
     # stays an optional import.
     if hasattr(a, "tocsr") and hasattr(a, "shape"):
         csr = _csr_from_scipy(a)
-        return CoercedInput(operator=None, csr=csr, n=csr.n)
+        return CoercedInput(operator=None, csr=csr, n=csr.n, fingerprint=_fp(csr))
 
     if isinstance(a, (np.ndarray, jax.Array)):
         if a.ndim != 2 or a.shape[0] != a.shape[1]:
@@ -81,6 +133,7 @@ def coerce_input(a, *, n: Optional[int] = None, storage_dtype=jnp.float32) -> Co
             operator=DenseOperator(jnp.asarray(a, dtype=storage_dtype)),
             csr=None,
             n=int(a.shape[0]),
+            fingerprint=_fp(a),
         )
 
     # scipy.sparse.linalg.LinearOperator look-alikes: .matvec + .shape.

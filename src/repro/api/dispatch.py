@@ -53,6 +53,7 @@ def select_backend(
     tol: Optional[float] = None,
     device_count: int = 1,
     free_bytes: Optional[int] = None,
+    mesh_given: bool = False,
 ) -> str:
     """Resolve ``backend="auto"`` (or validate an explicit request).
 
@@ -63,6 +64,9 @@ def select_backend(
       tol: requested convergence tolerance (None = fixed-iteration mode).
       device_count: visible (or mesh-provided) device count.
       free_bytes: host-memory budget; defaults to the live reading.
+      mesh_given: the caller passed an explicit ``jax.sharding.Mesh`` — under
+        "auto" that is an explicit request for the distributed path and must
+        not be silently dropped (e.g. when ``tol`` would pick restarted).
     """
     if requested != "auto":
         if requested not in BACKENDS:
@@ -75,6 +79,16 @@ def select_backend(
                 "operators can't be — pass the host CSR instead"
             )
         return requested
+
+    if mesh_given:
+        if not has_matrix:
+            raise ValueError(
+                "mesh= requests the distributed backend, which needs a host-side "
+                "sparse matrix (repro CSR or scipy sparse) so it can be "
+                "re-partitioned; device containers (DeviceCOO/DeviceELL) and "
+                "matrix-free operators can't be — pass the host CSR instead"
+            )
+        return "distributed"
 
     # A requested tolerance is a convergence *requirement*: only the restarted
     # engine iterates until it holds, so it wins even over multiple devices.

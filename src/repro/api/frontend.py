@@ -19,6 +19,17 @@ dispatches to the right execution engine, and reports the outcome in a single
     tol * |lambda_i|``.  Every backend reports per-pair ``residuals`` and
     ``converged`` flags against it; the restarted backend additionally
     iterates until it holds (or the budget runs out).
+
+Since the plan/execute split (``repro.api.session``), ``eigsh`` is a thin
+wrapper: ``prepare(A, ...)`` builds an :class:`~repro.api.session.EigenSession`
+owning every per-matrix setup product (coerced input, chosen placement,
+converted operators, tuned tiles) and the call executes one query against
+it.  A fingerprint-keyed cache of recent sessions makes naive repeated
+calls on the same matrix hit the prepared path transparently — the second
+byte-identical call performs zero format conversions and zero tuner probes
+(verified by the counters in ``EigenResult.partition["spmv"]``, flagged by
+``EigenResult.session_reuse``).  For many-query workloads, use
+:func:`repro.api.prepare` / :func:`repro.api.eigsh_many` directly.
 """
 
 from __future__ import annotations
@@ -28,19 +39,10 @@ import math
 import warnings
 from typing import Optional, Union
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core.distributed import solve_sharded
-from ..core.eigensolver import solve_fixed
-from ..core.operators import ChunkedOperator, DenseOperator, make_operator
 from ..core.precision import POLICIES, PrecisionPolicy
-from ..core.restarted import solve_restarted
-from ..kernels.engine import FORMATS, make_engine
-from ..sparse.formats import CSR
-from .coerce import coerce_input
-from .dispatch import select_backend
+from ..kernels.engine import FORMATS
 from .result import EigenResult
 
 __all__ = ["SolverConfig", "eigsh", "resolve_policy"]
@@ -65,7 +67,10 @@ class SolverConfig:
     """All solver knobs of :func:`eigsh` as one reusable value.
 
     Useful for sweeping configurations (benchmarks) and for services that
-    pin a tuned configuration: ``eigsh(A, k, config=cfg)``.
+    pin a tuned configuration: ``eigsh(A, k, config=cfg)``.  The subset of
+    fields that affects what a session *builds* (``backend``, ``format``,
+    ``chunk_nnz``, ``stage_depth``, ``axis``) keys the session cache; the
+    rest are per-query defaults.
     """
 
     policy: Union[str, PrecisionPolicy] = "FDF"
@@ -84,7 +89,6 @@ class SolverConfig:
     # (repro.kernels.engine); an explicit value forces it.  The decision
     # lands in EigenResult.spmv_format.
     format: str = "auto"
-    impl: str = "coo"  # deprecated fixed SpMV path; use ``format`` instead
     chunk_nnz: int = 1 << 20  # chunked backend: device-resident nnz per chunk
     stage_depth: int = 1  # chunked backend: chunks prefetched ahead of compute
     jacobi: str = "host"  # phase-2 placement, "host" (paper) or "jax"
@@ -107,6 +111,17 @@ def _default_tol(policy: PrecisionPolicy) -> float:
         return 1e-6
 
 
+# Legacy ``impl=`` spellings -> the ``format=`` knob that replaced them.  The
+# fixed per-impl operator plumbing below the frontend is gone; these now run
+# through the SpmvEngine layer like everything else.
+_IMPL_TO_FORMAT = {
+    "coo": "coo",
+    "ell": "ell",
+    "ell_kernel": "ell",
+    "bsr_kernel": "bsr",
+}
+
+
 def eigsh(
     A,
     k: int = 6,
@@ -123,7 +138,7 @@ def eigsh(
     subspace: Optional[int] = None,
     max_restarts: int = 30,
     format: str = "auto",
-    impl: str = "coo",
+    impl: Optional[str] = None,
     chunk_nnz: int = 1 << 20,
     stage_depth: int = 1,
     jacobi: str = "host",
@@ -170,11 +185,10 @@ def eigsh(
         ``EigenResult.spmv_format``.  The distributed backend auto-selects
         kernel formats only (pass format="coo" to opt back into
         ``segment_sum``); the chunked backend supports "coo" / "ell".
-      impl: deprecated fixed SpMV path ("ell" | "ell_kernel" | "bsr_kernel");
-        a non-default value is honored while ``format`` is untouched.  Note
-        ``impl="coo"`` is the default and therefore indistinguishable from
-        "unset": to pin the COO segment-sum reference path, pass
-        ``format="coo"`` instead.
+      impl: DEPRECATED — the legacy fixed SpMV knob now maps onto ``format=``
+        ("ell"/"ell_kernel" -> "ell", "bsr_kernel" -> "bsr", "coo" -> "coo")
+        with a ``DeprecationWarning``; the per-impl operator plumbing it
+        selected is gone.  Pass ``format=`` directly.
       chunk_nnz: chunk size (nnz) for the out-of-core backend.
       stage_depth: out-of-core double buffering — how many chunks the
         chunked backend prefetches (``jax.device_put``) ahead of the chunk
@@ -189,7 +203,28 @@ def eigsh(
 
     Returns:
       An :class:`EigenResult` with an identical schema on every backend.
+      Repeated calls on a byte-identical matrix + layout config reuse the
+      cached :class:`~repro.api.session.EigenSession` (``session_reuse`` is
+      set, ``timings["prepare_s"]`` drops to 0); see the module docstring.
     """
+    if impl is not None:
+        warnings.warn(
+            "impl= is deprecated and now maps onto format= (impl='ell'/"
+            "'ell_kernel' -> format='ell', 'bsr_kernel' -> format='bsr', "
+            "'coo' -> format='coo'); the legacy fixed SpMV paths are gone — "
+            "pass format= directly",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        mapped = _IMPL_TO_FORMAT.get(impl)
+        if mapped is None:
+            raise ValueError(
+                f"unknown legacy impl {impl!r}; expected one of {sorted(_IMPL_TO_FORMAT)}"
+            )
+        if format == "auto":
+            # impl defaults to None now, so an explicit impl="coo" is a real
+            # request for the segment-sum reference path and must pin it.
+            format = mapped
     cfg = config or SolverConfig(
         policy=policy,
         backend=backend,
@@ -200,7 +235,6 @@ def eigsh(
         max_restarts=max_restarts,
         seed=seed,
         format=format,
-        impl=impl,
         chunk_nnz=chunk_nnz,
         stage_depth=stage_depth,
         jacobi=jacobi,
@@ -213,225 +247,20 @@ def eigsh(
             f"unknown SpMV format {cfg.format!r}; expected 'auto' or one of {FORMATS}"
         )
 
-    pol = resolve_policy(cfg.policy).effective()
-    op, csr, dim = coerce_input(A, n=n, storage_dtype=pol.storage)
-    if k > dim:
-        raise ValueError(f"k={k} exceeds the operator dimension n={dim}")
+    from .session import get_session  # lazy: session imports this module
 
-    device_count = mesh.size if mesh is not None else len(jax.devices())
-    if cfg.backend == "auto" and mesh is not None:
-        # An explicit mesh is an explicit request for the distributed path —
-        # it must not be silently dropped by the auto policy (e.g. when tol
-        # would otherwise pick the restarted engine).
-        if csr is None:
-            raise ValueError(
-                "mesh= requests the distributed backend, which needs a host-side "
-                "sparse matrix (repro CSR or scipy sparse) so it can be "
-                "re-partitioned; device containers (DeviceCOO/DeviceELL) and "
-                "matrix-free operators can't be — pass the host CSR instead"
-            )
-        chosen = "distributed"
-    else:
-        chosen = select_backend(
-            cfg.backend,
-            has_matrix=csr is not None,
-            nnz=csr.nnz if csr is not None else 0,
-            tol=cfg.tol,
-            device_count=device_count,
-        )
-
-    # The effective tolerance: what the restarted engine iterates toward and
-    # what every backend's converged flags are judged against.
-    tol_eff = cfg.tol if cfg.tol is not None else _default_tol(pol)
-
-    if chosen == "distributed":
-        out = _run_distributed(csr, k, cfg, pol, mesh, v0)
-        restarts, partition = 0, out.partition
-        spmv_format = out.spmv_format
-    elif chosen == "restarted":
-        solver_op, spmv_format = _build_operator(op, csr, cfg, pol, chosen)
-        out = _run_restarted(solver_op, k, cfg, pol, v0, tol_eff)
-        restarts, partition = out.restarts, None
-    else:  # "single" | "chunked"
-        solver_op, spmv_format = _build_operator(op, csr, cfg, pol, chosen)
-        out = solve_fixed(
-            solver_op,
-            k,
-            policy=pol,
-            reorth=_resolve_reorth(cfg.reorth, chosen),
-            num_iters=cfg.num_iters,
-            v1=v0,
-            seed=cfg.seed,
-            jacobi=cfg.jacobi,
-        )
-        restarts, partition = 0, None
-        if isinstance(solver_op, ChunkedOperator):
-            # Out-of-core placement facts: how the chunk stream behaved.
-            partition = {
-                "num_chunks": solver_op.num_chunks,
-                "stage_depth": solver_op.stage_depth,
-                "staging": dict(solver_op.staging),
-                "spmv": (
-                    solver_op.engine.describe()
-                    if solver_op.engine is not None
-                    else {"format": "coo"}
-                ),
-            }
-
-    # Judge convergence on the engines' full-precision eigenvalues so the
-    # flags agree with the restarted engine's own stopping decision (the
-    # output-dtype cast could flip a boundary pair).
-    lam = np.abs(out.eigenvalues_f64)
-    converged = out.residuals <= tol_eff * np.maximum(lam, 1e-300)
-
-    return EigenResult(
-        eigenvalues=out.eigenvalues,
-        eigenvectors=out.eigenvectors,
-        residuals=out.residuals,
-        converged=converged,
-        iterations=out.iterations,
-        restarts=restarts,
-        k=k,
-        n=dim,
-        backend=chosen,
-        policy=pol.name,
-        tol=tol_eff,
-        num_devices=device_count if chosen == "distributed" else 1,
-        partition=partition,
-        timings=out.timings,
-        spmv_format=spmv_format,
-        tridiag=out.tridiag,
-    )
-
-
-def _op_format(op) -> str:
-    """SpMV layout label of a caller-provided operator."""
-    fmt = getattr(op, "spmv_format", None)
-    if fmt is not None:
-        return fmt
-    if isinstance(op, DenseOperator):
-        return "dense"
-    return "matfree"
-
-
-def _build_operator(op, csr: Optional[CSR], cfg: SolverConfig, pol, backend: str):
-    """Resolve (solver operator, spmv_format) for the non-distributed engines.
-
-    Explicit sparse inputs go through the :class:`SpmvEngine` layer — the
-    format knob (or its auto-selector) decides COO vs ELL vs BSR and the
-    kernel tiles; caller-provided operators are used as-is.
-    """
-    if backend == "chunked":
-        fmt = cfg.format if cfg.format != "auto" else "ell"
-        # Build the ELL engine first even under "auto": its tiles determine
-        # the per-chunk row padding, which the selection below must charge.
-        engine = make_engine(
-            csr,
-            fmt,
-            accum_dtype=pol.compute,
-            allowed=("coo", "ell"),  # per-chunk BSR/hybrid staging not implemented
-            storage_dtype=pol.storage,
-        )
-        if cfg.format == "auto":
-            # The chunked engine stages ELL per chunk at each chunk's OWN
-            # 128-aligned max row width, so its ELL eligibility must be
-            # judged on that realized layout — the whole-matrix selector's
-            # global-max-row overhead would veto exactly the hub matrices
-            # the per-chunk split handles (one hub inflates one chunk, not
-            # all), while narrow matrices still lose to the 128-lane pad.
-            # Memory being the backend's constraint, the padded footprint
-            # must also not dwarf the COO triplets it replaces.
-            from ..core.operators import chunk_row_bounds, chunk_rows_pad
-            from ..kernels.engine import ell_overhead_bound
-
-            row_nnz = csr.row_nnz()
-            padded_slots = 0
-            for r0, r1 in chunk_row_bounds(csr.indptr, csr.n, cfg.chunk_nnz):
-                w = int(row_nnz[r0:r1].max()) if r1 > r0 else 1
-                rows_pad = chunk_rows_pad(r1 - r0, engine.tiles.block_r, pol.storage)
-                padded_slots += rows_pad * (-(-max(1, w) // 128) * 128)
-            nnz = max(1, csr.nnz)
-            ell_bytes = padded_slots * (jnp.dtype(pol.storage).itemsize + 4)
-            overhead_ok = padded_slots / nnz <= ell_overhead_bound()
-            if not (overhead_ok and ell_bytes <= 4 * nnz * 12):
-                engine = make_engine(
-                    csr,
-                    "coo",
-                    stats=engine.stats,
-                    accum_dtype=pol.compute,
-                    storage_dtype=pol.storage,
-                )
-        chunked = ChunkedOperator(
-            csr,
-            chunk_nnz=cfg.chunk_nnz,
-            dtype=pol.storage,
-            engine=engine,
-            stage_depth=cfg.stage_depth,
-        )
-        return chunked, engine.format
-    if op is not None:
-        return op, _op_format(op)
-    if cfg.format == "auto" and cfg.impl != "coo":
-        # Back-compat: an explicitly requested legacy impl wins while the
-        # format knob is untouched.
-        legacy = make_operator(csr, cfg.impl, dtype=pol.storage)
-        return legacy, legacy.spmv_format
-    engine = make_engine(
-        csr, cfg.format, accum_dtype=pol.compute, storage_dtype=pol.storage
-    )
-    return make_operator(csr, dtype=pol.storage, engine=engine), engine.format
-
-
-def _run_restarted(op, k: int, cfg: SolverConfig, pol, v0, tol: float):
-    if cfg.reorth not in (None, "full"):
-        warnings.warn(
-            f"reorth={cfg.reorth!r} is ignored by the restarted backend: thick "
-            "restart requires full re-orthogonalization to keep the locked "
-            "Ritz block orthogonal",
-            stacklevel=3,
-        )
-    m = cfg.subspace or max(2 * k, k + 8)
-    max_restarts = cfg.max_restarts
-    if cfg.num_iters is not None:
-        # num_iters is a total step budget: the first cycle costs m steps,
-        # each further cycle refills m - k rows — take only the cycles that
-        # fit entirely (floor), never overshoot the stated budget.
-        if cfg.num_iters < k + 2:
-            raise ValueError(
-                f"num_iters={cfg.num_iters} cannot fund a restarted solve for "
-                f"k={k} (the subspace needs at least k + 2 = {k + 2} steps); "
-                "raise num_iters or use backend='single'"
-            )
-        m = min(m, cfg.num_iters)
-        extra_cycles = max(0, math.floor((cfg.num_iters - m) / max(m - k, 1)))
-        max_restarts = min(max_restarts, extra_cycles + 1)
-    return solve_restarted(
-        op,
+    session, _hit = get_session(A, cfg, mesh=mesh, n=n)
+    # Per-query fields come from THIS call's config — a cached session may
+    # have been prepared under different solver defaults.
+    return session.eigsh(
         k,
-        policy=pol,
-        m=m,
-        max_restarts=max_restarts,
-        tol=tol,
-        seed=cfg.seed,
-        v1=v0,
-    )
-
-
-def _run_distributed(csr: Optional[CSR], k: int, cfg: SolverConfig, pol, mesh, v0):
-    from jax.sharding import Mesh
-
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs.reshape(len(devs)), (cfg.axis,))
-    return solve_sharded(
-        csr,
-        k,
-        mesh,
-        policy=pol,
-        reorth=_resolve_reorth(cfg.reorth, "distributed"),
+        policy=cfg.policy,
+        tol=cfg.tol,
         num_iters=cfg.num_iters,
+        reorth=cfg.reorth,
+        v0=v0,
         seed=cfg.seed,
-        axis=cfg.axis,
-        v1=v0,
-        spmv_format=cfg.format,
+        subspace=cfg.subspace,
+        max_restarts=cfg.max_restarts,
+        jacobi=cfg.jacobi,
     )

@@ -14,11 +14,34 @@ import dataclasses
 from typing import Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.lanczos import LanczosResult
 
 __all__ = ["EigenResult"]
+
+
+def _jsonify(obj):
+    """Recursively convert numpy/jax scalars and arrays to JSON-safe types."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, (np.bool_, bool)):
+        return bool(obj)
+    if isinstance(obj, (np.integer, int)):
+        return int(obj)
+    if isinstance(obj, (np.floating, float)):
+        return float(obj)
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        arr = np.asarray(obj)
+        if arr.dtype == np.bool_:
+            return arr.tolist()
+        if np.issubdtype(arr.dtype, np.integer):
+            return arr.astype(np.int64).tolist()  # exact: indices must stay ints
+        return arr.astype(np.float64).tolist()
+    return obj
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,14 +70,20 @@ class EigenResult:
       partition: placement facts, backend-dependent: the distributed backend
         records the row partition (num_shards / n_pad / splits / axis); the
         chunked backend records the chunk stream (num_chunks / stage_depth /
-        ``"staging"`` counters: one-time host conversions, cumulative
-        device_put transfers, peak device-resident chunks).  Both carry a
-        ``"spmv"`` dict with the executed kernel format, tiles, tile
-        provenance (``"tiles_from"``: "table" | "tuned" | "override" — the
-        autotuner's decision trail), and padding stats.  None on the other
-        backends.
-      timings: seconds per phase — always contains ``"total_s"``; fixed-m
-        backends add ``"lanczos_s"`` / ``"jacobi_s"`` / ``"project_s"``.
+        ``"staging"`` counters: one-time host conversions, THIS call's
+        device_put transfers, peak device-resident chunks).  Every backend
+        (since the plan/execute split) carries a ``"spmv"`` dict with the
+        executed kernel format, tiles, tile provenance (``"tiles_from"``:
+        "table" | "tuned" | "override" — the autotuner's decision trail),
+        padding stats, and the session-reuse audit (``"conversions"`` /
+        ``"tuner_probes"`` this call paid, ``"reused"``).
+      timings: seconds per phase — always contains ``"total_s"``, plus the
+        plan/execute split ``"prepare_s"`` (what this call spent building
+        session state: coercion, conversion, tuning; 0.0 on session reuse)
+        and ``"solve_s"`` (the execute phase); fixed-m backends add
+        ``"lanczos_s"`` / ``"jacobi_s"`` / ``"project_s"``.  Batched
+        ``eigsh_many`` results sharing one sweep also carry
+        ``"amortized_over"`` (queries served by these timings).
       spmv_format: SpMV layout the hot loop executed — "coo" | "ell" | "bsr"
         | "hybrid" (quantile-capped ELL + COO hub tail) for explicit sparse
         inputs ("dense" / "matfree" otherwise).  The distributed backend
@@ -62,6 +91,10 @@ class EigenResult:
         entries agree).  This is the outcome of the ``format="auto"``
         selection (see ``repro.kernels.engine``).
       tridiag: raw Lanczos output (alpha / beta / basis), for diagnostics.
+      session_reuse: this solve executed against an already-prepared
+        :class:`~repro.api.session.EigenSession` — no coercion, format
+        conversion, or tile tuning was paid (the counters in
+        ``partition["spmv"]`` verify it).
     """
 
     eigenvalues: jax.Array
@@ -80,6 +113,7 @@ class EigenResult:
     timings: Dict[str, float]
     spmv_format: Optional[object] = None  # str, or tuple of str per shard
     tridiag: Optional[LanczosResult] = None
+    session_reuse: bool = False
 
     def __iter__(self):
         # scipy.sparse.linalg.eigsh compatibility: ``w, v = eigsh(A, k)``.
@@ -93,6 +127,65 @@ class EigenResult:
     @property
     def wall_time_s(self) -> float:
         return float(self.timings.get("total_s", 0.0))
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict of the result: arrays become nested lists, with
+        their dtypes recorded so :meth:`from_dict` can round-trip them.
+
+        ``tridiag`` (the raw Lanczos basis — large and diagnostic-only) is
+        dropped.  ``json.dumps(res.to_dict())`` is valid for every backend,
+        which is what serving layers and ``benchmarks/run.py`` persist.
+        """
+        return {
+            "schema": 1,
+            "eigenvalues": np.asarray(self.eigenvalues, dtype=np.float64).tolist(),
+            "eigenvectors": np.asarray(self.eigenvectors, dtype=np.float64).tolist(),
+            "residuals": np.asarray(self.residuals, dtype=np.float64).tolist(),
+            "converged": np.asarray(self.converged, dtype=bool).tolist(),
+            "dtypes": {
+                "eigenvalues": str(np.asarray(self.eigenvalues).dtype),
+                "eigenvectors": str(np.asarray(self.eigenvectors).dtype),
+            },
+            "iterations": int(self.iterations),
+            "restarts": int(self.restarts),
+            "k": int(self.k),
+            "n": int(self.n),
+            "backend": self.backend,
+            "policy": self.policy,
+            "tol": float(self.tol),
+            "num_devices": int(self.num_devices),
+            "partition": _jsonify(self.partition) if self.partition is not None else None,
+            "timings": {k: float(v) for k, v in self.timings.items()},
+            "spmv_format": _jsonify(self.spmv_format),
+            "session_reuse": bool(self.session_reuse),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EigenResult":
+        """Rebuild a result from :meth:`to_dict` output (``tridiag`` is None)."""
+        dtypes = d.get("dtypes", {})
+        ev_dt = jnp.dtype(dtypes.get("eigenvalues", "float32"))
+        x_dt = jnp.dtype(dtypes.get("eigenvectors", "float32"))
+        fmt = d.get("spmv_format")
+        return cls(
+            eigenvalues=jnp.asarray(d["eigenvalues"], dtype=ev_dt),
+            eigenvectors=jnp.asarray(d["eigenvectors"], dtype=x_dt),
+            residuals=np.asarray(d["residuals"], dtype=np.float64),
+            converged=np.asarray(d["converged"], dtype=bool),
+            iterations=int(d["iterations"]),
+            restarts=int(d["restarts"]),
+            k=int(d["k"]),
+            n=int(d["n"]),
+            backend=d["backend"],
+            policy=d["policy"],
+            tol=float(d["tol"]),
+            num_devices=int(d["num_devices"]),
+            partition=d.get("partition"),
+            timings=dict(d.get("timings", {})),
+            spmv_format=tuple(fmt) if isinstance(fmt, list) else fmt,
+            tridiag=None,
+            session_reuse=bool(d.get("session_reuse", False)),
+        )
 
     def summary(self) -> str:
         """One-paragraph human-readable report."""

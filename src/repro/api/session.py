@@ -1,0 +1,1103 @@
+"""Plan/execute split for the solver frontend: prepared ``EigenSession``s.
+
+``eigsh(A, k)`` reproduces the paper's transparency claim, but every call
+re-pays the full plan phase — input coercion, format census, ELL/BSR/hybrid
+conversion, tile tuning, shard remapping, chunk pinning — even when the
+matrix is identical.  The serving pattern the ROADMAP targets (one graph,
+millions of queries) is the opposite shape: one expensive plan, many cheap
+executes.  This module makes the split explicit:
+
+    sess = prepare(A, format="auto")            # pay the plan once
+    r1 = sess.eigsh(8, policy="FDF")            # execute: no conversions
+    r2 = sess.eigsh(4, tol=1e-7)                # execute: no conversions
+    rs = sess.eigsh_many([{"k": 4}, {"k": 8}])  # batched: one shared sweep
+
+A session owns the coerced input, the resolved placement, the converted
+device/shard/chunk operators and their tuned tiles — everything that is a
+function of the *matrix* and the layout-affecting config, and nothing that
+is a function of the *query* (k, policy, tol, num_iters, start vector).
+Operators are cached per precision policy (storage/compute dtype pair), so
+a session serves mixed-policy query streams without rebuilding.
+
+``eigsh`` stays the one-call entrypoint: it is now a thin wrapper over a
+small fingerprint-keyed session cache (content digest of the CSR arrays +
+the layout-affecting config fields), so naive repeated calls transparently
+hit the prepared path.  Reuse is *verified*, not assumed: results report
+the conversion and tuner-probe counts their call actually paid
+(``partition["spmv"]``) and a ``session_reuse`` provenance flag.
+
+``eigsh_many`` amortizes one matrix across many ``(k, policy, tol)``
+queries: queries are grouped by (backend, policy, reorth, jacobi), each
+group runs ONE Lanczos sweep at the group's largest subspace and every
+query slices its Ritz pairs from it (columns are independent, so a k=4
+answer inside a k=16 sweep is exactly the k=4 answer of that subspace —
+never worse than the query's own sweep).  Queries that differ only in
+their start vector run as a vmapped multi-start batch when the operator's
+matvec is batchable (dense / COO segment-sum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import os
+import threading
+import time
+import warnings
+from collections import OrderedDict
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributed import PreparedShards, prepare_sharded, solve_sharded
+from ..core.eigensolver import ritz_decompose, ritz_extract, solve_fixed
+from ..core.lanczos import LanczosResult, lanczos_tridiag_multi
+from ..core.operators import (
+    ChunkedOperator,
+    DenseOperator,
+    LinearOperator,
+    SparseOperator,
+    make_operator,
+)
+from ..core.precision import PrecisionPolicy
+from ..core.restarted import solve_restarted
+from ..kernels.engine import FORMATS, SpmvEngine, make_engine, tuner_probe_count
+from ..sparse.formats import CSR, conversion_count
+from .coerce import CoercedInput, coerce_input, matrix_fingerprint
+from .dispatch import select_backend
+from .frontend import SolverConfig, _default_tol, _resolve_reorth, resolve_policy
+from .result import EigenResult
+
+__all__ = [
+    "EigQuery",
+    "EigenSession",
+    "prepare",
+    "eigsh_many",
+    "policy_key",
+    "config_fingerprint",
+    "get_session",
+    "session_cache_clear",
+    "session_cache_info",
+]
+
+_UNSET = object()  # distinguishes "inherit the session default" from None
+
+# SolverConfig fields that change what a session *builds* (placement, device
+# layouts, tiles).  Per-query fields (k, tol, num_iters, reorth, seed,
+# subspace, max_restarts, jacobi, policy) are deliberately excluded: the
+# session resolves them per query, and policies get per-dtype operator
+# caches inside the session.
+_LAYOUT_FIELDS = ("backend", "format", "chunk_nnz", "stage_depth", "axis")
+
+
+def policy_key(policy: Union[str, PrecisionPolicy]) -> str:
+    """Stable operator-cache key of a policy: the dtype triple that decides
+    what gets built, never the spelling.  ``"FDF"`` and the ``FDF`` instance
+    key identically (the frontend's session cache relies on this)."""
+    p = resolve_policy(policy).effective()
+    return "-".join(
+        (
+            jnp.dtype(p.storage).name,
+            jnp.dtype(p.compute).name,
+            jnp.dtype(p.output).name,
+            f"c{int(p.compensated)}",
+        )
+    )
+
+
+def config_fingerprint(cfg: SolverConfig, fields: Optional[Sequence[str]] = None) -> str:
+    """Stable digest of a :class:`SolverConfig` (or the ``fields`` subset).
+
+    ``policy`` is normalized through :func:`resolve_policy` and hashed by
+    name + dtype triple, so a config carrying a ``PrecisionPolicy`` instance
+    fingerprints identically to one carrying the policy's name — passing
+    ``policy=FDF`` must hit the same cache entry as ``policy="FDF"``.
+    """
+    if fields is not None:
+        names = tuple(fields)
+    else:
+        names = tuple(f.name for f in dataclasses.fields(cfg))
+    parts = []
+    for name in sorted(names):
+        v = getattr(cfg, name)
+        if name == "policy":
+            p = resolve_policy(v)
+            v = (p.name, policy_key(p))
+        parts.append(f"{name}={v!r}")
+    return hashlib.blake2b("|".join(parts).encode(), digest_size=12).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EigQuery:
+    """One solve request against a prepared session.
+
+    Every field except ``k`` defaults to the session's configuration
+    (``_UNSET`` = inherit); explicit values — including ``None`` where that
+    is meaningful, e.g. ``tol=None`` for fixed-iteration mode — override it.
+    Plain dicts (``{"k": 8, "tol": 1e-6}``) and bare ints coerce.
+    """
+
+    k: int
+    policy: Any = None
+    tol: Any = _UNSET
+    num_iters: Any = _UNSET
+    reorth: Any = _UNSET
+    seed: Any = _UNSET
+    v0: Any = None
+    subspace: Any = _UNSET
+    max_restarts: Any = _UNSET
+    jacobi: Any = _UNSET
+
+
+def _as_query(q) -> EigQuery:
+    if isinstance(q, EigQuery):
+        return q
+    if isinstance(q, dict):
+        return EigQuery(**q)
+    if isinstance(q, (int, np.integer)):
+        return EigQuery(k=int(q))
+    raise TypeError(
+        f"eigsh_many query must be an EigQuery, a dict of its fields, or an "
+        f"int k; got {type(q).__name__}"
+    )
+
+
+class _NormQuery(NamedTuple):
+    """A query with every field resolved against the session defaults."""
+
+    idx: int
+    k: int
+    pol: PrecisionPolicy  # effective()
+    pkey: str
+    backend: str
+    reorth: str
+    tol_req: Optional[float]
+    tol_eff: float
+    num_iters: Optional[int]
+    m: int  # fixed-m subspace this query needs
+    subspace: Optional[int]
+    max_restarts: int
+    seed: int
+    v0: Any
+    jacobi: str
+    start_key: str
+
+
+@dataclasses.dataclass
+class _Prepared:
+    """One built execution plan: a device operator (single/chunked) or a
+    shard set (distributed), plus what building it cost."""
+
+    kind: str  # "single" | "chunked" | "distributed"
+    operator: Optional[LinearOperator]
+    shards: Optional[PreparedShards]
+    spmv_format: Any
+    engine: Optional[SpmvEngine]
+    build_s: float = 0.0
+    conversions: int = 0
+    tuner_probes: int = 0
+    # Arithmetic-kernel records (core.lanczos.Ops) memoized per policy: the
+    # jitted Lanczos loop is keyed on the record's identity, so reusing one
+    # record across queries turns every repeat solve into an XLA compile
+    # cache hit — without this, "zero-conversion" executes still re-trace.
+    ops_cache: Dict[tuple, Any] = dataclasses.field(default_factory=dict)
+
+    def ops_for(self, pol: PrecisionPolicy, fused: Optional[bool] = None):
+        from ..core.lanczos import make_local_ops
+
+        key = (pol, fused)
+        ops = self.ops_cache.get(key)
+        if ops is None:
+            ops = make_local_ops(self.operator.bound_matvec(pol), pol, fused=fused)
+            self.ops_cache[key] = ops
+        return ops
+
+
+def _op_format(op) -> str:
+    """SpMV layout label of a caller-provided operator."""
+    fmt = getattr(op, "spmv_format", None)
+    if fmt is not None:
+        return fmt
+    if isinstance(op, DenseOperator):
+        return "dense"
+    return "matfree"
+
+
+class EigenSession:
+    """Prepared solve state for one matrix; see the module docstring.
+
+    Build one with :func:`prepare` (direct construction is supported but
+    skips the frontend's session cache).  Concurrent use is safe but
+    serialized: a session runs one query batch at a time (an internal lock
+    — the shared operators and counters are single-stream); distinct
+    sessions run in parallel.
+
+    Attributes:
+      cfg: the layout/default configuration the session was prepared with.
+      n: problem dimension.
+      csr: the owned host CSR (None for matrix-free/dense inputs).
+      fingerprint: content+config digest keying the frontend cache (None
+        when the input has no fingerprintable bytes, or when the session was
+        built directly — digests are computed only for the cache's benefit).
+      prepare_s: wall seconds the eager plan phase took.
+      stats: {"queries", "sweeps", "cache_hits"} counters.
+    """
+
+    def __init__(
+        self,
+        A,
+        config: Optional[SolverConfig] = None,
+        *,
+        mesh=None,
+        n: Optional[int] = None,
+        _coerced: Optional[CoercedInput] = None,
+    ):
+        cfg = config or SolverConfig()
+        if cfg.format not in ("auto",) + FORMATS:
+            raise ValueError(
+                f"unknown SpMV format {cfg.format!r}; expected 'auto' or one of {FORMATS}"
+            )
+        self.cfg = cfg
+        self.mesh = mesh
+        self._default_mesh = None
+        t0 = time.perf_counter()
+        conv0, probes0 = conversion_count(), tuner_probe_count()
+        pol0 = resolve_policy(cfg.policy).effective()
+        ci = _coerced or coerce_input(A, n=n, storage_dtype=pol0.storage)
+        self.op, self.csr, self.n = ci.operator, ci.csr, ci.n
+        # Dense inputs keep the ORIGINAL array so a later query with a
+        # different storage dtype re-coerces from the source, not from an
+        # already-rounded copy.
+        self._dense = A if isinstance(A, (np.ndarray, jax.Array)) else None
+        self.device_count = mesh.size if mesh is not None else len(jax.devices())
+        self.matrix_fingerprint = ci.fingerprint
+        self.fingerprint = _session_key(ci.fingerprint, cfg, mesh) if ci.fingerprint else None
+        self._prepared: Dict[Tuple[str, str], _Prepared] = {}
+        self._build_lock = threading.Lock()
+        self._query_lock = threading.RLock()  # queries serialize per session
+        self.stats = {"queries": 0, "sweeps": 0, "cache_hits": 0}
+        self.prepare_s = time.perf_counter() - t0
+        self.prepare_conversions = conversion_count() - conv0
+        self.prepare_tuner_probes = tuner_probe_count() - probes0
+        # Coercion cost not yet attributed to any result: the first query
+        # that builds a plan claims it into its timings["prepare_s"] (a
+        # warmup() claims it into session.prepare_s instead).
+        self._unclaimed_init_s = self.prepare_s
+
+    def warmup(self) -> "EigenSession":
+        """Eagerly build the plan for the configured placement and default
+        policy, so :func:`prepare` — not the first query — pays the
+        conversion/tuning cost.  (Construction alone builds lazily: the
+        frontend's one-call path lets the first query build, so that call's
+        counters honestly report what it paid.)"""
+        pol0 = resolve_policy(self.cfg.policy).effective()
+        backend0 = self._resolve_backend(self.cfg.tol)
+        prep, built = self._ensure(backend0, pol0)
+        if built:
+            self.prepare_s += prep.build_s
+            self.prepare_conversions += prep.conversions
+            self.prepare_tuner_probes += prep.tuner_probes
+        self._unclaimed_init_s = 0.0  # prepare() paid it; queries report 0
+        return self
+
+    def _claim_init_s(self) -> float:
+        s, self._unclaimed_init_s = self._unclaimed_init_s, 0.0
+        return s
+
+    def _own_data(self) -> None:
+        """Snapshot the host-side problem data (CSR arrays / dense source) so
+        the session stops aliasing the caller's buffers.  Called when a
+        session enters the frontend cache: its fingerprint pins the bytes it
+        was built from, and a later in-place mutation by the caller must not
+        leak into lazily-built per-policy plans — that would serve a stale
+        plan for byte-identical input, the exact thing the digest forbids."""
+        from ..sparse.formats import CSR as _CSR
+
+        if self.csr is not None:
+            self.csr = _CSR(
+                indptr=np.array(self.csr.indptr, copy=True),
+                indices=np.array(self.csr.indices, copy=True),
+                data=np.array(self.csr.data, copy=True),
+                shape=self.csr.shape,
+            )
+        if self._dense is not None:
+            self._dense = np.array(self._dense, copy=True)
+
+    def approx_bytes(self) -> int:
+        """Rough memory footprint of what caching this session pins: the host
+        problem data plus ~one converted (device) copy per built plan —
+        lazily-built per-policy plans grow it, and the cache re-enforces its
+        byte budget after each build.  An estimate, not an audit."""
+        if self.csr is not None:
+            base = self.csr.indptr.nbytes + self.csr.indices.nbytes + self.csr.data.nbytes
+        elif self._dense is not None:
+            base = int(getattr(self._dense, "nbytes", 0))
+        else:
+            base = 0
+        return base * (2 + len(self._prepared))
+
+    # ------------------------------------------------------------ planning
+
+    def _resolve_backend(self, tol: Optional[float]) -> str:
+        return select_backend(
+            self.cfg.backend,
+            has_matrix=self.csr is not None,
+            nnz=self.csr.nnz if self.csr is not None else 0,
+            tol=tol,
+            device_count=self.device_count,
+            mesh_given=self.mesh is not None,
+        )
+
+    def _mesh_for_solve(self):
+        from jax.sharding import Mesh
+
+        if self.mesh is not None:
+            return self.mesh
+        if self._default_mesh is None:
+            devs = np.array(jax.devices())
+            self._default_mesh = Mesh(devs.reshape(len(devs)), (self.cfg.axis,))
+        return self._default_mesh
+
+    def _ensure(self, backend: str, pol: PrecisionPolicy) -> Tuple[_Prepared, bool]:
+        """Prepared plan for (placement, policy dtypes): build once, reuse.
+        Serialized: concurrent queries must not double-build one plan."""
+        kind = backend if backend in ("distributed", "chunked") else "single"
+        key = (kind, policy_key(pol))
+        with self._build_lock:
+            hit = self._prepared.get(key)
+            if hit is not None:
+                return hit, False
+            t0 = time.perf_counter()
+            conv0, probes0 = conversion_count(), tuner_probe_count()
+            if kind == "distributed":
+                prep = self._build_distributed(pol)
+            elif kind == "chunked":
+                prep = self._build_chunked(pol)
+            else:
+                prep = self._build_single(pol)
+            prep.build_s = time.perf_counter() - t0
+            prep.conversions = conversion_count() - conv0
+            prep.tuner_probes = tuner_probe_count() - probes0
+            self._prepared[key] = prep
+        # A lazy build grew this session's footprint: let the cache re-check
+        # its byte budget (no-op for sessions that were never cached).
+        _cache_enforce_budget()
+        return prep, True
+
+    def _build_single(self, pol: PrecisionPolicy) -> _Prepared:
+        if self.op is not None:
+            op = self.op
+            if isinstance(op, DenseOperator) and self._dense is not None:
+                want = jnp.dtype(pol.storage)
+                if jnp.dtype(op.a.dtype) != want:
+                    op = DenseOperator(jnp.asarray(self._dense, dtype=want))
+            return _Prepared("single", op, None, _op_format(op), None)
+        engine = make_engine(
+            self.csr, self.cfg.format, accum_dtype=pol.compute, storage_dtype=pol.storage
+        )
+        op = make_operator(self.csr, dtype=pol.storage, engine=engine)
+        return _Prepared("single", op, None, engine.format, engine)
+
+    def _build_chunked(self, pol: PrecisionPolicy) -> _Prepared:
+        cfg, csr = self.cfg, self.csr
+        fmt = cfg.format if cfg.format != "auto" else "ell"
+        # Build the ELL engine first even under "auto": its tiles determine
+        # the per-chunk row padding, which the selection below must charge.
+        engine = make_engine(
+            csr,
+            fmt,
+            accum_dtype=pol.compute,
+            allowed=("coo", "ell"),  # per-chunk BSR/hybrid staging not implemented
+            storage_dtype=pol.storage,
+        )
+        if cfg.format == "auto":
+            # The chunked engine stages ELL per chunk at each chunk's OWN
+            # 128-aligned max row width, so its ELL eligibility must be
+            # judged on that realized layout — the whole-matrix selector's
+            # global-max-row overhead would veto exactly the hub matrices
+            # the per-chunk split handles (one hub inflates one chunk, not
+            # all), while narrow matrices still lose to the 128-lane pad.
+            # Memory being the backend's constraint, the padded footprint
+            # must also not dwarf the COO triplets it replaces.
+            from ..core.operators import chunk_row_bounds, chunk_rows_pad
+            from ..kernels.engine import ell_overhead_bound
+
+            row_nnz = csr.row_nnz()
+            padded_slots = 0
+            for r0, r1 in chunk_row_bounds(csr.indptr, csr.n, cfg.chunk_nnz):
+                w = int(row_nnz[r0:r1].max()) if r1 > r0 else 1
+                rows_pad = chunk_rows_pad(r1 - r0, engine.tiles.block_r, pol.storage)
+                padded_slots += rows_pad * (-(-max(1, w) // 128) * 128)
+            nnz = max(1, csr.nnz)
+            ell_bytes = padded_slots * (jnp.dtype(pol.storage).itemsize + 4)
+            overhead_ok = padded_slots / nnz <= ell_overhead_bound()
+            if not (overhead_ok and ell_bytes <= 4 * nnz * 12):
+                engine = make_engine(
+                    csr,
+                    "coo",
+                    stats=engine.stats,
+                    accum_dtype=pol.compute,
+                    storage_dtype=pol.storage,
+                )
+        op = ChunkedOperator(
+            csr,
+            chunk_nnz=cfg.chunk_nnz,
+            dtype=pol.storage,
+            engine=engine,
+            stage_depth=cfg.stage_depth,
+        )
+        return _Prepared("chunked", op, None, engine.format, engine)
+
+    def _build_distributed(self, pol: PrecisionPolicy) -> _Prepared:
+        mesh = self._mesh_for_solve()
+        g = mesh.shape[self.cfg.axis]
+        shards = prepare_sharded(self.csr, g, pol, self.cfg.format)
+        return _Prepared("distributed", None, shards, shards.engine.format, shards.engine)
+
+    # ----------------------------------------------------------- execution
+
+    def eigsh(
+        self,
+        k: int,
+        *,
+        policy=None,
+        tol=_UNSET,
+        num_iters=_UNSET,
+        reorth=_UNSET,
+        v0=None,
+        seed=_UNSET,
+        subspace=_UNSET,
+        max_restarts=_UNSET,
+        jacobi=_UNSET,
+    ) -> EigenResult:
+        """Solve one query against the prepared plan.  Unset keywords inherit
+        the session configuration; see :func:`repro.api.eigsh` for semantics."""
+        q = EigQuery(
+            k=k,
+            policy=policy,
+            tol=tol,
+            num_iters=num_iters,
+            reorth=reorth,
+            seed=seed,
+            v0=v0,
+            subspace=subspace,
+            max_restarts=max_restarts,
+            jacobi=jacobi,
+        )
+        return self.eigsh_many([q])[0]
+
+    def eigsh_many(self, queries, defaults: Optional[SolverConfig] = None) -> List[EigenResult]:
+        """Batched execute: many ``(k, policy, tol, ...)`` queries, one matrix.
+
+        Queries are grouped by (backend, policy, reorth, jacobi); each group
+        (per start vector) runs one shared Lanczos sweep at the group's
+        largest subspace and every member slices its Ritz pairs out of it.
+        Groups differing only in start vector batch through the vmapped
+        multi-start sweep when the operator supports it.  Results come back
+        in input order, one :class:`EigenResult` per query.
+
+        Merged groups run under the group's *most permissive* cost settings
+        (largest ``num_iters``/``subspace``/``max_restarts``; a query with no
+        budget lifts the cap for its restarted group) and its tightest
+        ``tol`` — per-query step budgets are advisory under batching: the
+        shared sweep can only make an individual answer more accurate, and
+        its cost is paid once for the whole group.  Submit a query alone (or
+        via :func:`repro.api.eigsh`) when its budget must bind exactly.
+        """
+        if not queries:
+            return []
+        cfg = defaults or self.cfg
+        # Serialized: concurrent queries on ONE session would race the shared
+        # operator counters and stats (distinct sessions still run parallel).
+        with self._query_lock:
+            qs = [self._normalize(_as_query(q), i, cfg) for i, q in enumerate(queries)]
+            self.stats["queries"] += len(qs)
+            groups: Dict[tuple, List[_NormQuery]] = {}
+            for q in qs:
+                key = (q.backend, q.pkey, q.pol.name, q.reorth, q.jacobi)
+                groups.setdefault(key, []).append(q)
+            results: List[Optional[EigenResult]] = [None] * len(qs)
+            for group in groups.values():
+                for idx, res in self._solve_group(group):
+                    results[idx] = res
+        return results  # type: ignore[return-value]
+
+    # ---------------------------------------------------------- internals
+
+    def _normalize(self, q: EigQuery, idx: int, cfg: SolverConfig) -> _NormQuery:
+        def pick(v, dflt):
+            return dflt if v is _UNSET else v
+
+        k = int(q.k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if k > self.n:
+            raise ValueError(f"k={k} exceeds the operator dimension n={self.n}")
+        pol = resolve_policy(q.policy if q.policy is not None else cfg.policy).effective()
+        tol_req = pick(q.tol, cfg.tol)
+        backend = self._resolve_backend(tol_req)
+        reorth_raw = pick(q.reorth, cfg.reorth)
+        num_iters = pick(q.num_iters, cfg.num_iters)
+        if backend == "restarted":
+            if reorth_raw not in (None, "full"):
+                warnings.warn(
+                    f"reorth={reorth_raw!r} is ignored by the restarted backend: "
+                    "thick restart requires full re-orthogonalization to keep "
+                    "the locked Ritz block orthogonal",
+                    stacklevel=4,
+                )
+            reorth = "full"
+            if num_iters is not None and num_iters < k + 2:
+                raise ValueError(
+                    f"num_iters={num_iters} cannot fund a restarted solve for "
+                    f"k={k} (the subspace needs at least k + 2 = {k + 2} steps); "
+                    "raise num_iters or use backend='single'"
+                )
+        else:
+            reorth = _resolve_reorth(reorth_raw, backend)
+            if num_iters is not None and num_iters < k:
+                # Validated per query: a merged group's shared (larger)
+                # subspace must not mask an individually infeasible request.
+                raise ValueError(f"num_iters must be >= k (got {num_iters} < {k})")
+        max_restarts = int(pick(q.max_restarts, cfg.max_restarts))
+        if backend == "restarted" and max_restarts < 1:
+            raise ValueError(f"max_restarts must be >= 1, got {max_restarts}")
+        seed = int(pick(q.seed, cfg.seed))
+        if q.v0 is not None:
+            h = hashlib.blake2b(np.asarray(q.v0).tobytes(), digest_size=8)
+            start_key = f"v0:{h.hexdigest()}"
+        else:
+            start_key = f"seed:{seed}"
+        m = int(num_iters) if num_iters is not None else k
+        return _NormQuery(
+            idx=idx,
+            k=k,
+            pol=pol,
+            pkey=policy_key(pol),
+            backend=backend,
+            reorth=reorth,
+            tol_req=tol_req,
+            tol_eff=tol_req if tol_req is not None else _default_tol(pol),
+            num_iters=num_iters,
+            m=m,
+            subspace=pick(q.subspace, cfg.subspace),
+            max_restarts=max_restarts,
+            seed=seed,
+            v0=q.v0,
+            jacobi=pick(q.jacobi, cfg.jacobi),
+            start_key=start_key,
+        )
+
+    def _solve_group(self, group: List[_NormQuery]):
+        backend, pol = group[0].backend, group[0].pol
+        prep, built = self._ensure(backend, pol)
+        if not built:
+            self.stats["cache_hits"] += 1
+        starts: "OrderedDict[str, List[_NormQuery]]" = OrderedDict()
+        for q in group:
+            starts.setdefault(q.start_key, []).append(q)
+        if backend == "restarted":
+            return self._run_restarted(starts, prep, built)
+        if backend == "distributed":
+            return self._run_distributed(starts, prep, built)
+        return self._run_fixed(starts, prep, built, backend)
+
+    def _finish(
+        self,
+        q: _NormQuery,
+        prep: _Prepared,
+        built: bool,
+        *,
+        eigenvalues,
+        eigenvectors,
+        residuals,
+        evals_f64,
+        iterations,
+        restarts,
+        timings,
+        partition,
+        spmv_format,
+        tridiag,
+        group_size,
+    ) -> Tuple[int, EigenResult]:
+        # Judge convergence on the engines' full-precision eigenvalues so the
+        # flags agree with the restarted engine's own stopping decision (the
+        # output-dtype cast could flip a boundary pair).
+        lam = np.abs(np.asarray(evals_f64, dtype=np.float64))
+        converged = np.asarray(residuals) <= q.tol_eff * np.maximum(lam, 1e-300)
+        t = dict(timings)
+        solve_s = float(t.get("total_s", 0.0))
+        t["solve_s"] = solve_s
+        # A building call also claims the session's so-far-unattributed init
+        # (coercion/fingerprint) cost, so first-call totals cover real wall
+        # time; pure executes report 0.
+        t["prepare_s"] = (prep.build_s + self._claim_init_s()) if built else 0.0
+        t["total_s"] = t["prepare_s"] + solve_s
+        if group_size > 1:
+            t["amortized_over"] = float(group_size)
+        part = dict(partition) if partition else {}
+        spmv = dict(part.get("spmv", {}))
+        if not spmv:
+            if prep.engine is not None:
+                spmv = prep.engine.describe()
+            else:
+                fmt0 = spmv_format[0] if isinstance(spmv_format, tuple) else spmv_format
+                spmv = {"format": fmt0}
+        # The reuse contract, verified: what THIS call actually paid.
+        spmv["conversions"] = prep.conversions if built else 0
+        spmv["tuner_probes"] = prep.tuner_probes if built else 0
+        spmv["reused"] = not built
+        part["spmv"] = spmv
+        res = EigenResult(
+            eigenvalues=eigenvalues,
+            eigenvectors=eigenvectors,
+            residuals=np.asarray(residuals, dtype=np.float64),
+            converged=converged,
+            iterations=int(iterations),
+            restarts=int(restarts),
+            k=q.k,
+            n=self.n,
+            backend=q.backend,
+            policy=q.pol.name,
+            tol=q.tol_eff,
+            num_devices=self.device_count if q.backend == "distributed" else 1,
+            partition=part,
+            timings=t,
+            spmv_format=spmv_format,
+            tridiag=tridiag,
+            session_reuse=not built,
+        )
+        return q.idx, res
+
+    def _chunked_partition(self, prep: _Prepared, transfers_before: int) -> dict:
+        op = prep.operator
+        staging = dict(op.staging)
+        # transfers is the per-call cost (the operator's counter is
+        # cumulative across a reused session's queries); conversions stays
+        # the one-time pinning count and max_resident the residency bound —
+        # both are invariants of the plan, not per-call costs.
+        staging["transfers"] = staging["transfers"] - transfers_before
+        return {
+            "num_chunks": op.num_chunks,
+            "stage_depth": op.stage_depth,
+            "staging": staging,
+            "spmv": op.engine.describe() if op.engine is not None else {"format": "coo"},
+        }
+
+    def _run_fixed(self, starts, prep: _Prepared, built: bool, backend: str):
+        out = []
+        pol = next(iter(starts.values()))[0].pol
+        all_qs = [q for qs in starts.values() for q in qs]
+        reorth, jacobi = all_qs[0].reorth, all_qs[0].jacobi
+        if len(starts) > 1 and self._vmappable(prep):
+            out.extend(self._run_fixed_multistart(starts, prep, built))
+            return out
+        for qs in starts.values():
+            k_max = max(q.k for q in qs)
+            m = max(q.m for q in qs)
+            transfers0 = prep.operator.staging["transfers"] if backend == "chunked" else 0
+            sweep = solve_fixed(
+                prep.operator,
+                k_max,
+                policy=pol,
+                reorth=reorth,
+                num_iters=m,
+                v1=qs[0].v0,
+                seed=qs[0].seed,
+                jacobi=jacobi,
+                ops=prep.ops_for(pol),
+            )
+            self.stats["sweeps"] += 1
+            partition = (
+                self._chunked_partition(prep, transfers0) if backend == "chunked" else {}
+            )
+            for q in qs:
+                out.append(
+                    self._finish(
+                        q,
+                        prep,
+                        built,
+                        eigenvalues=sweep.eigenvalues[: q.k],
+                        eigenvectors=sweep.eigenvectors[:, : q.k],
+                        residuals=sweep.residuals[: q.k],
+                        evals_f64=sweep.eigenvalues_f64[: q.k],
+                        iterations=sweep.iterations,
+                        restarts=0,
+                        timings=sweep.timings,
+                        partition=partition,
+                        spmv_format=prep.spmv_format,
+                        tridiag=sweep.tridiag,
+                        group_size=len(qs),
+                    )
+                )
+        return out
+
+    def _vmappable(self, prep: _Prepared) -> bool:
+        """Is this operator's matvec safe under ``jax.vmap``?  Dense matmul
+        and the COO ``segment_sum`` path batch cleanly; the Pallas kernel
+        layouts are excluded (their interpret-mode batching rule is
+        unvalidated), as is the host-loop chunked operator."""
+        op = prep.operator
+        if isinstance(op, DenseOperator):
+            return True
+        if isinstance(op, SparseOperator):
+            if op.engine is not None:
+                return op.engine.format == "coo"
+            return op.impl == "coo"
+        return False
+
+    def _run_fixed_multistart(self, starts, prep: _Prepared, built: bool):
+        """One vmapped Lanczos sweep over all start vectors of a group."""
+        out = []
+        all_qs = [q for qs in starts.values() for q in qs]
+        pol, reorth, jacobi = all_qs[0].pol, all_qs[0].reorth, all_qs[0].jacobi
+        m = max(q.m for q in all_qs)
+        v1s = []
+        for qs in starts.values():
+            q0 = qs[0]
+            if q0.v0 is not None:
+                v1s.append(jnp.asarray(q0.v0, dtype=pol.compute))
+            else:
+                v1s.append(
+                    jax.random.normal(jax.random.PRNGKey(q0.seed), (self.n,), dtype=pol.compute)
+                )
+        t0 = time.perf_counter()
+        batch = lanczos_tridiag_multi(
+            prep.operator.bound_matvec(pol),
+            jnp.stack(v1s),
+            m,
+            pol,
+            reorth=reorth,
+            ops=prep.ops_for(pol, fused=False),
+        )
+        batch = jax.tree.map(lambda x: x.block_until_ready(), batch)
+        t_lanczos = time.perf_counter() - t0
+        self.stats["sweeps"] += 1
+        for s, qs in enumerate(starts.values()):
+            lres = LanczosResult(
+                alpha=batch.alpha[s],
+                beta=batch.beta[s],
+                basis=batch.basis[s],
+                beta_last=batch.beta_last[s],
+            )
+            t1 = time.perf_counter()
+            evals, w, evals_f64, w_f64, beta_m = ritz_decompose(lres, pol, jacobi)
+            k_max = max(q.k for q in qs)
+            evals_k, x, resid = ritz_extract(lres, evals, w, w_f64, beta_m, k_max, pol)
+            t_finish = time.perf_counter() - t1
+            timings = {
+                "lanczos_s": t_lanczos,  # shared across all starts of the batch
+                "jacobi_s": t_finish,
+                "total_s": t_lanczos + t_finish,
+            }
+            for q in qs:
+                out.append(
+                    self._finish(
+                        q,
+                        prep,
+                        built,
+                        eigenvalues=evals_k[: q.k],
+                        eigenvectors=x[:, : q.k],
+                        residuals=resid[: q.k],
+                        evals_f64=evals_f64[: q.k],
+                        iterations=m,
+                        restarts=0,
+                        timings=timings,
+                        partition={},
+                        spmv_format=prep.spmv_format,
+                        tridiag=lres,
+                        group_size=len(all_qs),
+                    )
+                )
+        return out
+
+    def _run_restarted(self, starts, prep: _Prepared, built: bool):
+        out = []
+        for qs in starts.values():
+            q0 = qs[0]
+            pol = q0.pol
+            k_max = max(q.k for q in qs)
+            m = max(q.subspace or max(2 * q.k, q.k + 8) for q in qs)
+            m = max(m, k_max + 2)
+            max_restarts = max(q.max_restarts for q in qs)
+            budgets = [q.num_iters for q in qs]
+            if all(b is not None for b in budgets):
+                # num_iters is a total step budget: the first cycle costs m
+                # steps, each further cycle refills m - k rows — take only
+                # the cycles that fit entirely (floor), never overshoot.
+                budget = max(budgets)
+                m = min(m, budget)
+                extra = max(0, math.floor((budget - m) / max(m - k_max, 1)))
+                max_restarts = min(max_restarts, extra + 1)
+            tol_target = min(q.tol_eff for q in qs)
+            sweep = solve_restarted(
+                prep.operator,
+                k_max,
+                policy=pol,
+                m=m,
+                max_restarts=max_restarts,
+                tol=tol_target,
+                seed=q0.seed,
+                v1=q0.v0,
+            )
+            self.stats["sweeps"] += 1
+            for q in qs:
+                out.append(
+                    self._finish(
+                        q,
+                        prep,
+                        built,
+                        eigenvalues=sweep.eigenvalues[: q.k],
+                        eigenvectors=sweep.eigenvectors[:, : q.k],
+                        residuals=sweep.residuals[: q.k],
+                        evals_f64=sweep.eigenvalues_f64[: q.k],
+                        iterations=sweep.iterations,
+                        restarts=sweep.restarts,
+                        timings=sweep.timings,
+                        partition={},
+                        spmv_format=prep.spmv_format,
+                        tridiag=sweep.tridiag,
+                        group_size=len(qs),
+                    )
+                )
+        return out
+
+    def _run_distributed(self, starts, prep: _Prepared, built: bool):
+        out = []
+        mesh = self._mesh_for_solve()
+        for qs in starts.values():
+            q0 = qs[0]
+            k_max = max(q.k for q in qs)
+            m = max(q.m for q in qs)
+            sweep = solve_sharded(
+                self.csr,
+                k_max,
+                mesh,
+                policy=q0.pol,
+                reorth=q0.reorth,
+                num_iters=m,
+                seed=q0.seed,
+                axis=self.cfg.axis,
+                v1=q0.v0,
+                prepared=prep.shards,
+            )
+            self.stats["sweeps"] += 1
+            for q in qs:
+                out.append(
+                    self._finish(
+                        q,
+                        prep,
+                        built,
+                        eigenvalues=sweep.eigenvalues[: q.k],
+                        eigenvectors=sweep.eigenvectors[:, : q.k],
+                        residuals=sweep.residuals[: q.k],
+                        evals_f64=sweep.eigenvalues_f64[: q.k],
+                        iterations=sweep.iterations,
+                        restarts=0,
+                        timings=sweep.timings,
+                        partition=sweep.partition,
+                        spmv_format=sweep.spmv_format,
+                        tridiag=sweep.tridiag,
+                        group_size=len(qs),
+                    )
+                )
+        return out
+
+
+# --------------------------------------------------------------- frontends
+
+
+def prepare(
+    A,
+    *,
+    config: Optional[SolverConfig] = None,
+    n: Optional[int] = None,
+    mesh=None,
+    policy: Union[str, PrecisionPolicy] = "FDF",
+    backend: str = "auto",
+    format: str = "auto",
+    reorth: Optional[str] = None,
+    tol: Optional[float] = None,
+    num_iters: Optional[int] = None,
+    subspace: Optional[int] = None,
+    max_restarts: int = 30,
+    seed: int = 0,
+    chunk_nnz: int = 1 << 20,
+    stage_depth: int = 1,
+    jacobi: str = "host",
+    axis: str = "data",
+) -> EigenSession:
+    """Plan phase of :func:`repro.api.eigsh`: coerce, place, convert, tune —
+    once — and return the :class:`EigenSession` that owns the result.
+
+    Arguments mirror :func:`repro.api.eigsh` (minus the per-query ``k`` /
+    ``v0``); the solver knobs become the session's per-query *defaults* and
+    the layout knobs (``format``, ``backend``, ``chunk_nnz``, ``stage_depth``,
+    ``axis``, ``mesh``) decide what gets built.
+
+    The session keeps a reference to the host matrix for lazy per-policy
+    builds — do not mutate it in place while holding the session (re-run
+    ``prepare`` on changed data; the frontend's cache copies instead).
+    """
+    cfg = config or SolverConfig(
+        policy=policy,
+        backend=backend,
+        reorth=reorth,
+        tol=tol,
+        num_iters=num_iters,
+        subspace=subspace,
+        max_restarts=max_restarts,
+        seed=seed,
+        format=format,
+        chunk_nnz=chunk_nnz,
+        stage_depth=stage_depth,
+        jacobi=jacobi,
+        axis=axis,
+    )
+    return EigenSession(A, cfg, mesh=mesh, n=n).warmup()
+
+
+def eigsh_many(A, queries, *, config=None, n=None, mesh=None, **solver_kwargs):
+    """Module-level batched solve: ``prepare`` (or hit the session cache),
+    then :meth:`EigenSession.eigsh_many`.  ``solver_kwargs`` are the
+    :func:`prepare` keywords; queries are dicts / :class:`EigQuery` / ints."""
+    cfg = config or SolverConfig(**solver_kwargs)
+    session, _ = get_session(A, cfg, mesh=mesh, n=n)
+    return session.eigsh_many(queries, defaults=cfg)
+
+
+# ----------------------------------------------------------- session cache
+
+
+_SESSION_CACHE: "OrderedDict[str, EigenSession]" = OrderedDict()
+_CACHE_LOCK = threading.Lock()  # eigsh() must stay safe to call concurrently
+
+
+def _cache_limit() -> int:
+    try:
+        return int(os.environ.get("REPRO_EIGSH_SESSION_CACHE", "8"))
+    except ValueError:
+        return 8
+
+
+def _cache_budget_bytes() -> int:
+    """Byte budget across cached sessions (default 2 GB).  A session whose
+    problem data alone exceeds it is never cached — the out-of-core sizes
+    the chunked backend exists for must not stay pinned after the call."""
+    try:
+        return int(float(os.environ.get("REPRO_EIGSH_SESSION_CACHE_MB", "2048")) * 1e6)
+    except ValueError:
+        return 2_048_000_000
+
+
+def _session_key(matrix_fp: str, cfg: SolverConfig, mesh) -> str:
+    if mesh is None:
+        mesh_part = "mesh:none"
+    else:
+        ids = [int(d.id) for d in np.asarray(mesh.devices).flat]
+        mesh_part = f"mesh:{tuple(mesh.axis_names)}:{ids}"
+    return "|".join(
+        (
+            matrix_fp,
+            config_fingerprint(cfg, _LAYOUT_FIELDS),
+            mesh_part,
+            f"dev{len(jax.devices())}",
+        )
+    )
+
+
+def _cache_lookup(key: str) -> Optional[EigenSession]:
+    with _CACHE_LOCK:
+        hit = _SESSION_CACHE.get(key)
+        if hit is not None:
+            _SESSION_CACHE.move_to_end(key)
+        return hit
+
+
+def _cache_enforce_budget() -> None:
+    """Evict LRU sessions until the cache fits its byte budget.  Called on
+    store AND after any lazy per-policy plan build (plans grow a cached
+    session's footprint after admission)."""
+    budget = _cache_budget_bytes()
+    with _CACHE_LOCK:
+        while _SESSION_CACHE and (
+            sum(s.approx_bytes() for s in _SESSION_CACHE.values()) > budget
+        ):
+            _SESSION_CACHE.popitem(last=False)
+
+
+def _cache_store(key: str, session: EigenSession) -> None:
+    if session.approx_bytes() > _cache_budget_bytes():
+        return  # larger than the whole budget: serve it, don't pin it
+    session._own_data()  # cached plans must not alias caller-mutable buffers
+    with _CACHE_LOCK:
+        _SESSION_CACHE[key] = session
+        while len(_SESSION_CACHE) > _cache_limit():
+            _SESSION_CACHE.popitem(last=False)
+    _cache_enforce_budget()
+
+
+def get_session(
+    A, config: Optional[SolverConfig] = None, *, mesh=None, n: Optional[int] = None
+) -> Tuple[EigenSession, bool]:
+    """Session for (matrix, layout config): fingerprint-keyed LRU when the
+    input has hashable bytes (CSR / scipy / dense), fresh prepare otherwise.
+
+    Returns ``(session, cache_hit)``.  CSR and dense inputs are probed by
+    content digest BEFORE any coercion, so a cache hit pays one O(bytes)
+    hash and nothing else (no device transfer, no dtype cast); scipy inputs
+    pay their one ``tocsr`` copy first (the digest is of the converted CSR).
+    The cache holds at most ``REPRO_EIGSH_SESSION_CACHE`` sessions (default
+    8; 0 disables) within a ``REPRO_EIGSH_SESSION_CACHE_MB`` byte budget;
+    mutating a matrix in place changes its digest, so stale plans are never
+    served — byte-identical re-submissions are.
+    """
+    cfg = config or SolverConfig()
+    limit = _cache_limit()
+    key = None
+    fp = None
+    if limit > 0 and isinstance(A, (CSR, np.ndarray, jax.Array)):
+        # Digest-first fast path: a hit must not pay coercion.  (Note: a
+        # device-resident jax.Array still pays one device->host read here —
+        # the digest is of the host bytes; keep host copies of matrices you
+        # re-submit in a hot loop.)
+        fp = matrix_fingerprint(A)
+        if fp is not None:
+            key = _session_key(fp, cfg, mesh)
+            hit = _cache_lookup(key)
+            if hit is not None:
+                return hit, True
+    pol0 = resolve_policy(cfg.policy).effective()
+    ci = coerce_input(
+        A, n=n, storage_dtype=pol0.storage, fingerprint=fp, want_fingerprint=limit > 0
+    )
+    if key is None and limit > 0 and ci.fingerprint is not None:
+        key = _session_key(ci.fingerprint, cfg, mesh)
+        hit = _cache_lookup(key)
+        if hit is not None:
+            return hit, True
+    session = EigenSession(A, cfg, mesh=mesh, n=n, _coerced=ci)
+    if key is not None:
+        _cache_store(key, session)
+    return session, False
+
+
+def session_cache_clear() -> None:
+    """Drop every cached session (frees their device buffers)."""
+    with _CACHE_LOCK:
+        _SESSION_CACHE.clear()
+
+
+def session_cache_info() -> dict:
+    with _CACHE_LOCK:
+        size = len(_SESSION_CACHE)
+        total = sum(s.approx_bytes() for s in _SESSION_CACHE.values())
+    return {
+        "size": size,
+        "limit": _cache_limit(),
+        "bytes": total,
+        "budget_bytes": _cache_budget_bytes(),
+    }

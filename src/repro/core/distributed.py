@@ -51,6 +51,8 @@ from .precision import PrecisionPolicy, FDF, compensated_sum
 
 __all__ = [
     "DISTRIBUTED_FORMATS",
+    "PreparedShards",
+    "prepare_sharded",
     "ShardedSolveOutput",
     "solve_sharded",
     "topk_eigs_sharded",
@@ -174,45 +176,36 @@ def sharded_lanczos(
     return LanczosResult(alpha=alpha, beta=beta, basis=basis_sh, beta_last=beta_last)
 
 
-class ShardedSolveOutput(NamedTuple):
-    """Raw engine output consumed by the ``eigsh`` frontend."""
+class PreparedShards(NamedTuple):
+    """Plan-time product of the distributed engine: the nnz-balanced row
+    partition, the shard-stacked SpMV arrays in the engine's chosen kernel
+    format, and the engine itself (tiles + accum dtype).  Building one is
+    the entire per-matrix setup cost of :func:`solve_sharded`; reusing it
+    across solves (``api/session.py``) skips every host-side conversion."""
 
-    eigenvalues: jax.Array  # (k,) output dtype
-    eigenvectors: jax.Array  # (n, k) output dtype
-    residuals: np.ndarray  # (k,) float64 — Ritz residual bounds
-    eigenvalues_f64: np.ndarray  # (k,) float64 — pre-output-cast, for tol checks
-    tridiag: LanczosResult
-    iterations: int
-    partition: dict  # num_shards / n_pad / splits / axis / spmv
-    timings: dict
-    spmv_format: tuple = ()  # per-shard executed SpMV format
+    pm: PartitionedMatrix
+    mats: tuple  # shard-stacked SpMV arrays matching engine.format
+    engine: SpmvEngine
+    spmv_meta: dict  # engine.describe() + conversion stats
+    convert_s: float  # one-time partition + conversion wall time
 
 
-def solve_sharded(
+def prepare_sharded(
     csr: CSR,
-    k: int,
-    mesh: Mesh,
+    g: int,
     policy: PrecisionPolicy = FDF,
-    reorth: str = "full",
-    num_iters: Optional[int] = None,
-    seed: int = 0,
-    axis: str = "data",
-    v1: Optional[jax.Array] = None,
     spmv_format: str = "auto",
     engine: Optional[SpmvEngine] = None,
-) -> ShardedSolveOutput:
-    """End-to-end distributed Top-K eigensolver on a 1-axis mesh.
+) -> PreparedShards:
+    """Partition + convert a CSR for a ``g``-shard distributed solve.
 
-    ``spmv_format``: "auto" picks ELL vs blocked-ELL per shard statistics
-    (kernel-backed hot loop, the paper's design); "ell" / "bsr" force a
-    kernel layout; "coo" opts back into the ``segment_sum`` reference path.
-    A prebuilt ``engine`` overrides ``spmv_format`` entirely.
+    This is the *plan* half of :func:`solve_sharded`: everything here is a
+    pure function of (matrix, shard count, storage/compute dtypes, format)
+    and none of it depends on the query (k, num_iters, tol, start vector),
+    so one ``PreparedShards`` amortizes across arbitrarily many solves.
     """
     policy = policy.effective()
-    g = mesh.shape[axis]
-    m = num_iters or k
-
-    t_conv0 = time.perf_counter()
+    t0 = time.perf_counter()
     splits = nnz_balanced_splits(csr.indptr, g)
     if engine is None:
         allowed = DISTRIBUTED_FORMATS if spmv_format == "auto" else ("coo",) + DISTRIBUTED_FORMATS
@@ -268,7 +261,65 @@ def solve_sharded(
         spmv_meta.update(conv_stats)
     else:
         mats = (pm.row, pm.col, pm.val)
-    t_convert = time.perf_counter() - t_conv0
+    return PreparedShards(
+        pm=pm,
+        mats=mats,
+        engine=engine,
+        spmv_meta=spmv_meta,
+        convert_s=time.perf_counter() - t0,
+    )
+
+
+class ShardedSolveOutput(NamedTuple):
+    """Raw engine output consumed by the ``eigsh`` frontend."""
+
+    eigenvalues: jax.Array  # (k,) output dtype
+    eigenvectors: jax.Array  # (n, k) output dtype
+    residuals: np.ndarray  # (k,) float64 — Ritz residual bounds
+    eigenvalues_f64: np.ndarray  # (k,) float64 — pre-output-cast, for tol checks
+    tridiag: LanczosResult
+    iterations: int
+    partition: dict  # num_shards / n_pad / splits / axis / spmv
+    timings: dict
+    spmv_format: tuple = ()  # per-shard executed SpMV format
+
+
+def solve_sharded(
+    csr: CSR,
+    k: int,
+    mesh: Mesh,
+    policy: PrecisionPolicy = FDF,
+    reorth: str = "full",
+    num_iters: Optional[int] = None,
+    seed: int = 0,
+    axis: str = "data",
+    v1: Optional[jax.Array] = None,
+    spmv_format: str = "auto",
+    engine: Optional[SpmvEngine] = None,
+    prepared: Optional[PreparedShards] = None,
+) -> ShardedSolveOutput:
+    """End-to-end distributed Top-K eigensolver on a 1-axis mesh.
+
+    ``spmv_format``: "auto" picks ELL vs blocked-ELL per shard statistics
+    (kernel-backed hot loop, the paper's design); "ell" / "bsr" force a
+    kernel layout; "coo" opts back into the ``segment_sum`` reference path.
+    A prebuilt ``engine`` overrides ``spmv_format``; a ``prepared``
+    :class:`PreparedShards` (see :func:`prepare_sharded`) skips the whole
+    plan phase — partition, conversion, tile selection — entirely.
+    """
+    policy = policy.effective()
+    g = mesh.shape[axis]
+    m = num_iters or k
+
+    t_conv0 = time.perf_counter()
+    if prepared is None:
+        prepared = prepare_sharded(csr, g, policy, spmv_format, engine=engine)
+        t_convert = prepared.convert_s
+    else:
+        t_convert = 0.0  # plan reused: this call pays no conversion
+    pm, mats = prepared.pm, prepared.mats
+    engine, spmv_meta = prepared.engine, dict(prepared.spmv_meta)
+    fmt = engine.format
 
     if v1 is None:
         rng = np.random.default_rng(seed)

@@ -24,7 +24,14 @@ from .lanczos import LanczosResult, lanczos_tridiag
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
-__all__ = ["EigResult", "FixedSolveOutput", "solve_fixed", "topk_eigs"]
+__all__ = [
+    "EigResult",
+    "FixedSolveOutput",
+    "ritz_decompose",
+    "ritz_extract",
+    "solve_fixed",
+    "topk_eigs",
+]
 
 
 class EigResult(NamedTuple):
@@ -48,6 +55,63 @@ class FixedSolveOutput(NamedTuple):
     timings: dict  # seconds: lanczos / jacobi / project / total
 
 
+def ritz_decompose(lres: LanczosResult, policy: PrecisionPolicy, jacobi: str = "host"):
+    """Phase 2: eigen-decompose the Lanczos tridiagonal.
+
+    Returns ``(evals, w, evals_f64, w_f64, beta_m)`` where ``evals`` / ``w``
+    are device arrays in the compute dtype (|lambda|-descending), the f64
+    copies are host-side for residual/tolerance arithmetic, and ``beta_m``
+    is the final residual norm scaling the classical Ritz bound.  Split out
+    of :func:`solve_fixed` so the session layer's shared-subspace sweep
+    (``api/session.py``) can decompose one tridiagonal and serve many
+    ``(k, tol)`` queries from it.
+    """
+    if jacobi == "host":
+        t_host = tridiag_to_dense(
+            np.asarray(lres.alpha, dtype=np.float64),
+            np.asarray(lres.beta, dtype=np.float64),
+        )
+        evals_f64, w_host = jacobi_eigh_host(np.asarray(t_host))
+        evals = jnp.asarray(evals_f64, dtype=policy.compute)
+        w = jnp.asarray(w_host, dtype=policy.compute)
+    else:
+        t_dev = tridiag_to_dense(lres.alpha, lres.beta)
+        evals, w = jacobi_eigh(t_dev)
+        evals_f64 = np.asarray(evals, dtype=np.float64)
+    # Residual arithmetic sees W *as the solver uses it* — rounded through
+    # the compute dtype — so reported residuals are bit-identical to the
+    # pre-refactor solve_fixed for every policy (f32-compute included).
+    w_f64 = np.asarray(w, dtype=np.float64)
+    beta_m = (
+        float(np.asarray(lres.beta_last, dtype=np.float64)) if lres.beta_last is not None else 0.0
+    )
+    return evals, w, np.asarray(evals_f64, dtype=np.float64), w_f64, beta_m
+
+
+def ritz_extract(
+    lres: LanczosResult,
+    evals,
+    w,
+    w_f64: np.ndarray,
+    beta_m: float,
+    k: int,
+    policy: PrecisionPolicy,
+):
+    """Phase 3: Top-K selection + back-projection ``X = V^T W`` + residuals.
+
+    Returns ``(evals_k, x, residuals)`` with ``evals_k`` / ``x`` in the
+    policy's output dtype.  Columns are independent, so extracting at
+    ``k_max`` and slicing serves every smaller-``k`` query of a batch.
+    """
+    m = int(w_f64.shape[0])
+    evals_k = evals[:k]
+    w_k = w[:, :k]
+    x = (lres.basis.astype(policy.compute).T @ w_k).astype(policy.output)
+    # Classical Ritz residual bound: ||A x_i - theta_i x_i|| = |beta_m W[m-1,i]|.
+    residuals = np.abs(beta_m * w_f64[m - 1, :k])
+    return evals_k.astype(policy.output), x, residuals
+
+
 def solve_fixed(
     op: LinearOperator,
     k: int,
@@ -57,6 +121,7 @@ def solve_fixed(
     v1: Optional[jax.Array] = None,
     seed: int = 0,
     jacobi: str = "host",
+    ops=None,
 ) -> FixedSolveOutput:
     """Compute the K eigenpairs of largest |lambda| of a symmetric operator.
 
@@ -64,6 +129,12 @@ def solve_fixed(
     both the subspace size and the output count).  Larger values give an
     extended Krylov subspace from which the Top-K Ritz pairs are extracted
     (beyond-paper accuracy knob).
+
+    ``ops`` (an :class:`~repro.core.lanczos.Ops`) lets a caller reuse ONE
+    arithmetic-kernel record across solves: the jitted Lanczos loop is keyed
+    on the record's identity, so a stable record means repeated solves hit
+    the XLA compile cache instead of retracing — the session layer's serving
+    path passes its per-(plan, policy) record here.
     """
     policy = policy.effective()
     m = num_iters or k
@@ -77,43 +148,26 @@ def solve_fixed(
     # Operators that stream host data per step (ChunkedOperator) must run the
     # Lanczos loop eagerly: see LinearOperator.prefers_jit / lanczos module doc.
     use_jit = getattr(op, "prefers_jit", True)
-    lres = lanczos_tridiag(op.bound_matvec(policy), v1, m, policy, reorth=reorth, jit=use_jit)
+    lres = lanczos_tridiag(
+        op.bound_matvec(policy), v1, m, policy, reorth=reorth, jit=use_jit, ops=ops
+    )
     lres = jax.tree.map(lambda x: x.block_until_ready(), lres)
     t_lanczos = time.perf_counter() - t0
 
     # Phase 2 — Jacobi on the K x K tridiagonal matrix.
     t1 = time.perf_counter()
-    if jacobi == "host":
-        t_host = tridiag_to_dense(
-            np.asarray(lres.alpha, dtype=np.float64),
-            np.asarray(lres.beta, dtype=np.float64),
-        )
-        evals_f64, w = jacobi_eigh_host(np.asarray(t_host))
-        evals = jnp.asarray(evals_f64, dtype=policy.compute)
-        w = jnp.asarray(w, dtype=policy.compute)
-    else:
-        t_dev = tridiag_to_dense(lres.alpha, lres.beta)
-        evals, w = jacobi_eigh(t_dev)
-        evals_f64 = np.asarray(evals, dtype=np.float64)
+    evals, w, evals_f64, w_f64, beta_m = ritz_decompose(lres, policy, jacobi)
     t_jacobi = time.perf_counter() - t1
 
     # Top-K selection (already |lambda|-sorted) and back-projection X = V^T W.
     t2 = time.perf_counter()
-    evals_k = evals[:k]
-    w_k = w[:, :k]
-    x = (lres.basis.astype(policy.compute).T @ w_k).astype(policy.output)
+    evals_k, x, residuals = ritz_extract(lres, evals, w, w_f64, beta_m, k, policy)
     x.block_until_ready()
     t_project = time.perf_counter() - t2
 
-    # Classical Ritz residual bound: ||A x_i - theta_i x_i|| = |beta_m W[m-1,i]|.
-    beta_m = (
-        float(np.asarray(lres.beta_last, dtype=np.float64)) if lres.beta_last is not None else 0.0
-    )
-    residuals = np.abs(beta_m * np.asarray(w, dtype=np.float64)[m - 1, :k])
-
     total = time.perf_counter() - t0
     return FixedSolveOutput(
-        eigenvalues=evals_k.astype(policy.output),
+        eigenvalues=evals_k,
         eigenvectors=x,
         residuals=residuals,
         eigenvalues_f64=np.asarray(evals_f64[:k], dtype=np.float64),

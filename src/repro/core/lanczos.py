@@ -47,6 +47,7 @@ from .precision import PrecisionPolicy, compensated_sum
 __all__ = [
     "LanczosResult",
     "lanczos_tridiag",
+    "lanczos_tridiag_multi",
     "make_local_ops",
     "fused_update_enabled",
     "Ops",
@@ -250,3 +251,29 @@ def lanczos_tridiag(
     if jit:
         return _lanczos_jit(v1, ops, num_iters, policy, reorth)
     return _lanczos_loop(v1, ops, num_iters, policy, reorth, host_loop=True)
+
+
+@partial(jax.jit, static_argnames=("ops", "num_iters", "policy", "reorth"))
+def _lanczos_vmap(v1s, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str):
+    return jax.vmap(lambda v: _lanczos_loop(v, ops, num_iters, policy, reorth))(v1s)
+
+
+def lanczos_tridiag_multi(
+    matvec: Callable,
+    v1s: jax.Array,
+    num_iters: int,
+    policy: PrecisionPolicy,
+    reorth: str = "half",
+    ops: Optional[Ops] = None,
+) -> LanczosResult:
+    """Vmapped multi-start Lanczos: ``v1s`` is (s, n) start vectors; every
+    field of the result gains a leading start axis ((s, m) alpha, (s, m, n)
+    basis, ...).  One compiled sweep builds all s bases — the batched-serving
+    path for many-query workloads that differ only in their start vector
+    (``api/session.py``).  The fused Pallas update is not used here (the
+    batching rule of the interpreter path is unvalidated); callers gate
+    vmappability of the *matvec* (dense / COO segment-sum are safe).
+    """
+    policy = policy.effective()
+    ops = ops or make_local_ops(matvec, policy, fused=False)
+    return _lanczos_vmap(v1s, ops, num_iters, policy, reorth)

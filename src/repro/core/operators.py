@@ -29,6 +29,7 @@ from ..sparse.formats import (
     CSR,
     DeviceCOO,
     DeviceELL,
+    count_conversions,
     to_device_bsr,
     to_device_coo,
     to_device_ell,
@@ -212,6 +213,7 @@ class ChunkedOperator(LinearOperator):
             )
             self.staging["conversions"] += 1  # host layout/dtype prep: once
         self.num_chunks = len(self._chunks)
+        count_conversions(self.num_chunks)
 
         # One jitted partial-SpMV per instance, keyed on the (static) accum
         # dtype: defining it inside matvec would retrace on every call.
@@ -253,6 +255,7 @@ class ChunkedOperator(LinearOperator):
             n_out_pad = max(n_out_pad, r0 + rows_pad)
             self.staging["conversions"] += 1  # host layout/dtype prep: once
         self.num_chunks = len(self._chunks)
+        count_conversions(self.num_chunks)
         self._n_out_pad = n_out_pad
         self.padded_slots = sum(v.size for v, _ in self._chunks)
 

@@ -64,6 +64,7 @@ __all__ = [
     "select_tiles",
     "tuned_tiles",
     "get_tuner",
+    "tuner_probe_count",
     "make_engine",
 ]
 
@@ -254,6 +255,13 @@ def get_tuner() -> TileTuner:
     if _TUNER is None or _TUNER.cache_path != path:
         _TUNER = TileTuner(path)
     return _TUNER
+
+
+def tuner_probe_count() -> int:
+    """Measured tune passes run by this process so far (0 when tuning is
+    off).  The session layer (api/session.py) verifies plan reuse against
+    this: a cache-hit solve must not add probes."""
+    return _TUNER.measure_count if _TUNER is not None else 0
 
 
 def _next_pow2(x: int) -> int:

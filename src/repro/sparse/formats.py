@@ -45,7 +45,25 @@ __all__ = [
     "shard_to_ell",
     "shard_to_blocked_ell",
     "shard_to_hybrid",
+    "conversion_count",
+    "count_conversions",
 ]
+
+# Process-wide census of host->device format conversions (one tick per
+# converted layout: a device container, a shard set, a pinned chunk).  The
+# plan/execute split (api/session.py) is *verified* against this counter —
+# a cache-hit solve must leave it untouched — so every conversion entry
+# point below ticks it.
+_CONVERSIONS = {"count": 0}
+
+
+def conversion_count() -> int:
+    """Total format conversions performed by this process so far."""
+    return _CONVERSIONS["count"]
+
+
+def count_conversions(n: int = 1) -> None:
+    _CONVERSIONS["count"] += int(n)
 
 
 @dataclasses.dataclass
@@ -172,6 +190,7 @@ def _row_positions(csr: CSR) -> Tuple[np.ndarray, np.ndarray]:
 
 def to_device_coo(csr: CSR, dtype=jnp.float32) -> DeviceCOO:
     n = csr.n
+    count_conversions()
     row = np.repeat(np.arange(n, dtype=np.int32), csr.row_nnz())
     return DeviceCOO(
         row=jnp.asarray(row),
@@ -187,6 +206,7 @@ def to_device_ell(
 ) -> DeviceELL:
     """Convert CSR to uniform-width padded ELL (kernel layout)."""
     n = csr.n
+    count_conversions()
     nnz_per_row = csr.row_nnz()
     width = int(max(1, nnz_per_row.max()))
     width = -(-width // slot_tile) * slot_tile
@@ -272,6 +292,7 @@ def to_device_hybrid(
     from ..kernels.engine import hybrid_width_cap  # lazy: sparse sits below kernels
 
     n = csr.n
+    count_conversions()
     row_nnz = csr.row_nnz()
     cap = hybrid_width_cap(row_nnz, quantile) if width_cap is None else int(width_cap)
     cap = max(1, min(cap, int(row_nnz.max()) if row_nnz.size else 1))
@@ -409,6 +430,7 @@ def blocked_ell_from_triplets(
 
 def to_device_bsr(csr: CSR, block_size: int = 8, dtype=jnp.float32) -> DeviceBSR:
     """Convert CSR to the blocked-ELL/BSR kernel layout."""
+    count_conversions()
     rows = np.repeat(np.arange(csr.n, dtype=np.int64), csr.row_nnz())
     return blocked_ell_from_triplets(
         rows, csr.indices, csr.data, csr.n, csr.n, block_size=block_size, dtype=dtype
@@ -448,6 +470,7 @@ def shard_to_ell(
     width = int(max(1, row_nnz.max()))
     width = -(-width // slot_tile) * slot_tile
     rows_pad = -(-n_pad // row_tile) * row_tile
+    count_conversions(g)
 
     col_map = padded_col_map(splits, n_pad, n)
     rix, pos = _row_positions(csr)
@@ -483,6 +506,7 @@ def shard_to_blocked_ell(
         raise ValueError(f"n_pad={n_pad} must be a multiple of block_size={block_size}")
     g = len(splits) - 1
     n = csr.n
+    count_conversions(g)
     col_map = padded_col_map(splits, n_pad, n)
     row_nnz = csr.row_nnz()
     rix = np.repeat(np.arange(n, dtype=np.int64), row_nnz)
@@ -536,6 +560,7 @@ def shard_to_hybrid(
 
     g = len(splits) - 1
     n = csr.n
+    count_conversions(g)
     row_nnz = csr.row_nnz()
     cap = hybrid_width_cap(row_nnz, quantile) if width_cap is None else int(width_cap)
     cap = max(1, min(cap, int(row_nnz.max()) if row_nnz.size else 1))

@@ -135,7 +135,9 @@ def test_single_process_auto_is_single(norm_csr):
     assert len(jax.devices()) == 1
     res = eigsh(norm_csr, K, policy="FDF", num_iters=ITERS)
     assert res.backend == "single"
-    assert res.partition is None
+    # The plan/execute split reports what the call paid in partition["spmv"]
+    # on every backend (single included).
+    assert res.partition["spmv"]["format"] == res.spmv_format
 
 
 def test_chunked_backend_matches_single(norm_csr):
