@@ -71,6 +71,7 @@ def run(scale: float = 1.0):
         rows.append(case)
     rows.append(_lanczos_step(scale))
     rows.append(_serving_amortization(scale))
+    rows.append(_precision_policies(scale))
     save_artifact("engine_bench.json", rows)
     return rows
 
@@ -171,6 +172,57 @@ def _serving_amortization(scale: float) -> dict:
         "t_eigsh_many_solve_us": t_solve_many * 1e6,
         "t_n_calls_solve_us": t_solve_ind * 1e6,
         "amortization_x": speedup,
+    }
+
+
+def _precision_policies(scale: float) -> dict:
+    """Uniform vs per-phase vs auto precision on the smoke matrix: the cost
+    of the paper's FDF knob, the cost of the reorth-in-f32 phase split that
+    sheds most of its f64 work, and the end-to-end cost of the accuracy-
+    driven ``policy="auto"`` ladder (solve-only, prepared session — the
+    ladder pays solves, not plans)."""
+    from repro.api import prepare, session_cache_clear
+    from repro.core.precision import FDF
+    from repro.sparse import generate
+
+    n = max(256, int(2048 * scale))
+    csr = generate("web", n, 6.0, seed=2, values="normalized")
+    iters = 16
+    split = FDF.with_phases(reorth="f32")
+
+    session_cache_clear()
+    sess = prepare(csr, reorth="full", backend="single")
+
+    def run_uniform():
+        return sess.eigsh(4, policy=FDF, num_iters=iters)
+
+    def run_split():
+        return sess.eigsh(4, policy=split, num_iters=iters)
+
+    t_uni = timeit(run_uniform)
+    t_split = timeit(run_split)
+    # auto needs a tol to judge rungs against; 1e-4 lands on FFF after one
+    # rejected bf16 probe — a 2-attempt ladder, the common serving case.
+    sess_auto = prepare(csr, reorth="full", tol=1e-4)
+    last = {}
+
+    def run_auto():
+        last["r"] = sess_auto.eigsh(4, policy="auto", tol=1e-4, subspace=12)
+
+    t_auto = timeit(run_auto)
+    r_auto = last["r"]
+    attempts = len(r_auto.policy_escalations or [])
+    emit("precision/uniform_fdf", t_uni * 1e6, f"n={n} m={iters} policy=FDF")
+    emit("precision/phase_split", t_split * 1e6, f"n={n} m={iters} {split.name}")
+    emit("precision/auto", t_auto * 1e6, f"n={n} tol=1e-4 {attempts} attempts -> {r_auto.policy}")
+    return {
+        "matrix": "precision",
+        "n": n,
+        "t_uniform_fdf_us": t_uni * 1e6,
+        "t_phase_split_us": t_split * 1e6,
+        "t_auto_us": t_auto * 1e6,
+        "auto_attempts": attempts,
+        "auto_policy": r_auto.policy,
     }
 
 

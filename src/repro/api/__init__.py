@@ -15,7 +15,7 @@ selection policy, :class:`EigenResult` for the result schema, and
 
 from .coerce import CoercedInput, coerce_input, matrix_fingerprint
 from .dispatch import BACKENDS, CHUNKED_NNZ_THRESHOLD, select_backend
-from .frontend import SolverConfig, eigsh, resolve_policy
+from .frontend import SolverConfig, eigsh, is_auto_policy, resolve_policy
 from .result import EigenResult
 from .session import (
     EigQuery,
@@ -36,6 +36,7 @@ __all__ = [
     "SolverConfig",
     "EigenResult",
     "resolve_policy",
+    "is_auto_policy",
     "select_backend",
     "coerce_input",
     "CoercedInput",

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import warnings
+from collections.abc import Mapping
 from typing import Optional, Union
 
 import jax.numpy as jnp
@@ -45,21 +46,53 @@ from ..core.precision import POLICIES, PrecisionPolicy
 from ..kernels.engine import FORMATS
 from .result import EigenResult
 
-__all__ = ["SolverConfig", "eigsh", "resolve_policy"]
+__all__ = ["SolverConfig", "eigsh", "resolve_policy", "is_auto_policy"]
 
 
-def resolve_policy(policy: Union[str, PrecisionPolicy]) -> PrecisionPolicy:
-    """Accept a policy name from ``POLICIES`` ("FDF", "BCF", ...) or an instance."""
+def is_auto_policy(policy) -> bool:
+    """True for the ``policy="auto"`` sentinel: not a resolvable policy but a
+    request for the accuracy-driven escalation ladder (see ``eigsh``)."""
+    return isinstance(policy, str) and policy.strip().lower() == "auto"
+
+
+def resolve_policy(policy: Union[str, Mapping, PrecisionPolicy]) -> PrecisionPolicy:
+    """Resolve a precision-policy spec to a :class:`PrecisionPolicy`.
+
+    Accepts a name from ``POLICIES`` (case-insensitive: "FDF", "bcf", ...),
+    a ``PrecisionPolicy`` instance, or a phase-override mapping
+    ``{"base": "FDF", "reorth": "f32", ...}`` (``base`` defaults to "FDF";
+    the other keys are per-phase compute dtypes — an unknown phase key is a
+    named error listing the valid phases, never a raw ``KeyError``).
+    ``"auto"`` is a selection *mode*, not a policy: resolving it is an error
+    pointing back at ``eigsh(policy="auto")``.
+    """
     if isinstance(policy, PrecisionPolicy):
         return policy
     if isinstance(policy, str):
+        if is_auto_policy(policy):
+            raise ValueError(
+                'policy="auto" is the accuracy-driven selection mode, not a '
+                "resolvable policy — pass it to eigsh()/EigenSession.eigsh() "
+                "(ideally with tol=) and the solver escalates through "
+                "repro.core.precision.auto_ladder()"
+            )
         try:
-            return POLICIES[policy.upper()]
+            return POLICIES[policy.strip().upper()]
         except KeyError:
             raise ValueError(
-                f"unknown precision policy {policy!r}; known: {sorted(POLICIES)}"
+                f"unknown precision policy {policy!r}; known: {sorted(POLICIES)} "
+                "(case-insensitive), \"auto\", or a {'base': name, <phase>: dtype} "
+                "mapping"
             ) from None
-    raise TypeError(f"policy must be a str or PrecisionPolicy, got {type(policy).__name__}")
+    if isinstance(policy, Mapping):
+        spec = dict(policy)
+        base = resolve_policy(spec.pop("base", "FDF"))
+        # with_phases validates the remaining keys against PHASES by name.
+        return base.with_phases(**spec)
+    raise TypeError(
+        f"policy must be a str, PrecisionPolicy, or phase-override mapping, "
+        f"got {type(policy).__name__}"
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,7 +188,16 @@ def eigsh(
       config: a :class:`SolverConfig` carrying every solver knob below; when
         given, the individual keyword arguments are ignored (``v0`` / ``n`` /
         ``mesh`` are per-call and always honored).
-      policy: precision policy name (see ``repro.core.POLICIES``) or instance.
+      policy: precision policy name (see ``repro.core.POLICIES``,
+        case-insensitive), a ``PrecisionPolicy`` instance, a phase-override
+        mapping ``{"base": "FDF", "reorth": "f32", ...}`` (per-phase compute
+        dtypes — see ``repro.core.precision.PHASES``), or ``"auto"``: an
+        accuracy-driven selector that probes the escalation ladder
+        BFF -> FFF -> FCF (-> FDF -> DDD under x64) cheapest-first and stops
+        at the first policy whose measured residuals meet ``tol`` (each
+        rung's own default tol when none is given).  The attempt trail is
+        returned as ``EigenResult.policy_escalations`` and the chosen phase
+        map in ``partition["spmv"]["precision"]``.
       backend: "auto" (dispatch on input size / device count / memory
         pressure — see ``repro.api.dispatch``) or one of "single",
         "distributed", "restarted", "chunked".

@@ -95,6 +95,11 @@ class EigenResult:
         :class:`~repro.api.session.EigenSession` — no coercion, format
         conversion, or tile tuning was paid (the counters in
         ``partition["spmv"]`` verify it).
+      policy_escalations: ``policy="auto"`` attempt trail — one dict per
+        ladder rung tried ({policy, max_residual, tol, converged}, cheapest
+        first; the last entry is the policy this result executed).  None for
+        explicit-policy solves.  The chosen per-phase dtype map rides in
+        ``partition["spmv"]["precision"]["phase_map"]``.
     """
 
     eigenvalues: jax.Array
@@ -114,6 +119,7 @@ class EigenResult:
     spmv_format: Optional[object] = None  # str, or tuple of str per shard
     tridiag: Optional[LanczosResult] = None
     session_reuse: bool = False
+    policy_escalations: Optional[list] = None
 
     def __iter__(self):
         # scipy.sparse.linalg.eigsh compatibility: ``w, v = eigsh(A, k)``.
@@ -158,6 +164,7 @@ class EigenResult:
             "timings": {k: float(v) for k, v in self.timings.items()},
             "spmv_format": _jsonify(self.spmv_format),
             "session_reuse": bool(self.session_reuse),
+            "policy_escalations": _jsonify(self.policy_escalations),
         }
 
     @classmethod
@@ -185,6 +192,7 @@ class EigenResult:
             spmv_format=tuple(fmt) if isinstance(fmt, list) else fmt,
             tridiag=None,
             session_reuse=bool(d.get("session_reuse", False)),
+            policy_escalations=d.get("policy_escalations"),
         )
 
     def summary(self) -> str:

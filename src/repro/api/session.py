@@ -62,13 +62,19 @@ from ..core.operators import (
     SparseOperator,
     make_operator,
 )
-from ..core.precision import PrecisionPolicy
+from ..core.precision import PrecisionPolicy, auto_ladder, phase_op_counts
 from ..core.restarted import solve_restarted
 from ..kernels.engine import FORMATS, SpmvEngine, make_engine, tuner_probe_count
 from ..sparse.formats import CSR, conversion_count
 from .coerce import CoercedInput, coerce_input, matrix_fingerprint
 from .dispatch import select_backend
-from .frontend import SolverConfig, _default_tol, _resolve_reorth, resolve_policy
+from .frontend import (
+    SolverConfig,
+    _default_tol,
+    _resolve_reorth,
+    is_auto_policy,
+    resolve_policy,
+)
 from .result import EigenResult
 
 __all__ = [
@@ -94,18 +100,48 @@ _LAYOUT_FIELDS = ("backend", "format", "chunk_nnz", "stage_depth", "axis")
 
 
 def policy_key(policy: Union[str, PrecisionPolicy]) -> str:
-    """Stable operator-cache key of a policy: the dtype triple that decides
-    what gets built, never the spelling.  ``"FDF"`` and the ``FDF`` instance
-    key identically (the frontend's session cache relies on this)."""
+    """Stable identity key of a policy: the dtype triple — plus any
+    per-phase compute overrides — never the spelling.  ``"FDF"`` and the
+    ``FDF`` instance key identically (the frontend's session cache relies on
+    this); a phase-split policy whose overrides all equal ``compute`` keys
+    identically to the uniform policy.  Built *plans* are shared more
+    aggressively than this key — see :func:`_plan_key`."""
     p = resolve_policy(policy).effective()
-    return "-".join(
-        (
-            jnp.dtype(p.storage).name,
-            jnp.dtype(p.compute).name,
-            jnp.dtype(p.output).name,
-            f"c{int(p.compensated)}",
+    parts = [
+        jnp.dtype(p.storage).name,
+        jnp.dtype(p.compute).name,
+        jnp.dtype(p.output).name,
+        f"c{int(p.compensated)}",
+    ]
+    if not p.is_uniform():
+        parts.append(
+            "ph[" + ",".join(f"{ph}:{dt}" for ph, dt in p.phase_map().items()) + "]"
         )
+    return "-".join(parts)
+
+
+def _plan_key(pol: PrecisionPolicy) -> str:
+    """Key of what a built plan actually depends on: the storage dtype (the
+    device container) and the SpMV-phase accumulator (the engine).  Narrower
+    than :func:`policy_key` on purpose — a reorth/alpha_beta/ritz split
+    changes per-query arithmetic (its ``Ops`` record, keyed per policy in
+    ``_Prepared.ops_for``), never the converted operator, so e.g. FDF and
+    FDF[reorth=f32] share one plan instead of double-converting."""
+    return "-".join(
+        (jnp.dtype(pol.storage).name, jnp.dtype(pol.phase_dtype("spmv")).name)
     )
+
+
+# Policy the plan phase assumes when ``policy="auto"`` is requested: the
+# ladder's f32-storage rung, so coercion never rounds the input below what
+# any rung needs; each rung's own operators build lazily per policy_key.
+_AUTO_PLAN_POLICY = "FFF"
+
+
+def _plan_policy(policy) -> PrecisionPolicy:
+    """The policy a session plans/coerces with (resolves "auto" to the
+    ladder-neutral f32 rung; see :func:`auto_ladder`)."""
+    return resolve_policy(_AUTO_PLAN_POLICY if is_auto_policy(policy) else policy)
 
 
 def config_fingerprint(cfg: SolverConfig, fields: Optional[Sequence[str]] = None) -> str:
@@ -124,8 +160,11 @@ def config_fingerprint(cfg: SolverConfig, fields: Optional[Sequence[str]] = None
     for name in sorted(names):
         v = getattr(cfg, name)
         if name == "policy":
-            p = resolve_policy(v)
-            v = (p.name, policy_key(p))
+            if is_auto_policy(v):
+                v = ("auto", "auto")  # the ladder, not any one rung
+            else:
+                p = resolve_policy(v)
+                v = (p.name, policy_key(p))
         parts.append(f"{name}={v!r}")
     return hashlib.blake2b("|".join(parts).encode(), digest_size=12).hexdigest()
 
@@ -138,6 +177,9 @@ class EigQuery:
     (``_UNSET`` = inherit); explicit values — including ``None`` where that
     is meaningful, e.g. ``tol=None`` for fixed-iteration mode — override it.
     Plain dicts (``{"k": 8, "tol": 1e-6}``) and bare ints coerce.
+    ``policy`` accepts everything :func:`repro.api.resolve_policy` does plus
+    ``"auto"`` (the accuracy-driven escalation ladder; such queries solve
+    individually, never grouped).
     """
 
     k: int
@@ -265,7 +307,7 @@ class EigenSession:
         self._default_mesh = None
         t0 = time.perf_counter()
         conv0, probes0 = conversion_count(), tuner_probe_count()
-        pol0 = resolve_policy(cfg.policy).effective()
+        pol0 = _plan_policy(cfg.policy).effective()
         ci = _coerced or coerce_input(A, n=n, storage_dtype=pol0.storage)
         self.op, self.csr, self.n = ci.operator, ci.csr, ci.n
         # Dense inputs keep the ORIGINAL array so a later query with a
@@ -276,6 +318,7 @@ class EigenSession:
         self.matrix_fingerprint = ci.fingerprint
         self.fingerprint = _session_key(ci.fingerprint, cfg, mesh) if ci.fingerprint else None
         self._prepared: Dict[Tuple[str, str], _Prepared] = {}
+        self._verify_a = None  # lazy f64 matrix for the auto ladder's verification
         self._build_lock = threading.Lock()
         self._query_lock = threading.RLock()  # queries serialize per session
         self.stats = {"queries": 0, "sweeps": 0, "cache_hits": 0}
@@ -293,7 +336,7 @@ class EigenSession:
         conversion/tuning cost.  (Construction alone builds lazily: the
         frontend's one-call path lets the first query build, so that call's
         counters honestly report what it paid.)"""
-        pol0 = resolve_policy(self.cfg.policy).effective()
+        pol0 = _plan_policy(self.cfg.policy).effective()
         backend0 = self._resolve_backend(self.cfg.tol)
         prep, built = self._ensure(backend0, pol0)
         if built:
@@ -325,6 +368,9 @@ class EigenSession:
             )
         if self._dense is not None:
             self._dense = np.array(self._dense, copy=True)
+        # Rebuild the verification copy from the snapshotted data on demand
+        # (it may alias the caller's pre-snapshot buffers).
+        self._verify_a = None
 
     def approx_bytes(self) -> int:
         """Rough memory footprint of what caching this session pins: the host
@@ -365,7 +411,7 @@ class EigenSession:
         """Prepared plan for (placement, policy dtypes): build once, reuse.
         Serialized: concurrent queries must not double-build one plan."""
         kind = backend if backend in ("distributed", "chunked") else "single"
-        key = (kind, policy_key(pol))
+        key = (kind, _plan_key(pol))
         with self._build_lock:
             hit = self._prepared.get(key)
             if hit is not None:
@@ -396,7 +442,10 @@ class EigenSession:
                     op = DenseOperator(jnp.asarray(self._dense, dtype=want))
             return _Prepared("single", op, None, _op_format(op), None)
         engine = make_engine(
-            self.csr, self.cfg.format, accum_dtype=pol.compute, storage_dtype=pol.storage
+            self.csr,
+            self.cfg.format,
+            accum_dtype=pol.phase_dtype("spmv"),
+            storage_dtype=pol.storage,
         )
         op = make_operator(self.csr, dtype=pol.storage, engine=engine)
         return _Prepared("single", op, None, engine.format, engine)
@@ -409,7 +458,7 @@ class EigenSession:
         engine = make_engine(
             csr,
             fmt,
-            accum_dtype=pol.compute,
+            accum_dtype=pol.phase_dtype("spmv"),
             allowed=("coo", "ell"),  # per-chunk BSR/hybrid staging not implemented
             storage_dtype=pol.storage,
         )
@@ -439,7 +488,7 @@ class EigenSession:
                     csr,
                     "coo",
                     stats=engine.stats,
-                    accum_dtype=pol.compute,
+                    accum_dtype=pol.phase_dtype("spmv"),
                     storage_dtype=pol.storage,
                 )
         op = ChunkedOperator(
@@ -513,13 +562,22 @@ class EigenSession:
         # Serialized: concurrent queries on ONE session would race the shared
         # operator counters and stats (distinct sessions still run parallel).
         with self._query_lock:
-            qs = [self._normalize(_as_query(q), i, cfg) for i, q in enumerate(queries)]
-            self.stats["queries"] += len(qs)
+            raw = [_as_query(q) for q in queries]
+            self.stats["queries"] += len(raw)
+            results: List[Optional[EigenResult]] = [None] * len(raw)
+            normal: List[_NormQuery] = []
+            for i, rq in enumerate(raw):
+                requested = rq.policy if rq.policy is not None else cfg.policy
+                if is_auto_policy(requested):
+                    # policy="auto" escalates through its own solve ladder;
+                    # it never groups with fixed-policy queries.
+                    results[i] = self._solve_auto(rq, cfg)
+                else:
+                    normal.append(self._normalize(rq, i, cfg))
             groups: Dict[tuple, List[_NormQuery]] = {}
-            for q in qs:
+            for q in normal:
                 key = (q.backend, q.pkey, q.pol.name, q.reorth, q.jacobi)
                 groups.setdefault(key, []).append(q)
-            results: List[Optional[EigenResult]] = [None] * len(qs)
             for group in groups.values():
                 for idx, res in self._solve_group(group):
                     results[idx] = res
@@ -591,6 +649,98 @@ class EigenSession:
             start_key=start_key,
         )
 
+    def _solve_auto(self, rq: EigQuery, cfg: SolverConfig) -> EigenResult:
+        """Accuracy-driven policy selection: probe the escalation ladder
+        (:func:`repro.core.precision.auto_ladder`, cheapest rung first),
+        re-solving until the *measured* residuals meet the query's effective
+        tolerance.  For explicit-matrix inputs each rung is judged on
+        verified f64 reconstruction residuals ``||A x - lambda x||`` (the
+        Ritz residual bound converges with the Krylov process regardless of
+        storage precision, so it cannot expose a too-narrow rung — the
+        paper's Fig. 4 measures exactly this reconstruction error); matrix-
+        free inputs fall back to the engines' Ritz bound and converged
+        flags.  Each rung reuses this session's per-policy operator cache,
+        so escalation pays solves, not plans.  The attempt trail — policy
+        tried, max relative residual, what it was judged on, tol, accepted —
+        is recorded on the returned result as ``policy_escalations``."""
+        attempts: List[dict] = []
+        res: Optional[EigenResult] = None
+        for rung in auto_ladder():
+            nq = self._normalize(dataclasses.replace(rq, policy=rung), 0, cfg)
+            ((_, res),) = self._solve_group([nq])
+            verified = self._verified_rel_residuals(res)
+            if verified is None:
+                max_rel = float(
+                    np.max(
+                        res.residuals
+                        / np.maximum(np.abs(np.asarray(res.eigenvalues, np.float64)), 1e-300)
+                    )
+                )
+                accepted = bool(res.all_converged)
+                kind = "ritz_bound"
+            else:
+                max_rel = float(np.max(verified))
+                accepted = bool(np.all(verified <= nq.tol_eff))
+                kind = "verified"
+            attempts.append(
+                {
+                    "policy": res.policy,
+                    "max_residual": max_rel,
+                    "residual_kind": kind,
+                    "tol": float(nq.tol_eff),
+                    "converged": accepted,
+                }
+            )
+            if accepted:
+                break
+        return dataclasses.replace(res, policy_escalations=attempts)
+
+    def _verified_rel_residuals(self, res: EigenResult) -> Optional[np.ndarray]:
+        """(k,) relative reconstruction residuals ``||A x_i - lambda_i x_i||
+        / max(|lambda_i|, tiny)`` in f64 against the session's host-side
+        matrix — the accuracy measurement driving ``policy="auto"``.  None
+        for matrix-free inputs (nothing f64-exact to verify against)."""
+        a = self._verify_matrix()
+        if a is None:
+            return None
+        x = np.asarray(res.eigenvectors, dtype=np.float64)
+        lam = np.asarray(res.eigenvalues, dtype=np.float64)
+        r = a @ x - x * lam
+        # Columns are unit-norm up to policy rounding; no normalization by
+        # ||x|| — the same convention as the Ritz bound the flags use.
+        return np.linalg.norm(r, axis=0) / np.maximum(np.abs(lam), 1e-300)
+
+    def _verify_matrix(self):
+        """f64 host copy of the matrix used by the auto ladder's residual
+        verification; built once per session (every rung of every auto query
+        reuses it — escalation pays solves, not O(nnz) rebuilds) and dropped
+        when the cache snapshots the host data (``_own_data``)."""
+        if self._verify_a is None:
+            if self.csr is not None:
+                import scipy.sparse as sp
+
+                self._verify_a = sp.csr_matrix(
+                    (
+                        np.asarray(self.csr.data, dtype=np.float64),
+                        self.csr.indices,
+                        self.csr.indptr,
+                    ),
+                    shape=self.csr.shape,
+                )
+            elif self._dense is not None:
+                self._verify_a = np.asarray(self._dense, dtype=np.float64)
+        return self._verify_a
+
+    def _nnz_estimate(self) -> int:
+        """Matrix work per matvec for the precision audit: nnz for explicit
+        sparse inputs, n^2 for dense, n for matrix-free (a black-box matvec
+        is charged as one pass over the vector)."""
+        if self.csr is not None:
+            return int(self.csr.nnz)
+        if self._dense is not None:
+            return int(self.n) * int(self.n)
+        return int(self.n)
+
     def _solve_group(self, group: List[_NormQuery]):
         backend, pol = group[0].backend, group[0].pol
         prep, built = self._ensure(backend, pol)
@@ -650,6 +800,23 @@ class EigenSession:
         spmv["conversions"] = prep.conversions if built else 0
         spmv["tuner_probes"] = prep.tuner_probes if built else 0
         spmv["reused"] = not built
+        # Per-phase precision audit: the phase map this solve executed and a
+        # model-based count of element ops per dtype (how the "this split
+        # reduced f64 work" claim is verified — see precision.phase_op_counts).
+        spmv["precision"] = {
+            "policy": q.pol.name,
+            "phase_map": q.pol.phase_map(),
+            "compensated": bool(q.pol.compensated),
+            "uniform": q.pol.is_uniform(),
+            "ops_by_dtype": phase_op_counts(
+                q.pol,
+                n=self.n,
+                nnz=self._nnz_estimate(),
+                m=int(iterations),
+                k=q.k,
+                reorth=q.reorth,
+            ),
+        }
         part["spmv"] = spmv
         res = EigenResult(
             eigenvalues=eigenvalues,
@@ -1070,7 +1237,7 @@ def get_session(
             hit = _cache_lookup(key)
             if hit is not None:
                 return hit, True
-    pol0 = resolve_policy(cfg.policy).effective()
+    pol0 = _plan_policy(cfg.policy).effective()
     ci = coerce_input(
         A, n=n, storage_dtype=pol0.storage, fingerprint=fp, want_fingerprint=limit > 0
     )

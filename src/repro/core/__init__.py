@@ -17,5 +17,18 @@ from .operators import (
     make_operator,
 )
 from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
-from .precision import BCF, BFF, DDD, FCF, FDF, FFF, HFF, POLICIES, PrecisionPolicy
+from .precision import (
+    BCF,
+    BFF,
+    DDD,
+    FCF,
+    FDF,
+    FFF,
+    HFF,
+    PHASES,
+    POLICIES,
+    PrecisionPolicy,
+    auto_ladder,
+    phase_op_counts,
+)
 from .restarted import RestartedSolveOutput, solve_restarted, topk_eigs_restarted

@@ -83,6 +83,9 @@ def _make_sharded_ops(
     engine: Optional[SpmvEngine] = None,
 ) -> Ops:
     cdt = policy.compute
+    abdt = policy.phase_dtype("alpha_beta")  # alpha/beta reduction phase
+    rdt = policy.phase_dtype("reorth")  # re-orthogonalization phase
+    sdt_spmv = policy.phase_dtype("spmv")  # SpMV accumulator phase
     fmt = engine.format if engine is not None else "coo"
 
     def matvec(x_local):
@@ -99,25 +102,25 @@ def _make_sharded_ops(
             y = engine.hybrid_matvec(val, col, trow, tcol, tval, x_full, n_pad)
             return y.astype(cdt)
         row, col, val = mats
-        prod = val.astype(cdt) * jnp.take(x_full, col).astype(cdt)
-        return jax.ops.segment_sum(prod, row, num_segments=n_pad)
+        prod = val.astype(sdt_spmv) * jnp.take(x_full, col).astype(sdt_spmv)
+        return jax.ops.segment_sum(prod, row, num_segments=n_pad).astype(cdt)
 
     def dot(a, b):
-        prods = a.astype(cdt) * b.astype(cdt)
-        local = compensated_sum(prods, cdt) if policy.compensated else jnp.sum(prods)
-        return jax.lax.psum(local, axis)  # sync point A / B
+        prods = a.astype(abdt) * b.astype(abdt)
+        local = compensated_sum(prods, abdt) if policy.compensated else jnp.sum(prods)
+        return jax.lax.psum(local, axis).astype(cdt)  # sync point A / B
 
     def gram(vs, u):
-        local = vs.astype(cdt) @ u.astype(cdt)
-        return jax.lax.psum(local, axis)  # sync point C
+        local = vs.astype(rdt) @ u.astype(rdt)
+        return jax.lax.psum(local, axis).astype(cdt)  # sync point C
 
     def project_out(vs, u, mask):
-        vs_c = vs.astype(cdt) * mask[:, None]  # ONE (m, n_pad) cast per pass
+        vs_c = vs.astype(rdt) * mask.astype(rdt)[:, None]  # ONE (m, n_pad) cast
         # u rounds through the storage dtype first — legacy gram-path policy
         # semantics (see make_local_ops.project_out).
-        local = vs_c @ u.astype(policy.storage).astype(cdt)
+        local = vs_c @ u.astype(policy.storage).astype(rdt)
         coeffs = jax.lax.psum(local, axis)  # sync point C
-        return u - coeffs @ vs_c
+        return (u.astype(rdt) - coeffs @ vs_c).astype(cdt)
 
     fused_update = None
     if fused_update_enabled(policy):
@@ -213,7 +216,7 @@ def prepare_sharded(
             csr,
             spmv_format,
             stats=shard_stats(csr, splits, with_blocks=(spmv_format == "auto")),
-            accum_dtype=policy.compute,
+            accum_dtype=policy.phase_dtype("spmv"),
             allowed=allowed,
             storage_dtype=policy.storage,
         )
@@ -341,8 +344,9 @@ def solve_sharded(
     # X = V^T W on the padded layout, then strip padding.
     t2 = time.perf_counter()
     basis = lres.basis  # (G, m, n_pad) shard-stacked
-    w_k = jnp.asarray(w[:, :k], dtype=policy.compute)
-    x_pad = jnp.einsum("gmn,mk->gnk", basis.astype(policy.compute), w_k)
+    rzdt = policy.phase_dtype("ritz")  # Ritz-extraction phase dtype
+    w_k = jnp.asarray(w[:, :k], dtype=rzdt)
+    x_pad = jnp.einsum("gmn,mk->gnk", basis.astype(rzdt), w_k)
     parts = []
     splits = pm.splits()
     for s in range(g):

@@ -66,16 +66,20 @@ def ritz_decompose(lres: LanczosResult, policy: PrecisionPolicy, jacobi: str = "
     (``api/session.py``) can decompose one tridiagonal and serve many
     ``(k, tol)`` queries from it.
     """
+    rzdt = policy.phase_dtype("ritz")  # Ritz/restart arithmetic phase dtype
     if jacobi == "host":
         t_host = tridiag_to_dense(
             np.asarray(lres.alpha, dtype=np.float64),
             np.asarray(lres.beta, dtype=np.float64),
         )
         evals_f64, w_host = jacobi_eigh_host(np.asarray(t_host))
-        evals = jnp.asarray(evals_f64, dtype=policy.compute)
-        w = jnp.asarray(w_host, dtype=policy.compute)
+        evals = jnp.asarray(evals_f64, dtype=rzdt)
+        w = jnp.asarray(w_host, dtype=rzdt)
     else:
-        t_dev = tridiag_to_dense(lres.alpha, lres.beta)
+        # The device Jacobi runs in the tridiagonal's dtype: cast to the ritz
+        # phase dtype first (no-op when it equals compute) so the phase_map
+        # audit reports what actually executed.
+        t_dev = tridiag_to_dense(lres.alpha, lres.beta).astype(rzdt)
         evals, w = jacobi_eigh(t_dev)
         evals_f64 = np.asarray(evals, dtype=np.float64)
     # Residual arithmetic sees W *as the solver uses it* — rounded through
@@ -105,8 +109,8 @@ def ritz_extract(
     """
     m = int(w_f64.shape[0])
     evals_k = evals[:k]
-    w_k = w[:, :k]
-    x = (lres.basis.astype(policy.compute).T @ w_k).astype(policy.output)
+    w_k = w[:, :k].astype(policy.phase_dtype("ritz"))
+    x = (lres.basis.astype(policy.phase_dtype("ritz")).T @ w_k).astype(policy.output)
     # Classical Ritz residual bound: ||A x_i - theta_i x_i|| = |beta_m W[m-1,i]|.
     residuals = np.abs(beta_m * w_f64[m - 1, :k])
     return evals_k.astype(policy.output), x, residuals

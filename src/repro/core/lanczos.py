@@ -6,7 +6,10 @@ approximate the Top-K eigenpairs of the operator.
 
 Mixed precision follows the paper exactly (§III-A): the basis V and the
 carried vectors are kept in ``policy.storage``; SpMV accumulation and the
-alpha / beta / re-orthogonalization reductions run in ``policy.compute``.
+alpha / beta / re-orthogonalization reductions run in ``policy.compute`` —
+or, per phase, in the policy's ``spmv`` / ``alpha_beta`` / ``reorth``
+overrides (``core/precision.PHASES``), with every phase result rounded back
+to the carried ``compute`` dtype at the phase boundary.
 
 Re-orthogonalization modes:
   * ``"none"`` — plain three-term recurrence;
@@ -82,38 +85,47 @@ class Ops:
 
 def fused_update_enabled(policy: PrecisionPolicy) -> bool:
     """Policy gate for the fused Pallas update: compensated policies need
-    the compensated reductions for beta, so they keep the reference path;
+    the compensated reductions for beta, so they keep the reference path,
+    and a per-phase ``alpha_beta`` override splits the fused norm's dtype
+    away from the recurrence's, so it keeps the reference path too;
     ``REPRO_FUSED_LANCZOS=0`` is the kill switch."""
     if os.environ.get("REPRO_FUSED_LANCZOS", "1").lower() in ("0", "false", "off"):
         return False
-    return not policy.compensated
-
-
-def _local_reduce(x: jax.Array, policy: PrecisionPolicy) -> jax.Array:
     if policy.compensated:
-        return compensated_sum(x.reshape(-1), policy.compute)
+        return False
+    return jnp.dtype(policy.phase_dtype("alpha_beta")) == jnp.dtype(policy.compute)
+
+
+def _local_reduce(x: jax.Array, policy: PrecisionPolicy, dtype=None) -> jax.Array:
+    if policy.compensated:
+        return compensated_sum(x.reshape(-1), dtype or policy.compute)
     return jnp.sum(x)
 
 
 def make_local_ops(
     matvec: Callable, policy: PrecisionPolicy, fused: Optional[bool] = None
 ) -> Ops:
-    """Single-device ops: plain reductions in the compute dtype."""
+    """Single-device ops: plain reductions in the per-phase compute dtypes
+    (``alpha_beta`` for dot, ``reorth`` for gram/project_out); every result
+    is cast back to the carried ``compute`` dtype, so a policy with no phase
+    overrides is bit-identical to the pre-phase uniform arithmetic."""
     cdt = policy.compute
+    abdt = policy.phase_dtype("alpha_beta")
+    rdt = policy.phase_dtype("reorth")
 
     def dot(a, b):
-        return _local_reduce(a.astype(cdt) * b.astype(cdt), policy)
+        return _local_reduce(a.astype(abdt) * b.astype(abdt), policy, abdt).astype(cdt)
 
     def gram(vs, u):
-        return vs.astype(cdt) @ u.astype(cdt)
+        return (vs.astype(rdt) @ u.astype(rdt)).astype(cdt)
 
     def project_out(basis, u, mask):
-        basis_c = basis.astype(cdt) * mask[:, None]  # ONE (m, n) cast, masked rows hot
+        basis_c = basis.astype(rdt) * mask.astype(rdt)[:, None]  # ONE (m, n) cast
         # u rounds through the storage dtype before the coefficient dot —
         # the same policy semantics the legacy gram path applied (the
         # fig4 precision ablation measures exactly this rounding).
-        coeffs = basis_c @ u.astype(policy.storage).astype(cdt)
-        return u - coeffs @ basis_c
+        coeffs = basis_c @ u.astype(policy.storage).astype(rdt)
+        return (u.astype(rdt) - coeffs @ basis_c).astype(cdt)
 
     use_fused = fused_update_enabled(policy) if fused is None else fused
     fused_update = None

@@ -84,7 +84,10 @@ class LinearOperator:
         raise NotImplementedError
 
     def bound_matvec(self, policy: PrecisionPolicy) -> Callable:
-        acc = policy.compute
+        # The SpMV accumulator runs in its own phase dtype (defaults to the
+        # policy's compute dtype); the Lanczos loop rounds the product back
+        # to the carried compute dtype at the phase boundary.
+        acc = policy.phase_dtype("spmv")
 
         def mv(x):
             return self.matvec(x, accum_dtype=acc)

@@ -14,17 +14,30 @@ ladder is shifted one rung down — bf16/f16 storage with f32 compute — and th
 f32 summation, exposed here as ``compensated=True`` policies.  The f64 paths
 remain available on CPU (JAX x64) and are used to reproduce the paper's
 Fig. 4 exactly.
+
+Per-phase compute dtypes (beyond-paper): the solver's "intermediate
+operations" are not one phase but four — the SpMV accumulator, the
+alpha/beta reductions, the re-orthogonalization projections, and the
+Ritz/restart arithmetic — and they tolerate narrow formats very differently
+(Hunhold et al. 2025: reorthogonalization and the tridiagonal solve are the
+accuracy-critical ones).  ``PrecisionPolicy`` therefore carries optional
+per-phase overrides of the ``compute`` dtype (:data:`PHASES`,
+:meth:`PrecisionPolicy.with_phases`); ``None`` means "inherit ``compute``",
+so a policy with no overrides behaves — bit-identically — like the uniform
+triple.  ``phase_op_counts`` provides the model-based per-dtype operation
+audit surfaced in ``EigenResult.partition["spmv"]["precision"]``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "PHASES",
     "PrecisionPolicy",
     "FFF",
     "FDF",
@@ -35,7 +48,34 @@ __all__ = [
     "BCF",
     "POLICIES",
     "x64_enabled",
+    "auto_ladder",
+    "phase_op_counts",
 ]
+
+# The four compute phases of one Lanczos-based solve, in hot-loop order:
+#   spmv       — the SpMV accumulator (y = A @ x partial sums);
+#   alpha_beta — the alpha dot products and beta L2 norms (sync points A/B);
+#   reorth     — the re-orthogonalization coefficient dots + subtraction (C);
+#   ritz       — Ritz extraction / thick-restart arithmetic (X = V^T W).
+PHASES = ("spmv", "alpha_beta", "reorth", "ritz")
+
+# Short dtype spellings accepted by ``with_phases`` / phase-override dicts.
+_DTYPE_ALIASES = {
+    "f16": "float16",
+    "f32": "float32",
+    "f64": "float64",
+    "bf16": "bfloat16",
+}
+
+
+def _parse_dtype(dt):
+    """Accept a dtype object or a (shorthand) name; normalize via jnp.dtype."""
+    if isinstance(dt, str):
+        dt = _DTYPE_ALIASES.get(dt.lower(), dt.lower())
+    try:
+        return jnp.dtype(dt)
+    except TypeError as e:
+        raise ValueError(f"unparseable phase dtype {dt!r}") from e
 
 
 def x64_enabled() -> bool:
@@ -55,6 +95,10 @@ class PrecisionPolicy:
       compensated: if True, scalar reductions additionally use Neumaier
         compensated summation in the ``compute`` dtype (TPU-native analogue
         of the paper's f64 accumulation; beyond-paper feature).
+      spmv / alpha_beta / reorth / ritz: optional per-phase overrides of
+        ``compute`` (see :data:`PHASES`); ``None`` inherits ``compute``, so
+        a policy without overrides is exactly the paper's uniform triple.
+        Build them with :meth:`with_phases`.
     """
 
     name: str
@@ -62,26 +106,79 @@ class PrecisionPolicy:
     compute: Any
     output: Any
     compensated: bool = False
+    # Per-phase overrides of ``compute`` (None = inherit).  See PHASES.
+    spmv: Any = None
+    alpha_beta: Any = None
+    reorth: Any = None
+    ritz: Any = None
+
+    def phase_dtype(self, phase: str):
+        """Compute dtype of one solver phase (the override, or ``compute``)."""
+        if phase not in PHASES:
+            raise ValueError(f"unknown precision phase {phase!r}; valid phases: {PHASES}")
+        override = getattr(self, phase)
+        return self.compute if override is None else override
+
+    def phase_map(self) -> Dict[str, str]:
+        """{phase: dtype name} of every compute phase — the provenance record
+        surfaced in ``EigenResult.partition["spmv"]["precision"]``."""
+        return {ph: jnp.dtype(self.phase_dtype(ph)).name for ph in PHASES}
+
+    def is_uniform(self) -> bool:
+        """True when every phase runs in the plain ``compute`` dtype."""
+        cdt = jnp.dtype(self.compute)
+        return all(
+            getattr(self, ph) is None or jnp.dtype(getattr(self, ph)) == cdt
+            for ph in PHASES
+        )
+
+    def with_phases(self, **overrides) -> "PrecisionPolicy":
+        """New policy with per-phase compute dtypes, e.g.
+        ``FDF.with_phases(reorth="f32")`` (alpha/beta stay f64).  Unknown
+        phase names are a named error listing the valid phases; dtypes may be
+        objects or (shorthand) names.  ``None`` clears an override."""
+        bad = sorted(set(overrides) - set(PHASES))
+        if bad:
+            raise ValueError(
+                f"unknown precision phase(s) {bad}; valid phases: {PHASES}"
+            )
+        parsed = {
+            ph: (None if dt is None else _parse_dtype(dt)) for ph, dt in overrides.items()
+        }
+        new = dataclasses.replace(self, **parsed)
+        tags = ",".join(
+            f"{ph}={jnp.dtype(getattr(new, ph)).name}"
+            for ph in PHASES
+            if getattr(new, ph) is not None
+        )
+        base = self.name.split("[")[0]
+        return dataclasses.replace(new, name=f"{base}[{tags}]" if tags else base)
 
     def effective(self) -> "PrecisionPolicy":
         """Downgrade f64 members to f32 when x64 is disabled (with a note)."""
         if x64_enabled():
             return self
 
-        def _eff(dt):
-            return jnp.float32 if jnp.dtype(dt) == jnp.dtype(jnp.float64) else dt
+        f64 = jnp.dtype(jnp.float64)
 
-        if (
-            jnp.dtype(self.storage) == jnp.dtype(jnp.float64)
-            or jnp.dtype(self.compute) == jnp.dtype(jnp.float64)
-            or jnp.dtype(self.output) == jnp.dtype(jnp.float64)
-        ):
+        def _eff(dt):
+            return jnp.float32 if jnp.dtype(dt) == f64 else dt
+
+        members = [self.storage, self.compute, self.output] + [
+            getattr(self, ph) for ph in PHASES if getattr(self, ph) is not None
+        ]
+        if any(jnp.dtype(dt) == f64 for dt in members):
             return dataclasses.replace(
                 self,
                 name=self.name + "(x32!)",
                 storage=_eff(self.storage),
                 compute=_eff(self.compute),
                 output=_eff(self.output),
+                **{
+                    ph: _eff(getattr(self, ph))
+                    for ph in PHASES
+                    if getattr(self, ph) is not None
+                },
             )
         return self
 
@@ -147,3 +244,60 @@ def dot(a: jax.Array, b: jax.Array, policy: PrecisionPolicy) -> jax.Array:
 
 def norm2(a: jax.Array, policy: PrecisionPolicy) -> jax.Array:
     return jnp.sqrt(dot(a, a, policy))
+
+
+# --------------------------- accuracy-driven auto ----------------------------
+
+# Escalation ladder for ``policy="auto"``: cheapest first.  Each rung is a
+# real policy from POLICIES; the selector probes rungs in order and stops at
+# the first whose measured residuals meet the requested tol.  The f64 rungs
+# only exist where x64 does (they would silently alias FFF otherwise).
+_AUTO_LADDER_X64 = ("BFF", "FFF", "FCF", "FDF", "DDD")
+_AUTO_LADDER_X32 = ("BFF", "FFF", "FCF")
+
+
+def auto_ladder() -> tuple:
+    """Policy names ``policy="auto"`` escalates through, cheapest first,
+    capped by :func:`x64_enabled` (no point escalating to a rung that the
+    x32 downgrade folds back onto an earlier one)."""
+    return _AUTO_LADDER_X64 if x64_enabled() else _AUTO_LADDER_X32
+
+
+# Fraction of the stored basis each re-orthogonalization mode touches per
+# pass (the paper's parity scheme halves it; CGS2 runs two full passes).
+_REORTH_PASS_FRAC = {"none": 0.0, "half": 0.5, "half_alt": 0.5, "full": 1.0, "full2": 2.0}
+
+
+def phase_op_counts(
+    policy: PrecisionPolicy,
+    *,
+    n: int,
+    nnz: int,
+    m: int,
+    k: int,
+    reorth: str = "half",
+) -> Dict[str, int]:
+    """Model-based count of element operations per compute dtype for one
+    solve — the audit behind the per-phase precision claim ("this split
+    reduced f64 work"), surfaced in ``partition["spmv"]["precision"]``.
+
+    Counts are the leading terms of the solver's arithmetic, attributed to
+    the phase that executes them: ``m * nnz`` SpMV accumulations, ``2 m n``
+    alpha/beta reduction elements, ``2 f m^2 n`` re-orthogonalization
+    elements (``f`` = the mode's basis fraction per pass; coefficient dot +
+    subtraction), and ``n m k`` back-projection elements.  An *estimate* of
+    work by dtype, not a hardware counter.
+    """
+    p = policy.effective()
+    counts: Dict[str, int] = {}
+
+    def add(phase: str, ops: float) -> None:
+        name = jnp.dtype(p.phase_dtype(phase)).name
+        counts[name] = counts.get(name, 0) + int(ops)
+
+    frac = _REORTH_PASS_FRAC.get(reorth, 1.0)
+    add("spmv", m * nnz)
+    add("alpha_beta", 2 * m * n)
+    add("reorth", 2.0 * frac * m * m * n)
+    add("ritz", n * m * k)
+    return counts

@@ -72,6 +72,9 @@ def solve_restarted(
     bound satisfies ``tol`` (relative) for every pair."""
     policy = policy.effective()
     cdt, sdt = policy.compute, policy.storage
+    abdt = policy.phase_dtype("alpha_beta")  # alpha/beta reduction phase
+    rdt = policy.phase_dtype("reorth")  # re-orthogonalization phase
+    rzdt = policy.phase_dtype("ritz")  # Ritz/restart arithmetic phase
     n = op.n
     m = m or max(2 * k, k + 8)
     assert m > k + 1, "subspace must exceed k by at least 2"
@@ -81,12 +84,12 @@ def solve_restarted(
 
     @jax.jit
     def _dot(a, b):
-        return jnp.sum(a.astype(cdt) * b.astype(cdt))
+        return jnp.sum(a.astype(abdt) * b.astype(abdt)).astype(cdt)
 
     @jax.jit
     def _orth(u, basis, nvalid_mask):
-        coeffs = (basis.astype(cdt) @ u.astype(cdt)) * nvalid_mask
-        return u - coeffs @ basis.astype(cdt)
+        coeffs = (basis.astype(rdt) @ u.astype(rdt)) * nvalid_mask.astype(rdt)
+        return (u.astype(rdt) - coeffs @ basis.astype(rdt)).astype(cdt)
 
     t0 = time.perf_counter()
     if v1 is None:
@@ -145,8 +148,8 @@ def solve_restarted(
 
         # --- thick restart: compress to top-k Ritz vectors + residual dir ---
         restarts += 1
-        wk = jnp.asarray(w[:, :k], dtype=cdt)
-        ritz = (basis.astype(cdt).T @ wk).T  # (k, n)
+        wk = jnp.asarray(w[:, :k], dtype=rzdt)
+        ritz = (basis.astype(rzdt).T @ wk).T  # (k, n)
         new_basis = jnp.zeros((m, n), sdt)
         new_basis = new_basis.at[:k].set(ritz.astype(sdt))
         basis = new_basis
@@ -157,8 +160,8 @@ def solve_restarted(
         # v (the next Lanczos vector) already holds the residual direction
 
     evals_k = jnp.asarray(evals[:k], dtype=policy.output)
-    wk = jnp.asarray(w[:, :k], dtype=cdt)
-    x = (basis.astype(cdt).T @ wk).astype(policy.output)
+    wk = jnp.asarray(w[:, :k], dtype=rzdt)
+    x = (basis.astype(rzdt).T @ wk).astype(policy.output)
     lres = LanczosResult(
         alpha=jnp.asarray(np.diag(t_hat), cdt),
         beta=jnp.asarray(np.diag(t_hat, 1), cdt),
