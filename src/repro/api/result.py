@@ -19,7 +19,7 @@ import numpy as np
 
 from ..core.lanczos import LanczosResult
 
-__all__ = ["EigenResult"]
+__all__ = ["EigenResult", "with_queue_time"]
 
 
 def _jsonify(obj):
@@ -83,7 +83,11 @@ class EigenResult:
         and ``"solve_s"`` (the execute phase); fixed-m backends add
         ``"lanczos_s"`` / ``"jacobi_s"`` / ``"project_s"``.  Batched
         ``eigsh_many`` results sharing one sweep also carry
-        ``"amortized_over"`` (queries served by these timings).
+        ``"amortized_over"`` (queries served by these timings).  Results
+        returned through the serving scheduler additionally carry the
+        queue/solve split: ``"queue_s"`` (submit-to-dispatch wait) and
+        ``"e2e_s"`` (``queue_s + total_s``, what the submitter observed) —
+        see :func:`with_queue_time`.
       spmv_format: SpMV layout the hot loop executed — "coo" | "ell" | "bsr"
         | "hybrid" (quantile-capped ELL + COO hub tail) for explicit sparse
         inputs ("dense" / "matfree" otherwise).  The distributed backend
@@ -195,6 +199,12 @@ class EigenResult:
             policy_escalations=d.get("policy_escalations"),
         )
 
+    @property
+    def queue_s(self) -> float:
+        """Seconds this query waited in a serving queue before its solve was
+        dispatched (0.0 when the result was not produced by a scheduler)."""
+        return float(self.timings.get("queue_s", 0.0))
+
     def summary(self) -> str:
         """One-paragraph human-readable report."""
         lam = np.asarray(self.eigenvalues, dtype=np.float64)
@@ -212,3 +222,18 @@ class EigenResult:
             f"max residual {self.residuals.max():.2e}",
         ]
         return "\n".join(lines)
+
+
+def with_queue_time(res: EigenResult, queue_s: float) -> EigenResult:
+    """Stamp the serving queue/solve timing split onto a result.
+
+    Returns a copy whose ``timings`` carry ``"queue_s"`` (seconds between
+    submission and dispatch — scheduler wait, not solver work) and
+    ``"e2e_s"`` (``queue_s + total_s``: the latency the submitter actually
+    observed).  ``"total_s"`` / ``"solve_s"`` / ``"prepare_s"`` keep their
+    solver-side meaning, so amortization math on them is unaffected.
+    """
+    t = dict(res.timings)
+    t["queue_s"] = float(queue_s)
+    t["e2e_s"] = float(queue_s) + float(t.get("total_s", 0.0))
+    return dataclasses.replace(res, timings=t)

@@ -89,6 +89,10 @@ __all__ = [
     "session_cache_info",
 ]
 
+# Persisted-session schema version (EigenSession.export_state /
+# import_plans).  Bump when the exported plan layout changes shape.
+_EXPORT_SCHEMA = 1
+
 _UNSET = object()  # distinguishes "inherit the session default" from None
 
 # SolverConfig fields that change what a session *builds* (placement, device
@@ -205,6 +209,13 @@ def _as_query(q) -> EigQuery:
         f"eigsh_many query must be an EigQuery, a dict of its fields, or an "
         f"int k; got {type(q).__name__}"
     )
+
+
+def _norm_group_key(q: "_NormQuery") -> tuple:
+    """Group-compatibility key of a normalized query: queries sharing it are
+    answered by ONE Lanczos sweep (``eigsh_many`` groups by exactly this; the
+    serving scheduler coalesces queued queries by it)."""
+    return (q.backend, q.pkey, q.pol.name, q.reorth, q.jacobi)
 
 
 class _NormQuery(NamedTuple):
@@ -576,12 +587,166 @@ class EigenSession:
                     normal.append(self._normalize(rq, i, cfg))
             groups: Dict[tuple, List[_NormQuery]] = {}
             for q in normal:
-                key = (q.backend, q.pkey, q.pol.name, q.reorth, q.jacobi)
-                groups.setdefault(key, []).append(q)
+                groups.setdefault(_norm_group_key(q), []).append(q)
             for group in groups.values():
                 for idx, res in self._solve_group(group):
                     results[idx] = res
         return results  # type: ignore[return-value]
+
+    def ensure_fingerprint(self) -> Optional[str]:
+        """Content digest of this session's matrix, computing it on demand.
+
+        Directly-constructed sessions skip the digest (it only exists for
+        the frontend cache's benefit), but persistence needs one — the store
+        keys entries by it and ``import_plans`` validates against it.  Still
+        None for matrix-free inputs (no bytes to hash)."""
+        if self.matrix_fingerprint is None:
+            src = self.csr if self.csr is not None else self._dense
+            if src is not None:
+                self.matrix_fingerprint = matrix_fingerprint(src)
+        return self.matrix_fingerprint
+
+    def group_key(self, query, defaults: Optional[SolverConfig] = None) -> Optional[tuple]:
+        """Public group-compatibility predicate: the key :meth:`eigsh_many`
+        groups by.  Two queries whose keys are equal (on the same session)
+        are served by ONE shared Lanczos sweep; the serving scheduler
+        (``repro.serving``) coalesces queued queries by exactly this key, so
+        its batches can never mix what the session would not merge.
+
+        Returns ``None`` for ``policy="auto"`` queries — the escalation
+        ladder solves individually and never groups.  Raises the same
+        ``ValueError`` as submitting the query would (``k`` out of range,
+        infeasible ``num_iters``), so callers can validate at admission time.
+        """
+        cfg = defaults or self.cfg
+        rq = _as_query(query)
+        requested = rq.policy if rq.policy is not None else cfg.policy
+        if is_auto_policy(requested):
+            return None
+        return _norm_group_key(self._normalize(rq, 0, cfg))
+
+    # --------------------------------------------------- persistence hooks
+
+    def export_state(self) -> dict:
+        """Serializable snapshot of this session's built plans (the warm
+        state a restarted server needs): per-plan device-container arrays +
+        the engine configuration (format, accumulator dtype, tuned tiles).
+        The header carries the repro version, the matrix fingerprint, and the
+        layout-config fingerprint so :meth:`import_plans` can reject stale
+        artifacts.  Arrays come back as npz-safe NumPy (bf16 values are
+        stored widened to f32 with their dtype recorded).
+
+        Only "single"-placement plans over explicit device containers (COO /
+        ELL / BSR / hybrid) or dense operators export; chunked plans are
+        host-resident anyway (nothing device-converted to save) and
+        distributed plans are mesh-bound — both rebuild lazily on import.
+        """
+        from .. import __version__
+
+        with self._build_lock:
+            items = list(self._prepared.items())
+        plans = []
+        for (kind, plan_key), prep in items:
+            if kind != "single" or prep.operator is None:
+                continue
+            exported = _export_operator(prep.operator)
+            if exported is None:
+                continue
+            container, arrays = exported
+            dtypes = {name: str(a.dtype) for name, a in arrays.items()}
+            # bf16 has no native NumPy container format: widen to f32 for the
+            # npz (lossless — f32 is a superset); import narrows back via the
+            # recorded dtype.
+            arrays = {
+                name: (a.astype(np.float32) if str(a.dtype) == "bfloat16" else a)
+                for name, a in arrays.items()
+            }
+            engine_cfg = None
+            if prep.engine is not None:
+                e = prep.engine
+                engine_cfg = {
+                    "format": e.format,
+                    "accum_dtype": str(jnp.dtype(e.accum_dtype)),
+                    "tiles": {
+                        "block_r": int(e.tiles.block_r),
+                        "block_w": int(e.tiles.block_w),
+                        "block_size": int(e.tiles.block_size),
+                    },
+                    "interpret": bool(e.interpret),
+                    "requested": e.requested,
+                    "tiles_from": e.tiles_from,
+                }
+            fmt = prep.spmv_format
+            plans.append(
+                {
+                    "plan_key": plan_key,
+                    "container": container,
+                    "spmv_format": fmt if isinstance(fmt, str) else str(fmt),
+                    "engine": engine_cfg,
+                    "dtypes": dtypes,
+                    "arrays": arrays,
+                }
+            )
+        return {
+            "schema": _EXPORT_SCHEMA,
+            "repro_version": __version__,
+            "matrix_fingerprint": self.ensure_fingerprint(),
+            "layout_fingerprint": config_fingerprint(self.cfg, _LAYOUT_FIELDS),
+            "layout": {f: repr(getattr(self.cfg, f)) for f in _LAYOUT_FIELDS},
+            "n": int(self.n),
+            "plans": plans,
+        }
+
+    def import_plans(self, state: dict) -> int:
+        """Install plans exported by :meth:`export_state` into this session;
+        returns how many were imported.  Containers are rebuilt with the
+        plain device constructors — NO format conversion runs (the
+        ``conversion_count()`` audit stays untouched) and the persisted tiles
+        ride in, so no tuner probes either: the next query is a pure execute.
+
+        Stale artifacts are *rejected, not trusted*: a mismatched schema,
+        repro version, matrix fingerprint, layout fingerprint, or dimension
+        warns and returns 0 — the session simply cold-rebuilds lazily, the
+        same behaviour as having no persisted state at all.
+        """
+        from .. import __version__
+
+        header_checks = (
+            ("schema", state.get("schema"), _EXPORT_SCHEMA),
+            ("repro_version", state.get("repro_version"), __version__),
+            ("matrix_fingerprint", state.get("matrix_fingerprint"), self.ensure_fingerprint()),
+            (
+                "layout_fingerprint",
+                state.get("layout_fingerprint"),
+                config_fingerprint(self.cfg, _LAYOUT_FIELDS),
+            ),
+            ("n", state.get("n"), int(self.n)),
+        )
+        for field, got, want in header_checks:
+            if got != want:
+                warnings.warn(
+                    f"stale persisted session rejected ({field}: saved {got!r} != "
+                    f"current {want!r}); falling back to a cold rebuild",
+                    stacklevel=2,
+                )
+                return 0
+        imported = 0
+        for plan in state.get("plans", ()):
+            try:
+                prep = _import_plan(plan, int(self.n))
+            except Exception as exc:  # corrupt payload: warn, keep serving
+                warnings.warn(
+                    f"corrupt persisted plan {plan.get('plan_key')!r} skipped "
+                    f"({type(exc).__name__}: {exc}); it will cold-rebuild on demand",
+                    stacklevel=2,
+                )
+                continue
+            key = ("single", str(plan["plan_key"]))
+            with self._build_lock:
+                if key not in self._prepared:
+                    self._prepared[key] = prep
+                    imported += 1
+        return imported
 
     # ---------------------------------------------------------- internals
 
@@ -1072,6 +1237,93 @@ class EigenSession:
                     )
                 )
         return out
+
+
+# ------------------------------------------------- plan (de)serialization
+
+
+def _export_operator(op) -> Optional[Tuple[str, Dict[str, np.ndarray]]]:
+    """(container type, host arrays) of a single-placement operator, or None
+    when the operator is not persistable (matrix-free / unknown)."""
+    from ..sparse.formats import DeviceBSR, DeviceCOO, DeviceELL, DeviceHybrid
+
+    if isinstance(op, DenseOperator):
+        return "dense", {"a": np.asarray(op.a)}
+    if not isinstance(op, SparseOperator):
+        return None
+    m = op.mat
+    if isinstance(m, DeviceCOO):
+        return "coo", {
+            "row": np.asarray(m.row),
+            "col": np.asarray(m.col),
+            "val": np.asarray(m.val),
+        }
+    if isinstance(m, DeviceELL):
+        return "ell", {"val": np.asarray(m.val), "col": np.asarray(m.col)}
+    if isinstance(m, DeviceBSR):
+        return "bsr", {"val": np.asarray(m.val), "bcol": np.asarray(m.bcol)}
+    if isinstance(m, DeviceHybrid):
+        return "hybrid", {
+            "ell_val": np.asarray(m.ell_val),
+            "ell_col": np.asarray(m.ell_col),
+            "tail_row": np.asarray(m.tail_row),
+            "tail_col": np.asarray(m.tail_col),
+            "tail_val": np.asarray(m.tail_val),
+        }
+    return None
+
+
+def _import_plan(plan: dict, n: int) -> _Prepared:
+    """Rebuild a :class:`_Prepared` from one exported plan record.  Uses the
+    plain device-container constructors — never the ``to_device_*``
+    converters — so the ``conversion_count()`` audit stays untouched; the
+    persisted tiles ride into the engine, so no tuner probes either."""
+    from ..kernels.engine import TileConfig
+    from ..sparse.formats import DeviceBSR, DeviceCOO, DeviceELL, DeviceHybrid
+
+    dtypes = plan.get("dtypes", {})
+
+    def arr(name):
+        a = plan["arrays"][name]
+        want = dtypes.get(name)
+        return jnp.asarray(a, dtype=jnp.dtype(want)) if want else jnp.asarray(a)
+
+    engine = None
+    ecfg = plan.get("engine")
+    if ecfg:
+        engine = SpmvEngine(
+            format=ecfg["format"],
+            accum_dtype=jnp.dtype(ecfg["accum_dtype"]),
+            tiles=TileConfig(**{k: int(v) for k, v in ecfg["tiles"].items()}),
+            interpret=bool(ecfg["interpret"]),
+            requested=ecfg.get("requested", ecfg["format"]),
+            stats=None,
+            tiles_from=ecfg.get("tiles_from", "override"),
+        )
+    ctype = plan["container"]
+    if ctype == "dense":
+        op: LinearOperator = DenseOperator(arr("a"))
+    else:
+        if ctype == "coo":
+            mat = DeviceCOO(arr("row"), arr("col"), arr("val"), n, n)
+        elif ctype == "ell":
+            mat = DeviceELL(arr("val"), arr("col"), n, n)
+        elif ctype == "bsr":
+            mat = DeviceBSR(arr("val"), arr("bcol"), n, n)
+        elif ctype == "hybrid":
+            mat = DeviceHybrid(
+                arr("ell_val"),
+                arr("ell_col"),
+                arr("tail_row"),
+                arr("tail_col"),
+                arr("tail_val"),
+                n,
+                n,
+            )
+        else:
+            raise ValueError(f"unknown persisted container type {ctype!r}")
+        op = SparseOperator(mat, impl="engine" if engine is not None else "coo", engine=engine)
+    return _Prepared("single", op, None, plan.get("spmv_format"), engine)
 
 
 # --------------------------------------------------------------- frontends

@@ -1,66 +1,141 @@
-"""Serving driver: prefill + batched decode with the KV-cache engine.
+"""Eigensolver serving driver: resident matrices, a synthetic query stream,
+and the serving stats that prove the paper's amortization claim end to end.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke --steps 16
+    PYTHONPATH=src python -m repro.launch.serve --smoke
+
+Loads (generates) a pool of sparse matrices, makes them resident in an
+``EigenScheduler``, fires a threaded synthetic query stream at it, and
+prints the ``ServerStats`` snapshot (throughput, p50/p99 latency, coalesce
+rate).  With a persistent store (``--store``, or always under ``--smoke``
+via a temp dir) it then simulates a server restart: a second scheduler
+warms every matrix from the store and the conversion counter is asserted
+not to move — the zero-conversion warm-start contract, verified live.
+
+(The old LM decode driver moved with its engine: ``repro.serving.lm``.)
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import tempfile
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+
+def _build_matrices(args):
+    from repro.sparse import generate
+
+    specs = [("web", 6.0), ("road", 3.0), ("web", 9.0)][: args.matrices]
+    return [
+        generate(kind, args.n, deg, seed=11 + i, values="normalized")
+        for i, (kind, deg) in enumerate(specs)
+    ]
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--ckpt-dir", default=None, help="restore trained params")
-    args = ap.parse_args()
+def _run_stream(sched, keys, args):
+    """Threaded synthetic stream: each submitter thread round-robins the
+    resident matrices with compatible queries (one shared group key per
+    matrix), so the admission window has something to coalesce."""
+    from repro.serving import DeadlineExceededError, QueueFullError
 
-    from repro.configs import get_config
-    from repro.models.common import split_tree
-    from repro.models.model import init_model
-    from repro.serving import Engine, ServeConfig
+    errors = []
+    lock = threading.Lock()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    params, _ = split_tree(init_model(jax.random.PRNGKey(0), cfg))
-    if args.ckpt_dir:
-        from repro.training.checkpoint import CheckpointManager
+    def submitter(tid: int):
+        handles = []
+        for i in range(args.queries_per_thread):
+            key = keys[(tid + i) % len(keys)]
+            k = 2 + (i % 3) * 2  # k in {2, 4, 6}: same sweep, sliced
+            try:
+                handles.append(
+                    sched.submit(key, k=k, num_iters=args.iters, reorth="full")
+                )
+            except (QueueFullError, DeadlineExceededError) as exc:
+                with lock:
+                    errors.append(exc)
+        for h in handles:
+            try:
+                h.result(timeout=120.0)
+            except Exception as exc:
+                with lock:
+                    errors.append(exc)
 
-        mgr = CheckpointManager(args.ckpt_dir)
-        step, tree, _ = mgr.restore_latest({"params": params, "opt": None})
-        if step is not None:
-            params = tree["params"]
-            print(f"restored step {step}")
-
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
-                                   jnp.int32)}
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
-    if cfg.family == "vlm":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, 8, cfg.d_model)), jnp.float32)
-
-    eng = Engine(cfg, params, ServeConfig(max_len=args.max_len, temperature=args.temperature))
+    threads = [threading.Thread(target=submitter, args=(t,)) for t in range(args.threads)]
     t0 = time.perf_counter()
-    toks, info = eng.generate(batch, steps=args.steps)
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
     wall = time.perf_counter() - t0
-    print(f"{cfg.name}: generated {args.batch}x{args.steps} tokens in {wall:.2f}s "
-          f"({args.batch*args.steps/wall:.1f} tok/s)")
-    print("sample:", np.asarray(toks[0]))
-    print("mean token logprob:", float(info["token_logprobs"].mean()))
+    return wall, errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true", help="small sizes, temp store, fast")
+    ap.add_argument("--n", type=int, default=4096, help="matrix dimension")
+    ap.add_argument("--matrices", type=int, default=2, help="resident matrix pool size")
+    ap.add_argument("--threads", type=int, default=4, help="concurrent submitter threads")
+    ap.add_argument("--queries-per-thread", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=24, help="Lanczos steps per sweep")
+    ap.add_argument("--window-ms", type=float, default=20.0, help="admission window")
+    ap.add_argument("--max-group", type=int, default=16)
+    ap.add_argument("--store", default=None, help="session store dir (persists warm state)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.n = min(args.n, 1024)
+        args.matrices = min(args.matrices, 2)
+        args.threads = min(args.threads, 3)
+        args.queries_per_thread = min(args.queries_per_thread, 6)
+
+    from repro.serving import EigenScheduler, SchedulerConfig, SessionStore
+    from repro.sparse.formats import conversion_count
+
+    store_dir = args.store or (tempfile.mkdtemp(prefix="repro-serving-") if args.smoke else None)
+    store = SessionStore(store_dir) if store_dir else None
+    cfg = SchedulerConfig(
+        admission_window_s=args.window_ms * 1e-3,
+        max_group=args.max_group,
+        max_sessions=max(args.matrices, 2),
+    )
+
+    matrices = _build_matrices(args)
+    with EigenScheduler(cfg, store=store) as sched:
+        t0 = time.perf_counter()
+        keys = [sched.add_matrix(m, name=f"mat{i}") for i, m in enumerate(matrices)]
+        prep_s = time.perf_counter() - t0
+        print(f"resident: {len(keys)} matrices (n={args.n}) prepared in {prep_s:.2f}s")
+        wall, errors = _run_stream(sched, keys, args)
+        stats = sched.stats()
+        qps = stats.completed / wall if wall > 0 else 0.0
+        print(stats.summary())
+        print(f"throughput: {stats.completed} queries in {wall:.2f}s = {qps:.1f} q/s")
+        if errors:
+            print(f"stream errors: {len(errors)} ({type(errors[0]).__name__}: {errors[0]})")
+    if errors:
+        return 1
+
+    if store is not None:
+        # Simulated restart: a fresh scheduler must warm every matrix from
+        # the persisted store without converting anything.
+        conv0 = conversion_count()
+        with EigenScheduler(cfg, store=store) as sched2:
+            for i, m in enumerate(matrices):
+                sched2.add_matrix(m, name=f"mat{i}")
+            s2 = sched2.stats()
+            h = sched2.submit("mat0", k=4, num_iters=args.iters, reorth="full")
+            res = h.result(timeout=120.0)
+        dconv = conversion_count() - conv0
+        print(
+            f"restart: {s2.warm_starts}/{len(matrices)} sessions warm-started, "
+            f"{dconv} conversions, first solve reused={res.session_reuse}"
+        )
+        if s2.warm_starts != len(matrices) or dconv != 0 or not res.session_reuse:
+            print("FAIL: warm restart paid conversions")
+            return 1
+        print("warm-restart contract verified: zero conversions after restart")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,3 +1,62 @@
-from .engine import Engine, ServeConfig
+"""Eigensolver serving: async scheduler, persistent warm sessions, metrics.
 
-__all__ = ["Engine", "ServeConfig"]
+    from repro.serving import EigenScheduler, SchedulerConfig, SessionStore
+
+    with EigenScheduler(store=SessionStore(root)) as sched:
+        key = sched.add_matrix(csr)              # warm from store, or build
+        h = sched.submit(key, k=8, num_iters=32) # future
+        res = h.result()                         # per-query EigenResult
+        print(sched.stats().summary())           # p50/p99, coalesce rate
+
+The legacy LM decode engine moved to ``repro.serving.lm``; importing
+``Engine`` / ``ServeConfig`` from here still works with a
+``DeprecationWarning``.
+"""
+
+import warnings
+
+from .metrics import LatencyHistogram, ServerStats, ServingMetrics
+from .scheduler import (
+    DeadlineExceededError,
+    EigenScheduler,
+    QueryCancelledError,
+    QueryHandle,
+    QueueFullError,
+    SchedulerConfig,
+    ServingError,
+    UnknownMatrixError,
+)
+from .store import SessionStore, default_store_root
+
+__all__ = [
+    "EigenScheduler",
+    "SchedulerConfig",
+    "QueryHandle",
+    "SessionStore",
+    "default_store_root",
+    "ServingMetrics",
+    "ServerStats",
+    "LatencyHistogram",
+    "ServingError",
+    "QueueFullError",
+    "DeadlineExceededError",
+    "QueryCancelledError",
+    "UnknownMatrixError",
+]
+
+_LEGACY = ("Engine", "ServeConfig")
+
+
+def __getattr__(name: str):
+    if name in _LEGACY:
+        warnings.warn(
+            f"repro.serving.{name} is the legacy LM decode engine; import it "
+            "from repro.serving.lm (the eigensolver serving layer is "
+            "repro.serving.EigenScheduler)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from . import lm
+
+        return getattr(lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

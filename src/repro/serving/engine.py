@@ -1,63 +1,57 @@
-"""Batched serving engine: prefill + jitted single-token decode loop.
+"""Eigensolver serving surface (scheduler + store + metrics re-exports).
 
-Greedy or temperature sampling; per-sequence EOS tracking (finished rows
-keep emitting pad — the fixed-batch analogue of continuous batching slot
-recycling, which `examples/serve_driver.py` demonstrates end to end).
+Historically this module held the seed's LM decode ``Engine``; that code
+now lives in ``repro.serving.lm`` and the names here are the eigensolver
+serving layer the ROADMAP targets.  ``Engine`` / ``ServeConfig`` remain
+importable through a ``DeprecationWarning`` shim for the LM tests/demos.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Dict, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
+from .metrics import LatencyHistogram, ServerStats, ServingMetrics
+from .scheduler import (
+    DeadlineExceededError,
+    EigenScheduler,
+    QueryCancelledError,
+    QueryHandle,
+    QueueFullError,
+    SchedulerConfig,
+    ServingError,
+    UnknownMatrixError,
+)
+from .store import SessionStore, default_store_root
 
-from ..models.common import ModelConfig
-from ..models.model import decode_step, prefill
+__all__ = [
+    "EigenScheduler",
+    "SchedulerConfig",
+    "QueryHandle",
+    "SessionStore",
+    "default_store_root",
+    "ServingMetrics",
+    "ServerStats",
+    "LatencyHistogram",
+    "ServingError",
+    "QueueFullError",
+    "DeadlineExceededError",
+    "QueryCancelledError",
+    "UnknownMatrixError",
+]
 
-__all__ = ["ServeConfig", "Engine"]
+_LEGACY = ("Engine", "ServeConfig")
 
 
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    max_len: int = 512
-    temperature: float = 0.0  # 0 = greedy
-    eos_id: int = -1  # -1 = never stop
-    pad_id: int = 0
+def __getattr__(name: str):
+    if name in _LEGACY:
+        warnings.warn(
+            f"repro.serving.engine.{name} is the legacy LM decode engine; "
+            "import it from repro.serving.lm (the eigensolver serving layer "
+            "is repro.serving.EigenScheduler)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from . import lm
 
-
-class Engine:
-    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig = ServeConfig()):
-        self.cfg = cfg
-        self.params = params
-        self.sc = sc
-        self._decode = jax.jit(partial(decode_step, cfg=cfg))
-
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
-        logits = logits[..., : self.cfg.vocab]
-        if self.sc.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
-
-    def generate(self, batch: Dict, steps: int, seed: int = 0) -> Tuple[jax.Array, Dict]:
-        """batch: prompt dict (tokens (B,S), [frames...]). Returns (B, steps)."""
-        state, logits = prefill(self.params, self.cfg, batch, max_len=self.sc.max_len)
-        b = batch["tokens"].shape[0]
-        key = jax.random.PRNGKey(seed)
-        done = jnp.zeros((b,), bool)
-        outs = []
-        tok_ps = []
-        for i in range(steps):
-            key, k2 = jax.random.split(key)
-            nxt = self._sample(logits, k2)
-            logp = jax.nn.log_softmax(logits[..., : self.cfg.vocab], axis=-1)
-            tok_ps.append(jnp.take_along_axis(logp, nxt[:, None], axis=-1)[:, 0])
-            nxt = jnp.where(done, self.sc.pad_id, nxt)
-            outs.append(nxt)
-            if self.sc.eos_id >= 0:
-                done = done | (nxt == self.sc.eos_id)
-            logits, state = self._decode(params=self.params, state=state, tokens=nxt[:, None])
-        tokens = jnp.stack(outs, axis=1)
-        return tokens, {"token_logprobs": jnp.stack(tok_ps, axis=1), "final_state": state}
+        return getattr(lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,66 @@
+"""Legacy LM decode engine (prefill + jitted single-token decode loop).
+
+This is the seed's language-model serving shell, kept for the model-side
+tests and demos; it is NOT the eigensolver serving layer — that is
+``repro.serving.scheduler`` (the async scheduler over prepared
+``EigenSession``\\ s).  Importing ``Engine`` / ``ServeConfig`` from
+``repro.serving`` still works but emits a ``DeprecationWarning``; import
+from ``repro.serving.lm`` directly to silence it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ModelConfig
+from ..models.model import decode_step, prefill
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int = -1  # -1 = never stop
+    pad_id: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        logits = logits[..., : self.cfg.vocab]
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch: Dict, steps: int, seed: int = 0) -> Tuple[jax.Array, Dict]:
+        """batch: prompt dict (tokens (B,S), [frames...]). Returns (B, steps)."""
+        state, logits = prefill(self.params, self.cfg, batch, max_len=self.sc.max_len)
+        b = batch["tokens"].shape[0]
+        key = jax.random.PRNGKey(seed)
+        done = jnp.zeros((b,), bool)
+        outs = []
+        tok_ps = []
+        for i in range(steps):
+            key, k2 = jax.random.split(key)
+            nxt = self._sample(logits, k2)
+            logp = jax.nn.log_softmax(logits[..., : self.cfg.vocab], axis=-1)
+            tok_ps.append(jnp.take_along_axis(logp, nxt[:, None], axis=-1)[:, 0])
+            nxt = jnp.where(done, self.sc.pad_id, nxt)
+            outs.append(nxt)
+            if self.sc.eos_id >= 0:
+                done = done | (nxt == self.sc.eos_id)
+            logits, state = self._decode(params=self.params, state=state, tokens=nxt[:, None])
+        tokens = jnp.stack(outs, axis=1)
+        return tokens, {"token_logprobs": jnp.stack(tok_ps, axis=1), "final_state": state}

@@ -1,0 +1,470 @@
+"""Eigensolver-as-a-service: async scheduler with continuous batching.
+
+The paper's economics — one expensive per-matrix setup (format conversion,
+partitioning, precision tuning) amortized over a stream of Top-K queries —
+become a *serving* problem the moment queries arrive asynchronously: who
+holds the prepared sessions, which queued queries may share one Lanczos
+sweep, and what happens when the queue outruns the solver.  This module is
+that layer:
+
+* ``EigenScheduler`` admits :class:`~repro.api.EigQuery` requests against a
+  bounded pool of resident :class:`~repro.api.EigenSession`\\ s and resolves
+  each request's :class:`QueryHandle` future with its own
+  :class:`~repro.api.EigenResult`.
+* **Continuous batching**: a dispatch thread pulls the oldest request, then
+  holds the batch open for a tunable *admission window*, coalescing every
+  queued request with the same session and the same
+  :meth:`EigenSession.group_key` — exactly the predicate ``eigsh_many``
+  groups by, so a coalesced batch is served by ONE shared sweep and each
+  query's answer is identical to what the batched API returns.  Queries the
+  session would not merge (``policy="auto"``, different reorth/policy/
+  backend) are never coalesced.
+* **SLOs**: per-request deadlines shrink the admission window (a batch never
+  idles past its most urgent member) and expire queued requests with a typed
+  :class:`DeadlineExceededError`; requests can be cancelled while queued; a
+  bounded queue rejects overload with :class:`QueueFullError` instead of
+  buffering without limit.
+* **Warm restarts**: with a :class:`~repro.serving.store.SessionStore`
+  attached, ``add_matrix`` restores persisted device layouts + tuned tiles
+  keyed by matrix fingerprint — zero conversions, counter-verified — and
+  persists cold-built sessions for the next process.
+* **Metrics**: queue depth, batch occupancy, coalesce rate, warm-start
+  counters, and p50/p99 latency histograms via :meth:`EigenScheduler.stats`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Any, Deque, List, Optional
+
+from ..api.frontend import SolverConfig
+from ..api.result import EigenResult, with_queue_time
+from ..api.session import EigenSession, _as_query
+from .metrics import ServerStats, ServingMetrics
+from .store import SessionStore
+
+__all__ = [
+    "EigenScheduler",
+    "SchedulerConfig",
+    "QueryHandle",
+    "ServingError",
+    "QueueFullError",
+    "DeadlineExceededError",
+    "QueryCancelledError",
+    "UnknownMatrixError",
+]
+
+
+class ServingError(RuntimeError):
+    """Base class of every typed serving-layer failure."""
+
+
+class QueueFullError(ServingError):
+    """Submission rejected: the bounded request queue is at capacity."""
+
+
+class DeadlineExceededError(ServingError):
+    """The request's deadline expired before its solve was dispatched."""
+
+
+class QueryCancelledError(ServingError):
+    """The request was cancelled while still queued."""
+
+
+class UnknownMatrixError(ServingError):
+    """The named matrix is not resident in the scheduler's session pool."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Serving knobs.
+
+    Attributes:
+      max_queue: bounded-queue backpressure limit — submissions beyond this
+        many pending requests raise :class:`QueueFullError`.
+      admission_window_s: how long the dispatcher holds a batch open for
+        more compatible queries after pulling its first member.  0 disables
+        waiting (still coalesces whatever is already queued).
+      max_group: most queries one coalesced ``eigsh_many`` dispatch serves.
+      max_sessions: bounded session pool — adding a matrix beyond this
+        evicts the least-recently-used resident session (persisted to the
+        store first, when one is attached).
+    """
+
+    max_queue: int = 256
+    admission_window_s: float = 2e-3
+    max_group: int = 32
+    max_sessions: int = 8
+
+
+class QueryHandle:
+    """Future for one submitted query.
+
+    ``result(timeout)`` blocks until the solve lands and returns the
+    per-query :class:`~repro.api.EigenResult` (with the ``queue_s`` /
+    ``e2e_s`` timing split stamped in), or raises the typed error the
+    request died with.  ``cancel()`` withdraws a still-queued request.
+    """
+
+    def __init__(self, matrix: str, query, group_key: Optional[tuple], deadline: Optional[float]):
+        self.matrix = matrix
+        self.query = query
+        self.group_key = group_key
+        self.deadline = deadline  # absolute time.monotonic(), or None
+        self.submit_t = time.monotonic()
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._result: Optional[EigenResult] = None
+        self._exception: Optional[BaseException] = None
+        self._cancelled = False
+        self._started = False
+
+    # -- caller side ------------------------------------------------------
+
+    def cancel(self) -> bool:
+        """Withdraw the request if it has not been dispatched; returns
+        whether the cancellation took effect."""
+        with self._lock:
+            if self._started or self._event.is_set():
+                return False
+            self._cancelled = True
+            return True
+
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> EigenResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"query against {self.matrix!r} not done after {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result  # type: ignore[return-value]
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"query against {self.matrix!r} not done after {timeout}s")
+        return self._exception
+
+    # -- scheduler side ---------------------------------------------------
+
+    def _start(self) -> bool:
+        """Mark dispatched; False when a cancel won the race."""
+        with self._lock:
+            if self._cancelled:
+                return False
+            self._started = True
+            return True
+
+    def _set_result(self, res: EigenResult) -> None:
+        self._result = res
+        self._event.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._event.set()
+
+
+class EigenScheduler:
+    """Async eigensolver server over a bounded pool of prepared sessions.
+
+    ::
+
+        store = SessionStore(root)                  # optional persistence
+        with EigenScheduler(store=store) as sched:
+            key = sched.add_matrix(csr)             # warm from store, or build
+            h = sched.submit(key, k=8, num_iters=32, deadline_s=0.5)
+            res = h.result()                        # EigenResult future
+
+    One dispatch thread executes coalesced ``eigsh_many`` groups; distinct
+    sessions stay independent (the session layer serializes per-session
+    query batches internally).  ``start=False`` constructs the scheduler
+    paused — submissions queue but nothing dispatches until :meth:`start` —
+    which is also the deterministic way to test backpressure and deadlines.
+    """
+
+    def __init__(
+        self,
+        config: Optional[SchedulerConfig] = None,
+        *,
+        store: Optional[SessionStore] = None,
+        start: bool = True,
+    ):
+        self.config = config or SchedulerConfig()
+        self.store = store
+        self.metrics = ServingMetrics()
+        self._sessions: "OrderedDict[str, EigenSession]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: Deque[QueryHandle] = deque()
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._closed = False
+        if start:
+            self.start()
+
+    # ---------------------------------------------------------- lifecycle
+
+    def start(self) -> "EigenScheduler":
+        with self._cv:
+            if self._closed:
+                raise ServingError("scheduler is closed")
+            if self._running:
+                return self
+            self._running = True
+            self._thread = threading.Thread(
+                target=self._loop, name="eigen-scheduler", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def close(self, *, persist: bool = True, timeout: float = 30.0) -> None:
+        """Stop dispatching, fail leftover queued requests with
+        :class:`ServingError`, and (by default) persist every resident
+        session to the attached store."""
+        with self._cv:
+            self._closed = True
+            self._running = False
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        with self._cv:
+            leftovers = list(self._queue)
+            self._queue.clear()
+        for h in leftovers:
+            h._set_exception(ServingError("scheduler closed before dispatch"))
+        if persist:
+            self.persist()
+
+    def persist(self) -> int:
+        """Save every resident session's built plans to the store (no-op
+        without one); returns how many sessions were written."""
+        if self.store is None:
+            return 0
+        with self._cv:
+            sessions = list(self._sessions.values())
+        return sum(1 for s in sessions if self.store.save(s) is not None)
+
+    def __enter__(self) -> "EigenScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------- admin plane
+
+    def add_matrix(
+        self,
+        A,
+        *,
+        name: Optional[str] = None,
+        config: Optional[SolverConfig] = None,
+        n: Optional[int] = None,
+    ) -> str:
+        """Make a matrix resident: prepare (or warm-restore) its session and
+        return the key ``submit`` addresses it by (``name``, defaulting to
+        the matrix fingerprint).  With a store attached, a persisted entry
+        for (matrix, layout) warms the session with zero conversions; a cold
+        build is persisted for the next process.  Beyond
+        ``config.max_sessions`` residents, the LRU session is evicted."""
+        session = EigenSession(A, config, n=n)
+        imported = self.store.load_into(session) if self.store is not None else 0
+        if imported > 0:
+            self.metrics.inc("warm_starts")
+        else:
+            session.warmup()
+            self.metrics.inc("cold_builds")
+            if self.store is not None:
+                self.store.save(session)
+        key = name or session.ensure_fingerprint()
+        if key is None:
+            raise ServingError(
+                "matrix has no content fingerprint (matrix-free input?); pass name="
+            )
+        evicted: List[EigenSession] = []
+        with self._cv:
+            self._sessions[key] = session
+            self._sessions.move_to_end(key)
+            while len(self._sessions) > self.config.max_sessions:
+                _, old = self._sessions.popitem(last=False)
+                evicted.append(old)
+        for old in evicted:  # persist outside the lock: saves can be slow
+            if self.store is not None:
+                self.store.save(old)
+        return key
+
+    def session(self, matrix: str) -> EigenSession:
+        with self._cv:
+            sess = self._sessions.get(matrix)
+        if sess is None:
+            raise UnknownMatrixError(f"matrix {matrix!r} is not resident; add_matrix first")
+        return sess
+
+    # --------------------------------------------------------- query plane
+
+    def submit(
+        self,
+        matrix: str,
+        query: Any = None,
+        *,
+        deadline_s: Optional[float] = None,
+        **fields,
+    ) -> QueryHandle:
+        """Queue one query against a resident matrix; returns its future.
+
+        ``query`` is anything ``eigsh_many`` accepts (an ``EigQuery``, a
+        dict, a bare ``k``); alternatively pass the fields as keywords
+        (``submit(key, k=8, policy="FDF")``).  Validation runs *here* — an
+        infeasible query (bad ``k``/``num_iters``) raises ``ValueError``
+        synchronously, never poisoning a batch.  ``deadline_s`` (relative
+        seconds) bounds queue wait: the dispatcher never holds a batch open
+        past it, and expires the request with
+        :class:`DeadlineExceededError` if the solve cannot start in time.
+        """
+        sess = self.session(matrix)  # raises UnknownMatrixError
+        q = _as_query(query if query is not None else fields)
+        gkey = sess.group_key(q)  # validates; raises ValueError on bad queries
+        deadline = time.monotonic() + float(deadline_s) if deadline_s is not None else None
+        h = QueryHandle(matrix, q, gkey, deadline)
+        with self._cv:
+            if self._closed:
+                raise ServingError("scheduler is closed")
+            if len(self._queue) >= self.config.max_queue:
+                self.metrics.inc("rejected_full")
+                raise QueueFullError(
+                    f"request queue at capacity ({self.config.max_queue} pending); "
+                    "retry with backoff or raise SchedulerConfig.max_queue"
+                )
+            self._queue.append(h)
+            self._sessions.move_to_end(matrix)  # LRU touch
+            self.metrics.inc("submitted")
+            self._cv.notify_all()
+        return h
+
+    def stats(self) -> ServerStats:
+        """Point-in-time :class:`~repro.serving.metrics.ServerStats`."""
+        with self._cv:
+            depth = len(self._queue)
+            nsess = len(self._sessions)
+        return self.metrics.snapshot(queue_depth=depth, sessions=nsess)
+
+    # ------------------------------------------------------- dispatch loop
+
+    def _resolve_dead(self, h: QueryHandle, now: float) -> bool:
+        """Terminally resolve a cancelled/expired request; True if it died."""
+        if h.cancelled():
+            self.metrics.inc("cancelled")
+            h._set_exception(QueryCancelledError(f"query against {h.matrix!r} cancelled"))
+            return True
+        if h.deadline is not None and now > h.deadline:
+            self.metrics.inc("rejected_deadline")
+            h._set_exception(
+                DeadlineExceededError(
+                    f"deadline exceeded before dispatch "
+                    f"(waited {now - h.submit_t:.3f}s in queue)"
+                )
+            )
+            return True
+        return False
+
+    def _take_compatible(self, seed: QueryHandle, room: int) -> List[QueryHandle]:
+        """Pull every queued request coalescible with ``seed`` (same matrix,
+        same non-None group key), resolving dead ones along the way.  Caller
+        holds the lock."""
+        if seed.group_key is None or room <= 0:
+            return []
+        now = time.monotonic()
+        taken: List[QueryHandle] = []
+        keep: Deque[QueryHandle] = deque()
+        while self._queue:
+            h = self._queue.popleft()
+            if self._resolve_dead(h, now):
+                continue
+            if len(taken) < room and h.matrix == seed.matrix and h.group_key == seed.group_key:
+                taken.append(h)
+            else:
+                keep.append(h)
+        self._queue.extend(keep)
+        return taken
+
+    def _next_group(self) -> Optional[List[QueryHandle]]:
+        """Block until a batch is ready: pop the oldest live request, then
+        hold the batch open for the admission window (clipped to the batch's
+        earliest deadline), coalescing compatible arrivals."""
+        with self._cv:
+            seed: Optional[QueryHandle] = None
+            while seed is None:
+                if not self._running:
+                    return None
+                now = time.monotonic()
+                while self._queue:
+                    h = self._queue.popleft()
+                    if not self._resolve_dead(h, now):
+                        seed = h
+                        break
+                if seed is None:
+                    self._cv.wait(timeout=0.1)
+            group = [seed]
+            window_end = time.monotonic() + self.config.admission_window_s
+            if seed.deadline is not None:
+                window_end = min(window_end, seed.deadline)
+            while len(group) < self.config.max_group:
+                taken = self._take_compatible(seed, self.config.max_group - len(group))
+                group.extend(taken)
+                for h in taken:
+                    if h.deadline is not None:
+                        # Deadline-aware formation: never idle past the most
+                        # urgent member's slack.
+                        window_end = min(window_end, h.deadline)
+                if seed.group_key is None or len(group) >= self.config.max_group:
+                    break
+                remaining = window_end - time.monotonic()
+                if remaining <= 0 or not self._running:
+                    break
+                self._cv.wait(timeout=remaining)
+            # Last sweep: arrivals during the final wait still make the bus.
+            if seed.group_key is not None and len(group) < self.config.max_group:
+                group.extend(self._take_compatible(seed, self.config.max_group - len(group)))
+        return group
+
+    def _dispatch(self, group: List[QueryHandle]) -> None:
+        t_dispatch = time.monotonic()
+        live = [h for h in group if not self._resolve_dead(h, t_dispatch) and h._start()]
+        if not live:
+            return
+        with self._cv:
+            sess = self._sessions.get(live[0].matrix)
+        if sess is None:
+            self.metrics.inc("failed", len(live))
+            for h in live:
+                h._set_exception(
+                    UnknownMatrixError(f"matrix {h.matrix!r} was evicted while queued")
+                )
+            return
+        try:
+            results = sess.eigsh_many([h.query for h in live])
+        except Exception as exc:
+            self.metrics.inc("failed", len(live))
+            for h in live:
+                h._set_exception(exc)
+            return
+        self.metrics.record_group(len(live))
+        for h, res in zip(live, results):
+            queue_s = t_dispatch - h.submit_t
+            res = with_queue_time(res, queue_s)
+            self.metrics.record_latency(queue_s, float(res.timings.get("total_s", 0.0)))
+            self.metrics.inc("completed")
+            h._set_result(res)
+
+    def _loop(self) -> None:
+        while True:
+            group = self._next_group()
+            if group is None:
+                return
+            self._dispatch(group)

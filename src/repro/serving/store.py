@@ -1,0 +1,160 @@
+"""Cross-process session persistence: the serving warm-start store.
+
+A served matrix's expensive state — converted device layouts, tuned SpMV
+tiles, per-policy plan configuration — is a pure function of (matrix bytes,
+layout config, repro version).  ``SessionStore`` persists exactly that
+state next to the SpMV tune cache, keyed by matrix fingerprint + layout
+fingerprint, so a restarted server warms instantly: reloading rebuilds the
+device containers from the saved arrays with the *plain constructors*
+(``conversion_count()`` does not move) and injects the saved tiles
+(``tuner_probe_count()`` does not move either).
+
+Layout on disk (one directory per (matrix, layout) pair)::
+
+    <root>/<matrix_fp>-<layout_fp>/
+        header.json   # schema, repro version, fingerprints, n, plan configs
+        plans.npz     # the device-container arrays, one prefix per plan
+
+Staleness is rejected, never trusted: the header carries the repro version
+and the layout-config fingerprint, and :meth:`EigenSession.import_plans`
+refuses any mismatch with a warning — the session then cold-rebuilds
+lazily, identical to having no store at all.  A corrupt payload likewise
+warns and is treated as absent.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SessionStore", "default_store_root"]
+
+_HEADER = "header.json"
+_PLANS = "plans.npz"
+
+
+def default_store_root() -> str:
+    """Default store location: ``REPRO_SERVING_STORE`` if set, else a
+    ``serving_store`` directory next to the SpMV tune cache."""
+    env = os.environ.get("REPRO_SERVING_STORE")
+    if env:
+        return env
+    from ..kernels.engine import DEFAULT_TUNE_CACHE
+
+    return os.path.join(os.path.dirname(DEFAULT_TUNE_CACHE), "serving_store")
+
+
+class SessionStore:
+    """Fingerprint-keyed persistent store of exported session plans."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = Path(root if root is not None else default_store_root())
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------- layout
+
+    def _key(self, matrix_fp: str, layout_fp: str) -> str:
+        return f"{matrix_fp}-{layout_fp}"
+
+    def path_for(self, session) -> Optional[Path]:
+        """Directory this session persists under, or None when the session
+        has no matrix fingerprint (matrix-free input: nothing to key by)."""
+        from ..api.session import _LAYOUT_FIELDS, config_fingerprint
+
+        matrix_fp = session.ensure_fingerprint()
+        if matrix_fp is None:
+            return None
+        layout_fp = config_fingerprint(session.cfg, _LAYOUT_FIELDS)
+        return self.root / self._key(matrix_fp, layout_fp)
+
+    def entries(self) -> list:
+        """Persisted (matrix, layout) keys currently on disk."""
+        return sorted(p.name for p in self.root.iterdir() if (p / _HEADER).exists())
+
+    # --------------------------------------------------------------- save
+
+    def save(self, session) -> Optional[Path]:
+        """Persist the session's built plans; returns the entry path, or
+        None when there is nothing persistable (no fingerprint, or no
+        exportable plans built yet).  The write is atomic-enough (temp files
+        + rename) that a concurrent reader never sees a torn entry."""
+        path = self.path_for(session)
+        if path is None:
+            return None
+        state = session.export_state()
+        if not state["plans"]:
+            return None
+        arrays = {}
+        plan_headers = []
+        for i, plan in enumerate(state["plans"]):
+            rec = {k: v for k, v in plan.items() if k != "arrays"}
+            rec["array_names"] = sorted(plan["arrays"])
+            plan_headers.append(rec)
+            for name, a in plan["arrays"].items():
+                arrays[f"p{i}.{name}"] = np.asarray(a)
+        header = {k: v for k, v in state.items() if k != "plans"}
+        header["plans"] = plan_headers
+        path.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path / _PLANS)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(header, f, indent=1)
+            os.replace(tmp, path / _HEADER)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    # --------------------------------------------------------------- load
+
+    def load_state(self, session) -> Optional[dict]:
+        """Read this session's persisted state back into ``export_state``
+        form (arrays rehydrated from the npz), or None when absent/corrupt.
+        Header validation itself happens in ``import_plans`` — this method
+        only reassembles bytes."""
+        import warnings
+
+        path = self.path_for(session)
+        if path is None or not (path / _HEADER).exists():
+            return None
+        try:
+            with open(path / _HEADER) as f:
+                header = json.load(f)
+            with np.load(path / _PLANS) as z:
+                plans = []
+                for i, rec in enumerate(header.get("plans", [])):
+                    plan = dict(rec)
+                    plan["arrays"] = {
+                        name: z[f"p{i}.{name}"] for name in rec.get("array_names", [])
+                    }
+                    plans.append(plan)
+            header["plans"] = plans
+            return header
+        except Exception as exc:
+            warnings.warn(
+                f"corrupt serving-store entry {path.name} ignored "
+                f"({type(exc).__name__}: {exc}); the session will cold-build",
+                stacklevel=2,
+            )
+            return None
+
+    def load_into(self, session) -> int:
+        """Warm a session from its persisted entry: returns plans imported
+        (0 when absent, stale, or corrupt — the session cold-builds lazily)."""
+        state = self.load_state(session)
+        if state is None:
+            return 0
+        return session.import_plans(state)

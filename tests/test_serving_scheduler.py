@@ -1,0 +1,316 @@
+"""Eigensolver-as-a-service: scheduler coalescing, SLOs, warm restarts.
+
+The serving contract under test:
+
+* coalesced batches answer each query exactly as the batched session API
+  (and independent solves) would — serving never changes the math;
+* SLO machinery is typed and observable — deadline expiry, bounded-queue
+  backpressure, cancellation each raise their own error and tick a metric;
+* a killed-and-restarted server warms from the persistent store with ZERO
+  format conversions, counter-verified;
+* stale persisted artifacts (version / layout drift) are rejected with a
+  warning and the session cold-rebuilds.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import EigenSession, SolverConfig, prepare, session_cache_clear
+from repro.serving import (
+    DeadlineExceededError,
+    EigenScheduler,
+    QueryCancelledError,
+    QueueFullError,
+    SchedulerConfig,
+    ServingError,
+    SessionStore,
+    UnknownMatrixError,
+)
+from repro.sparse import generate
+from repro.sparse.formats import conversion_count
+
+ITERS = 20
+CFG = SolverConfig(reorth="full", backend="single")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    session_cache_clear()
+    yield
+    session_cache_clear()
+
+
+@pytest.fixture(scope="module")
+def csr():
+    return generate("web", 384, 6.0, seed=3, values="normalized")
+
+
+def _mk(csr, *, start=True, store=None, **knobs):
+    knobs.setdefault("admission_window_s", 0.02)
+    sched = EigenScheduler(SchedulerConfig(**knobs), store=store, start=start)
+    key = sched.add_matrix(csr, name="m", config=CFG)
+    return sched, key
+
+
+# ---------------------------------------------------------------- coalescing
+
+
+def test_coalesced_results_match_batched_and_independent(csr):
+    queries = [{"k": k, "num_iters": ITERS, "reorth": "full"} for k in (2, 3, 4)]
+    sched, key = _mk(csr, start=False)
+    try:
+        handles = [sched.submit(key, q) for q in queries]
+        sched.start()
+        got = [h.result(timeout=120.0) for h in handles]
+    finally:
+        sched.close()
+
+    # One shared sweep served all three queries.
+    stats = sched.stats()
+    assert stats.groups == 1
+    assert stats.grouped_queries == 3
+    assert stats.batch_occupancy == pytest.approx(3.0)
+    assert stats.coalesce_rate == pytest.approx(1.0)
+    assert all(r.timings.get("amortized_over") == 3 for r in got)
+
+    # Bit-identical to the batched session API on an equivalent session.
+    ref_sess = prepare(csr, reorth="full", backend="single")
+    for r, ref in zip(got, ref_sess.eigsh_many(queries)):
+        assert r.k == ref.k
+        np.testing.assert_array_equal(np.asarray(r.eigenvalues), np.asarray(ref.eigenvalues))
+
+    # And numerically identical to fully independent solves.
+    for q, r in zip(queries, got):
+        solo = ref_sess.eigsh(**q)
+        np.testing.assert_allclose(
+            np.asarray(r.eigenvalues), np.asarray(solo.eigenvalues), rtol=1e-10
+        )
+
+
+def test_incompatible_queries_are_not_coalesced(csr):
+    sched, key = _mk(csr, start=False)
+    try:
+        h1 = sched.submit(key, k=2, num_iters=ITERS, reorth="full")
+        h2 = sched.submit(key, k=2, num_iters=ITERS, reorth="half")
+        sched.start()
+        r1, r2 = h1.result(timeout=120.0), h2.result(timeout=120.0)
+    finally:
+        sched.close()
+    assert r1.k == r2.k == 2
+    assert sched.stats().groups == 2  # different reorth => different sweeps
+    assert sched.stats().coalesce_rate == 0.0
+
+
+def test_group_key_predicate_matches_eigsh_many_rules(csr):
+    sess = EigenSession(csr, CFG)
+    a = sess.group_key({"k": 2, "num_iters": ITERS, "reorth": "full"})
+    b = sess.group_key({"k": 6, "num_iters": 40, "reorth": "full"})
+    c = sess.group_key({"k": 2, "num_iters": ITERS, "reorth": "half"})
+    assert a is not None and a == b  # k/m differences still share a sweep
+    assert a != c
+    # Accuracy-driven auto-policy solves are never groupable.
+    assert sess.group_key({"k": 2, "num_iters": ITERS, "policy": "auto"}) is None
+    with pytest.raises(ValueError):
+        sess.group_key({"k": 0, "num_iters": ITERS})
+
+
+def test_queue_and_e2e_timing_split(csr):
+    sched, key = _mk(csr)
+    try:
+        res = sched.submit(key, k=2, num_iters=ITERS, reorth="full").result(timeout=120.0)
+    finally:
+        sched.close()
+    t = res.timings
+    assert t["queue_s"] >= 0.0
+    assert t["e2e_s"] == pytest.approx(t["queue_s"] + t["total_s"], abs=1e-12)
+    assert res.queue_s == t["queue_s"]
+
+
+# ----------------------------------------------------------------- SLO plane
+
+
+def test_deadline_expiry_is_typed_and_counted(csr):
+    sched, key = _mk(csr, start=False)
+    try:
+        h = sched.submit(key, k=2, num_iters=ITERS, deadline_s=0.02)
+        time.sleep(0.1)  # let the deadline lapse while the dispatcher is off
+        sched.start()
+        with pytest.raises(DeadlineExceededError):
+            h.result(timeout=30.0)
+    finally:
+        sched.close()
+    assert sched.stats().rejected_deadline == 1
+    assert sched.stats().completed == 0
+
+
+def test_bounded_queue_backpressure(csr):
+    sched, key = _mk(csr, start=False, max_queue=4)
+    try:
+        for _ in range(4):
+            sched.submit(key, k=2, num_iters=ITERS)
+        with pytest.raises(QueueFullError):
+            sched.submit(key, k=2, num_iters=ITERS)
+        assert sched.stats().rejected_full == 1
+        assert sched.stats().queue_depth == 4
+    finally:
+        sched.close()
+
+
+def test_cancellation_while_queued(csr):
+    sched, key = _mk(csr, start=False)
+    try:
+        h = sched.submit(key, k=2, num_iters=ITERS)
+        assert h.cancel() is True
+        assert h.cancel() is True  # repeat cancel on a cancelled request: still cancelled
+        assert h.cancelled()
+        sched.start()
+        with pytest.raises(QueryCancelledError):
+            h.result(timeout=30.0)
+    finally:
+        sched.close()
+    assert sched.stats().cancelled == 1
+
+
+def test_invalid_query_rejected_synchronously(csr):
+    sched, key = _mk(csr, start=False)
+    try:
+        with pytest.raises(ValueError):
+            sched.submit(key, k=0, num_iters=ITERS)
+        with pytest.raises(UnknownMatrixError):
+            sched.submit("nope", k=2, num_iters=ITERS)
+        assert sched.stats().queue_depth == 0  # nothing poisoned the queue
+    finally:
+        sched.close()
+
+
+def test_close_fails_leftover_requests(csr):
+    sched, key = _mk(csr, start=False)
+    h = sched.submit(key, k=2, num_iters=ITERS)
+    sched.close()
+    with pytest.raises(ServingError):
+        h.result(timeout=5.0)
+
+
+# ------------------------------------------------------------- concurrency
+
+
+def test_concurrent_submitters_all_served_correctly(csr):
+    ref = prepare(csr, reorth="full", backend="single")
+    expect = {k: np.asarray(ref.eigsh(k=k, num_iters=ITERS, reorth="full").eigenvalues)
+              for k in (2, 3, 4)}
+    results = {}
+    errors = []
+    sched, key = _mk(csr, admission_window_s=0.05, max_group=16)
+    try:
+        def client(tid):
+            try:
+                hs = [
+                    (k, sched.submit(key, k=k, num_iters=ITERS, reorth="full"))
+                    for k in (2, 3, 4)
+                ]
+                results[tid] = [(k, h.result(timeout=120.0)) for k, h in hs]
+            except Exception as exc:  # surfaced below: the test thread must not die silently
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(t,)) for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sched.close()
+
+    assert not errors
+    assert len(results) == 4
+    for per_thread in results.values():
+        for k, r in per_thread:
+            assert r.k == k
+            np.testing.assert_allclose(np.asarray(r.eigenvalues), expect[k], rtol=1e-10)
+    stats = sched.stats()
+    assert stats.completed == 12
+    assert stats.groups < 12  # concurrency actually coalesced something
+    assert stats.batch_occupancy > 1.0
+
+
+# ------------------------------------------------------------ warm restarts
+
+
+def test_warm_restart_round_trip_zero_conversions(csr, tmp_path):
+    store = SessionStore(str(tmp_path))
+    knobs = dict(store=store)
+
+    with EigenScheduler(SchedulerConfig(), store=store) as s1:
+        key = s1.add_matrix(csr, config=CFG)
+        s1.submit(key, k=3, num_iters=ITERS).result(timeout=120.0)
+        assert s1.stats().cold_builds == 1
+    assert store.entries()  # close() persisted the session
+
+    conv0 = conversion_count()
+    with EigenScheduler(SchedulerConfig(), store=store) as s2:
+        key2 = s2.add_matrix(csr, config=CFG)  # same layout config => warm hit
+        assert s2.stats().warm_starts == 1
+        assert s2.stats().cold_builds == 0
+        res = s2.submit(key2, k=3, num_iters=ITERS).result(timeout=120.0)
+    assert conversion_count() - conv0 == 0
+    assert res.session_reuse  # served straight from the imported plan
+    assert res.partition["spmv"]["conversions"] == 0
+
+    # Same math after the restart as before it.
+    ref = prepare(csr, reorth="full", backend="single").eigsh(
+        k=3, num_iters=ITERS, reorth="full"
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.eigenvalues), np.asarray(ref.eigenvalues), rtol=1e-10
+    )
+
+
+def test_layout_config_change_misses_the_store(csr, tmp_path):
+    store = SessionStore(str(tmp_path))
+    with EigenScheduler(SchedulerConfig(), store=store) as s1:
+        s1.add_matrix(csr, config=CFG)
+    with EigenScheduler(SchedulerConfig(), store=store) as s2:
+        s2.add_matrix(csr, config=SolverConfig(reorth="full", backend="auto"))
+        assert s2.stats().warm_starts == 0  # layout fingerprint differs
+        assert s2.stats().cold_builds == 1
+
+
+def test_stale_persisted_state_rejected_then_cold_rebuild(csr):
+    s1 = EigenSession(csr, CFG)
+    s1.warmup()
+    state = s1.export_state()
+    assert state["plans"]
+
+    # Version drift: a stale artifact must be refused, not trusted.
+    stale = dict(state, repro_version="0.0.1")
+    s2 = EigenSession(csr, CFG)
+    with pytest.warns(UserWarning, match="stale persisted session rejected"):
+        assert s2.import_plans(stale) == 0
+    conv0 = conversion_count()
+    r = s2.eigsh(k=2, num_iters=ITERS, reorth="full")
+    assert conversion_count() - conv0 > 0  # cold rebuild actually happened
+    assert r.k == 2
+
+    # The untampered state imports cleanly and serves with zero conversions.
+    s3 = EigenSession(csr, CFG)
+    assert s3.import_plans(state) >= 1
+    conv0 = conversion_count()
+    r3 = s3.eigsh(k=2, num_iters=ITERS, reorth="full")
+    assert conversion_count() - conv0 == 0
+    np.testing.assert_array_equal(np.asarray(r3.eigenvalues), np.asarray(r.eigenvalues))
+
+
+def test_session_pool_lru_eviction(csr):
+    other = generate("road", 256, 3.0, seed=5, values="normalized")
+    sched = EigenScheduler(SchedulerConfig(max_sessions=1), start=False)
+    try:
+        k1 = sched.add_matrix(csr, name="a", config=CFG)
+        k2 = sched.add_matrix(other, name="b", config=CFG)
+        assert sched.stats().sessions == 1
+        sched.session(k2)
+        with pytest.raises(UnknownMatrixError):
+            sched.session(k1)
+    finally:
+        sched.close()
