@@ -31,10 +31,20 @@ def main() -> None:
     csr = generate("road", 400, 3.0, seed=1, values="normalized")
     e1 = eng_mod.make_engine(csr, "ell")
     assert e1.tiles_from == "tuned", e1.tiles_from
+    assert e1.iteration_plan is not None and e1.iteration_plan.source == "tuned"
     assert os.path.exists(cache), f"tune cache not persisted at {cache}"
     payload = json.load(open(cache))
-    assert payload.get("version") == 1 and payload["entries"], payload
-    print(f"tuned: {e1.tiles} (measures={eng_mod.get_tuner().measure_count})")
+    assert payload.get("version") == 2 and payload["entries"], payload
+    fp = eng_mod.grid_fingerprint()
+    assert all(rec.get("grid") == fp for rec in payload["entries"].values()), (
+        "every cache entry must carry the current grid fingerprint"
+    )
+    iter_entries = [r for r in payload["entries"].values() if r.get("kind") == "iteration"]
+    assert iter_entries, "whole-iteration plan not persisted"
+    print(
+        f"tuned: {e1.tiles} plan={e1.iteration_plan.update} "
+        f"(measures={eng_mod.get_tuner().measure_count})"
+    )
 
     # Fresh tuner = next CI run with the cache restored: must be a pure hit.
     eng_mod._TUNER = None
@@ -43,7 +53,19 @@ def main() -> None:
     assert t2.measure_count == 0, "restored cache must not re-measure"
     assert e2.tiles == e1.tiles and e2.tiles_from == "tuned"
     assert e2.describe()["tiles_from"] == "tuned"
+    assert e2.iteration_plan == e1.iteration_plan, "plan must survive the cache"
     print(f"cache-hit: {e2.tiles} from {cache} ({len(payload['entries'])} entries)")
+
+    # Stale-grid invalidation: entries stamped by a different candidate space
+    # must be dropped (re-measured on use), never served.
+    stale = {k: dict(v, grid="0" * 16) for k, v in payload["entries"].items()}
+    json.dump({"version": 2, "entries": stale}, open(cache, "w"))
+    eng_mod._TUNER = None
+    e3 = eng_mod.make_engine(csr, "ell")
+    t3 = eng_mod.get_tuner()
+    assert t3.measure_count > 0, "stale grid fingerprint must force a re-measure"
+    assert e3.tiles_from == "tuned"
+    print(f"stale-grid invalidation: re-measured {t3.measure_count} pass(es)")
 
 
 if __name__ == "__main__":

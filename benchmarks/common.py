@@ -32,22 +32,40 @@ def timeit(fn, repeats=3, warmup=1):
 
 # When capture is enabled (benchmarks.run --smoke), every emit() lands here as
 # name -> us_per_call so the run can be written to a comparable JSON artifact.
+# emit_plan() records routing decisions (autotuner winners, auto-format picks)
+# alongside: compare.py's --pair gates use them to tell "the fused path lost
+# AND we shipped it" apart from "the fused path lost and the plan routed
+# around it".
 _CAPTURE = None
+_PLANS = None
 
 
 def start_capture():
-    global _CAPTURE
+    global _CAPTURE, _PLANS
     _CAPTURE = {}
+    _PLANS = {}
 
 
 def captured_metrics() -> dict:
     return dict(_CAPTURE or {})
 
 
+def captured_plans() -> dict:
+    return dict(_PLANS or {})
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     if _CAPTURE is not None:
         _CAPTURE[name] = float(us_per_call)
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_plan(name: str, selected: str, detail: str = ""):
+    """Record which leaf a measured decision chose under metric prefix
+    ``name`` (e.g. ``engine/lanczos_step`` -> ``unfused``)."""
+    if _PLANS is not None:
+        _PLANS[name] = {"selected": str(selected), "detail": detail}
+    print(f"plan,{name},{selected},{detail}")
 
 
 def calibration_us(repeats: int = 11) -> float:

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, ensure_x64, save_artifact, timeit
+from .common import emit, emit_plan, ensure_x64, save_artifact, timeit
 
 
 def _block_diag_csr(n_blocks: int, bs: int = 8, seed: int = 0):
@@ -68,8 +68,13 @@ def run(scale: float = 1.0):
             chosen = " (auto pick)" if fmt == auto_fmt else ""
             emit(f"engine/{name}/{fmt}", t * 1e6,
                  f"n={csr.n} nnz={csr.nnz} auto={auto_fmt}{chosen}")
+        # Decision plan for compare.py --pair: which format a real solve
+        # would route through.  A pair gate (e.g. hybrid:coo) is escaped
+        # when the selector did not ship the losing leaf.
+        emit_plan(f"engine/{name}", auto_fmt, f"format auto-selector, n={csr.n}")
         rows.append(case)
     rows.append(_lanczos_step(scale))
+    rows.append(_lanczos_iteration(scale))
     rows.append(_serving_amortization(scale))
     rows.append(_serving_scheduler(scale))
     rows.append(_precision_policies(scale))
@@ -111,6 +116,54 @@ def _lanczos_step(scale: float) -> dict:
         "n": n,
         "t_fused_us": t_f * 1e6,
         "t_unfused_us": t_u * 1e6,
+    }
+
+
+def _lanczos_iteration(scale: float) -> dict:
+    """Whole-iteration probe, end to end: a short Lanczos sweep with the
+    update pinned to each plan rung (unfused reference vs the fully-fused
+    SpMV+alpha / update+norm two-pass path), on a real ELL-backed operator.
+    These are the quantities the whole-iteration autotuner decides between;
+    the emitted plan is the engine's *actual* measured (or table) decision,
+    which arms/escapes the ``fused_iter:unfused_iter`` pair gate."""
+    from repro.core.lanczos import lanczos_tridiag, make_local_ops
+    from repro.core.operators import make_operator
+    from repro.core.precision import FFF
+    from repro.kernels.engine import IterationPlan, make_engine
+    from repro.sparse import generate
+
+    n = max(256, int(1024 * scale))
+    csr = generate("web", n, 6.0, seed=3, values="normalized")
+    engine = make_engine(csr, "ell", accum_dtype=jnp.float32)
+    op = make_operator(csr, dtype=jnp.float32, engine=engine)
+    pol = FFF.effective()
+    iters = 8
+    v1 = jnp.ones((csr.n,), jnp.float64)
+
+    def sweep(update):
+        plan = IterationPlan(update=update, tiles=engine.tiles, source="override")
+        ops = make_local_ops(op.bound_matvec(pol), pol, plan=plan, operator=op)
+        return lambda: lanczos_tridiag(
+            None, v1, iters, pol, reorth="none", ops=ops
+        ).alpha.block_until_ready()
+
+    t_u = timeit(sweep("unfused"))
+    t_f = timeit(sweep("fused_spmv"))
+    emit("engine/lanczos_step/unfused_iter", t_u * 1e6,
+         f"n={csr.n} m={iters} matvec+dot+update reference sweep")
+    emit("engine/lanczos_step/fused_iter", t_f * 1e6,
+         f"n={csr.n} m={iters} fused spmv+alpha / update+norm sweep")
+    plan = engine.iteration_plan
+    selected = {"fused_spmv": "fused_iter"}.get(plan.update, plan.update)
+    emit_plan("engine/lanczos_step", selected,
+              f"iteration plan source={plan.source}")
+    return {
+        "matrix": "lanczos_iteration",
+        "n": csr.n,
+        "iters": iters,
+        "t_fused_iter_us": t_f * 1e6,
+        "t_unfused_iter_us": t_u * 1e6,
+        "plan": plan.as_dict(),
     }
 
 

@@ -66,7 +66,7 @@ def main(argv=None) -> None:
     )
     args = parser.parse_args(argv)
 
-    from .common import ARTIFACTS, calibration_us, captured_metrics, start_capture
+    from .common import ARTIFACTS, calibration_us, captured_metrics, captured_plans, start_capture
 
     if args.smoke:
         start_capture()
@@ -96,6 +96,7 @@ def main(argv=None) -> None:
         payload = {
             "calibration_us": calibration_us(),
             "metrics": captured_metrics(),
+            "plans": captured_plans(),
         }
         with open(out_path, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

@@ -259,12 +259,18 @@ class _Prepared:
     ops_cache: Dict[tuple, Any] = dataclasses.field(default_factory=dict)
 
     def ops_for(self, pol: PrecisionPolicy, fused: Optional[bool] = None):
-        from ..core.lanczos import make_local_ops
+        from ..core.lanczos import ops_for_operator, resolve_update_mode
 
-        key = (pol, fused)
+        eng = getattr(self.operator, "engine", None)
+        plan = getattr(eng, "iteration_plan", None)
+        # The resolved update mode joins the memo key so env-pin changes
+        # (REPRO_FUSED_LANCZOS / REPRO_ITER_UPDATE) between executes on one
+        # warm session can never serve a stale record.
+        mode = resolve_update_mode(pol, plan=plan, fused=fused)
+        key = (pol, fused, mode)
         ops = self.ops_cache.get(key)
         if ops is None:
-            ops = make_local_ops(self.operator.bound_matvec(pol), pol, fused=fused)
+            ops = ops_for_operator(self.operator, pol, fused=fused)
             self.ops_cache[key] = ops
         return ops
 
@@ -675,6 +681,9 @@ class EigenSession:
                     "interpret": bool(e.interpret),
                     "requested": e.requested,
                     "tiles_from": e.tiles_from,
+                    "iteration_plan": (
+                        e.iteration_plan.as_dict() if e.iteration_plan is not None else None
+                    ),
                 }
             fmt = prep.spmv_format
             plans.append(
@@ -965,6 +974,16 @@ class EigenSession:
         spmv["conversions"] = prep.conversions if built else 0
         spmv["tuner_probes"] = prep.tuner_probes if built else 0
         spmv["reused"] = not built
+        # Iteration-plan provenance: what the tuner (or mode table) chose,
+        # plus the update mode this query's policy actually allows — the
+        # policy gate can demote a fused plan (compensated / phase splits).
+        iter_plan = getattr(prep.engine, "iteration_plan", None)
+        if spmv.get("iteration_plan") or iter_plan is not None:
+            from ..core.lanczos import resolve_update_mode
+
+            rec = dict(spmv.get("iteration_plan") or iter_plan.as_dict())
+            rec["effective"] = resolve_update_mode(q.pol, plan=iter_plan)
+            spmv["iteration_plan"] = rec
         # Per-phase precision audit: the phase map this solve executed and a
         # model-based count of element ops per dtype (how the "this split
         # reduced f64 work" claim is verified — see precision.phase_op_counts).
@@ -1291,14 +1310,30 @@ def _import_plan(plan: dict, n: int) -> _Prepared:
     engine = None
     ecfg = plan.get("engine")
     if ecfg:
+        from ..kernels.engine import IterationPlan
+
+        tiles = TileConfig(**{k: int(v) for k, v in ecfg["tiles"].items()})
+        iter_plan = None
+        ip = ecfg.get("iteration_plan")
+        if ip:
+            iter_plan = IterationPlan(
+                update=ip["update"],
+                tiles=TileConfig(
+                    block_r=int(ip["block_r"]),
+                    block_w=int(ip["block_w"]),
+                    block_size=int(ip["block_size"]),
+                ),
+                source=ip.get("source", "tuned"),
+            )
         engine = SpmvEngine(
             format=ecfg["format"],
             accum_dtype=jnp.dtype(ecfg["accum_dtype"]),
-            tiles=TileConfig(**{k: int(v) for k, v in ecfg["tiles"].items()}),
+            tiles=tiles,
             interpret=bool(ecfg["interpret"]),
             requested=ecfg.get("requested", ecfg["format"]),
             stats=None,
             tiles_from=ecfg.get("tiles_from", "override"),
+            iteration_plan=iter_plan,
         )
     ctype = plan["container"]
     if ctype == "dense":

@@ -45,7 +45,7 @@ from ..kernels.engine import SpmvEngine, make_engine, shard_stats
 from ..sparse.formats import CSR, shard_to_blocked_ell, shard_to_ell, shard_to_hybrid
 from .eigensolver import EigResult
 from .jacobi import jacobi_eigh_host, tridiag_to_dense
-from .lanczos import LanczosResult, Ops, _lanczos_loop, fused_update_enabled
+from .lanczos import LanczosResult, Ops, _lanczos_loop, resolve_update_mode
 from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
 from .precision import PrecisionPolicy, FDF, compensated_sum
 
@@ -122,8 +122,46 @@ def _make_sharded_ops(
         coeffs = jax.lax.psum(local, axis)  # sync point C
         return (u.astype(rdt) - coeffs @ vs_c).astype(cdt)
 
+    plan = getattr(engine, "iteration_plan", None) if engine is not None else None
+    mode = resolve_update_mode(policy, plan=plan)
+    fused_iteration = None
+    if mode == "fused_spmv" and fmt == "ell" and jnp.dtype(sdt_spmv) == jnp.dtype(cdt):
+        from ..kernels import ops as kops
+        from ..kernels.engine import _fit_tile
+        from ..kernels.lanczos_fused import spmv_ell_alpha_kernel_call
+
+        val, col = mats
+        rows = val.shape[0]  # local padded rows (>= n_pad)
+        block_r = _fit_tile(engine.tiles.block_r, rows)
+        block_w = _fit_tile(engine.tiles.block_w, val.shape[1])
+        acc = jnp.dtype(sdt_spmv)
+
+        def fused_iteration(v, v_prev, beta, need_norm=True):
+            x_full = jax.lax.all_gather(v.astype(policy.storage), axis, tiled=True)
+            vpad = jnp.pad(v, (0, rows - n_pad)) if rows > n_pad else v
+            w, a_loc = spmv_ell_alpha_kernel_call(
+                val, col, x_full, vpad,
+                block_r=block_r, block_w=block_w,
+                accum_dtype=acc, interpret=engine.interpret,
+            )
+            # Sync point A, dispatched immediately so XLA's scheduler can
+            # overlap it with the local SpMV tail below: the beta term of the
+            # three-term update needs no alpha, so ``t`` computes while the
+            # alpha partials are on the wire.  (Association differs from the
+            # single-device path — (w - beta v_prev) - alpha v — an accepted
+            # last-ulp tradeoff for the overlap.)
+            alpha = jax.lax.psum(a_loc[0], axis).astype(cdt)
+            t = w[:n_pad].astype(cdt) - beta * v_prev
+            u, nrm_sq = kops.lanczos_update(
+                t, v, v, alpha, jnp.zeros((), cdt), accum_dtype=cdt
+            )
+            if need_norm:
+                nrm_sq = jax.lax.psum(nrm_sq, axis)  # sync point B
+            # Two collectives per iteration — the paper's 2-psum budget holds.
+            return u, alpha, nrm_sq
+
     fused_update = None
-    if fused_update_enabled(policy):
+    if fused_iteration is None and mode in ("fused", "fused_spmv"):
         from ..kernels import ops as kops
 
         def fused_update(w, v, v_prev, alpha, beta, need_norm=True):
@@ -137,7 +175,7 @@ def _make_sharded_ops(
 
     return Ops(
         matvec=matvec, dot=dot, gram=gram, project_out=project_out,
-        fused_update=fused_update,
+        fused_update=fused_update, fused_iteration=fused_iteration,
     )
 
 

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .jacobi import jacobi_eigh, jacobi_eigh_host, tridiag_to_dense
-from .lanczos import LanczosResult, lanczos_tridiag
+from .lanczos import LanczosResult, lanczos_tridiag, ops_for_operator
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
@@ -152,6 +152,10 @@ def solve_fixed(
     # Operators that stream host data per step (ChunkedOperator) must run the
     # Lanczos loop eagerly: see LinearOperator.prefers_jit / lanczos module doc.
     use_jit = getattr(op, "prefers_jit", True)
+    if ops is None:
+        # Route by the operator's measured iteration plan (fused/unfused/
+        # fully-fused SpMV+alpha) instead of the bare policy gate.
+        ops = ops_for_operator(op, policy)
     lres = lanczos_tridiag(
         op.bound_matvec(policy), v1, m, policy, reorth=reorth, jit=use_jit, ops=ops
     )

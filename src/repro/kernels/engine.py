@@ -37,11 +37,27 @@ JSON cache (``REPRO_SPMV_TUNE_CACHE``).  The static table remains the prior
 and the cold-start fallback, and ``REPRO_SPMV_TILES`` pins tiles outright;
 the decision's provenance ("table" | "tuned" | "override") is surfaced in
 ``partition["spmv"]``.
+
+On top of the per-SpMV tile probes, the tuner resolves a **whole-iteration
+plan** (:class:`IterationPlan`): fused-vs-unfused Lanczos update (and the
+fully-fused SpMV+alpha pass for ELL) x tile shapes x BSR block size, timed
+on a real Lanczos step — SpMV, alpha dot, three-term update, norm — because
+the fastest SpMV tile is not always the fastest *iteration* (the fused
+kernels shift where the memory traffic goes).  The winner persists in the
+same JSON cache (``kind: "iteration"`` entries) and is surfaced as
+``partition["spmv"]["iteration_plan"]``; with tuning off a static table
+keyed on the execution mode decides (interpret mode pays per-grid-step
+interpreter overhead that makes the fused kernels lose, so it defaults to
+unfused; compiled Mosaic defaults to fused).  Every persisted entry carries
+a grid fingerprint (:func:`grid_fingerprint`) hashing the candidate-space
+definition, so autotuner or kernel-grid changes auto-invalidate stale
+entries instead of requiring a manual CI cache-key bump.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import time
@@ -54,15 +70,20 @@ import numpy as np
 
 __all__ = [
     "FORMATS",
+    "ITER_UPDATE_MODES",
     "TileConfig",
+    "IterationPlan",
     "TileTuner",
     "SpmvStats",
     "SpmvEngine",
+    "grid_fingerprint",
     "matrix_stats",
     "shard_stats",
     "choose_format",
     "select_tiles",
     "tuned_tiles",
+    "resolve_iteration_plan",
+    "table_update_mode",
     "get_tuner",
     "tuner_probe_count",
     "make_engine",
@@ -116,6 +137,65 @@ class TileConfig:
     block_r: int = 8
     block_w: int = 128
     block_size: int = DEFAULT_BLOCK_SIZE
+
+
+# How the Lanczos three-term update runs, in increasing fusion order:
+#   unfused    — jnp expressions (XLA fuses what it can; fastest in interpret
+#                mode, where Pallas pays per-grid-step interpreter overhead)
+#   fused      — the lanczos_update kernel (update + norm in one pass)
+#   fused_spmv — spmv_ell_alpha + lanczos_update: the whole iteration in two
+#                passes over the Krylov vectors (ELL only)
+ITER_UPDATE_MODES = ("unfused", "fused", "fused_spmv")
+# BSR block edges the iteration probe re-converts through (the block size
+# changes the *layout*, so picking it needs a measurement, not a re-tile).
+_ITER_BSR_BLOCKS = (4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class IterationPlan:
+    """Measured whole-iteration decision: update mode + tiles (jointly).
+
+    ``tiles.block_size`` carries the BSR block-edge decision (a re-conversion,
+    not a re-tile).  ``source`` is the provenance: "table" (static default for
+    the execution mode), "tuned" (won a measured whole-iteration probe), or
+    "override" (``REPRO_ITER_UPDATE`` pin).
+    """
+
+    update: str = "unfused"
+    tiles: TileConfig = TileConfig()
+    source: str = "table"  # "table" | "tuned" | "override"
+
+    def __post_init__(self):
+        if self.update not in ITER_UPDATE_MODES:
+            raise ValueError(
+                f"unknown update mode {self.update!r}; expected {ITER_UPDATE_MODES}"
+            )
+
+    def as_dict(self) -> dict:
+        return {
+            "update": self.update,
+            "block_r": self.tiles.block_r,
+            "block_w": self.tiles.block_w,
+            "block_size": self.tiles.block_size,
+            "source": self.source,
+        }
+
+
+# Bump when the cache entry layout itself changes (fields, key format).
+_GRID_SCHEMA = 2
+
+
+def grid_fingerprint() -> str:
+    """Hash of the autotuner's candidate-space definition.
+
+    Stamped into every persisted cache entry and checked on load: a change to
+    the tile table, the update-mode space, or the probe grids silently drops
+    stale entries (they re-measure on next use) instead of serving tiles that
+    were never measured against the current kernels.  This replaces the old
+    "bump the CI cache-key suffix by hand" contract.
+    """
+    payload = repr((_GRID_SCHEMA, _TILE_TABLE, ITER_UPDATE_MODES, _ITER_BSR_BLOCKS))
+    return hashlib.blake2b(payload.encode(), digest_size=8).hexdigest()
 
 
 # Static tile table: (max_rows, max_width) upper bounds -> (block_r, block_w).
@@ -192,14 +272,20 @@ class TileTuner:
 
     One entry per (format, dtype, shape-bucket, execution mode) key; the value
     is the fastest :class:`TileConfig` of the measured candidate grid plus the
-    raw per-candidate timings (kept for postmortems).  The JSON survives
-    processes (CI caches it between runs); a missing/corrupt file degrades to
-    an empty cache, never an error.
+    raw per-candidate timings (kept for postmortems).  Whole-iteration plans
+    (:class:`IterationPlan`) live in the same file as ``kind: "iteration"``
+    entries under an ``iter|``-prefixed key.  Every entry is stamped with the
+    current :func:`grid_fingerprint`; entries whose stamp mismatches (or is
+    absent — pre-fingerprint caches) are dropped on load, so a stale cache
+    re-measures instead of serving tiles from a different candidate space.
+    The JSON survives processes (CI caches it between runs); a missing/corrupt
+    file degrades to an empty cache, never an error.
     """
 
     def __init__(self, cache_path: Optional[str] = None):
         self.cache_path = cache_path or DEFAULT_TUNE_CACHE
         self._mem: Dict[str, TileConfig] = {}
+        self._plans: Dict[str, IterationPlan] = {}
         self._meta: Dict[str, dict] = {}
         self._loaded = False
         self.measure_count = 0  # tune passes actually run (tests assert on it)
@@ -208,15 +294,24 @@ class TileTuner:
         if self._loaded:
             return
         self._loaded = True
+        fp = grid_fingerprint()
         try:
             with open(self.cache_path) as f:
                 payload = json.load(f)
             for key, rec in payload.get("entries", {}).items():
-                self._mem[key] = TileConfig(
+                if rec.get("grid") != fp:
+                    continue  # stale candidate space: drop, re-measure on use
+                tiles = TileConfig(
                     block_r=int(rec["block_r"]),
                     block_w=int(rec["block_w"]),
                     block_size=int(rec.get("block_size", DEFAULT_BLOCK_SIZE)),
                 )
+                if rec.get("kind") == "iteration":
+                    self._plans[key] = IterationPlan(
+                        update=str(rec["update"]), tiles=tiles, source="tuned"
+                    )
+                else:
+                    self._mem[key] = tiles
                 self._meta[key] = rec
         except (OSError, ValueError, KeyError, TypeError):
             pass  # absent or corrupt cache = cold start
@@ -225,6 +320,20 @@ class TileTuner:
         self._load()
         return self._mem.get(key)
 
+    def lookup_plan(self, key: str) -> Optional[IterationPlan]:
+        self._load()
+        return self._plans.get(key)
+
+    def _dump(self) -> None:
+        try:
+            os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)), exist_ok=True)
+            tmp = self.cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"version": 2, "entries": self._meta}, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        except OSError:
+            pass  # read-only cache dir: keep the in-process memo only
+
     def record(self, key: str, tiles: TileConfig, timings: Dict[str, float]) -> None:
         self._load()
         self._mem[key] = tiles
@@ -232,17 +341,27 @@ class TileTuner:
             "block_r": tiles.block_r,
             "block_w": tiles.block_w,
             "block_size": tiles.block_size,
+            "grid": grid_fingerprint(),
             "best_us": min(timings.values()) if timings else None,
             "candidates_us": timings,
         }
-        try:
-            os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)), exist_ok=True)
-            tmp = self.cache_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"version": 1, "entries": self._meta}, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.cache_path)
-        except OSError:
-            pass  # read-only cache dir: keep the in-process memo only
+        self._dump()
+
+    def record_plan(self, key: str, plan: IterationPlan, timings: Dict[str, float]) -> None:
+        self._load()
+        plan = dataclasses.replace(plan, source="tuned")
+        self._plans[key] = plan
+        self._meta[key] = {
+            "kind": "iteration",
+            "update": plan.update,
+            "block_r": plan.tiles.block_r,
+            "block_w": plan.tiles.block_w,
+            "block_size": plan.tiles.block_size,
+            "grid": grid_fingerprint(),
+            "best_us": min(timings.values()) if timings else None,
+            "candidates_us": timings,
+        }
+        self._dump()
 
 
 _TUNER: Optional[TileTuner] = None
@@ -406,6 +525,228 @@ def tuned_tiles(
     best = TileConfig(block_r=br, block_w=bw, block_size=block_size)
     tuner.record(key, best, timings)
     return best, "tuned"
+
+
+# --------------------------- whole-iteration tuner ---------------------------
+
+
+def table_update_mode(interpret: bool) -> str:
+    """Static update-mode prior when no measured plan exists.
+
+    Interpret mode (CPU validation) pays ~ms of interpreter overhead per
+    Pallas grid step, so the fused kernels *lose* there — the smoke baseline
+    measured the fused update ~9x slower than XLA's unfused expressions.
+    Compiled Mosaic is the memory-bound regime the fusion targets.
+    """
+    return "unfused" if interpret else "fused"
+
+
+def _iter_candidates(
+    fmt: str, tiles: TileConfig, interpret: bool, tile_variants: bool
+) -> Tuple[Tuple[str, TileConfig], ...]:
+    """(update mode, tiles) candidate space for the whole-iteration probe.
+
+    ELL probes the fully-fused pass and one taller tile variant; BSR probes
+    block edges (a re-conversion decision — the layout changes with the
+    edge); COO/hybrid only choose fused-vs-unfused update (their SpMV is
+    identical across update modes).
+    """
+    if fmt == "bsr":
+        return tuple(
+            (mode, dataclasses.replace(tiles, block_size=bs))
+            for mode in ("unfused", "fused")
+            for bs in _ITER_BSR_BLOCKS
+        )
+    if fmt == "ell":
+        tile_opts = [tiles]
+        if tile_variants:
+            taller = dataclasses.replace(tiles, block_r=tiles.block_r * 2)
+            if taller not in tile_opts:
+                tile_opts.append(taller)
+        return tuple((mode, t) for mode in ITER_UPDATE_MODES for t in tile_opts)
+    return tuple((mode, tiles) for mode in ("unfused", "fused"))
+
+
+def _measure_iteration(
+    n_rows: int,
+    width: int,
+    dtype,
+    fmt: str,
+    candidates: Sequence[Tuple[str, TileConfig]],
+    interpret: bool,
+    reps: int = 3,
+) -> Tuple[Dict[str, float], Dict[str, Tuple[str, TileConfig]]]:
+    """Median wall time (us) of one synthetic Lanczos step per candidate.
+
+    The step is the real per-iteration work — SpMV, alpha dot, three-term
+    update, squared norm — composed from the same kernel entrypoints the
+    solvers run, jitted as one function so the ranking sees what XLA actually
+    schedules.  Shapes are pow2-bucketed and capped exactly like the SpMV
+    probe; the result is a relative ranking, not an absolute projection.
+    """
+    from .lanczos_fused import spmv_ell_alpha_kernel_call
+    from .lanczos_update import lanczos_update_kernel_call
+    from .spmv_bsr import spmv_bsr_kernel_call
+    from .spmv_ell import spmv_ell_kernel_call
+
+    acc = jnp.float32
+    rows_cap = 1 << 12 if interpret else 1 << 16
+    rows = min(max(_next_pow2(n_rows), 8), rows_cap)
+    width = max(8, width)
+    width_cap = 1 << 11
+    if width <= width_cap:
+        width_b = width
+    else:
+        align = 128 if width % 128 == 0 else 8
+        width_b = max(align, (width_cap // align) * align)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(rows), dtype=acc)
+    xp = jnp.asarray(rng.standard_normal(rows), dtype=acc)
+    beta = jnp.asarray(0.25, acc)
+    ublock = min(4096, rows)
+    ell_data = bsr_data = w_synth = None
+    if fmt == "ell":
+        ell_data = (
+            jnp.asarray(rng.standard_normal((rows, width_b)), dtype=dtype),
+            jnp.asarray(rng.integers(0, rows, (rows, width_b)), jnp.int32),
+        )
+    elif fmt == "bsr":
+        bsr_data = {}
+    else:
+        w_synth = jnp.asarray(rng.standard_normal(rows), dtype=acc)
+
+    def _update(w, mode):
+        a = jnp.sum(x * w)
+        if mode == "unfused":
+            u = w - a * x - beta * xp
+            return u, jnp.sum(u * u)
+        return lanczos_update_kernel_call(
+            w, x, xp, a, beta, block=ublock, accum_dtype=acc, interpret=interpret
+        )
+
+    timings: Dict[str, float] = {}
+    by_name: Dict[str, Tuple[str, TileConfig]] = {}
+    for mode, tiles in candidates:
+        if fmt == "ell":
+            # Fit oversized tiles to the probe shape exactly like ell_matvec
+            # adapts at runtime (small problems vs interpret-mode 512-row
+            # tiles); variants collapsing to the same fitted grid dedupe on
+            # the name below.
+            br = _fit_tile(tiles.block_r, rows)
+            bw = _fit_tile(tiles.block_w, width_b)
+            val, col = ell_data
+            if mode == "fused_spmv":
+
+                def step(br=br, bw=bw, val=val, col=col):
+                    w, a = spmv_ell_alpha_kernel_call(
+                        val, col, x, x, block_r=br, block_w=bw,
+                        accum_dtype=acc, interpret=interpret,
+                    )
+                    u, nrm = lanczos_update_kernel_call(
+                        w, x, xp, a, beta, block=ublock,
+                        accum_dtype=acc, interpret=interpret,
+                    )
+                    return u, nrm
+            else:
+
+                def step(br=br, bw=bw, val=val, col=col, mode=mode):
+                    w = spmv_ell_kernel_call(
+                        val, col, x, block_r=br, block_w=bw,
+                        accum_dtype=acc, interpret=interpret,
+                    )
+                    return _update(w, mode)
+
+            name = f"{mode}|{br}x{bw}"
+        elif fmt == "bsr":
+            bs = tiles.block_size
+            if rows % bs:
+                continue
+            if bs not in bsr_data:
+                nbr = rows // bs
+                slots = max(1, min(8, width_b // bs))
+                bsr_data[bs] = (
+                    jnp.asarray(rng.standard_normal((nbr, slots, bs, bs)), dtype=dtype),
+                    jnp.asarray(rng.integers(0, nbr, (nbr, slots)), jnp.int32),
+                )
+            val, bcol = bsr_data[bs]
+
+            def step(val=val, bcol=bcol, mode=mode):
+                w = spmv_bsr_kernel_call(val, bcol, x, accum_dtype=acc, interpret=interpret)
+                return _update(w, mode)
+
+            name = f"{mode}|bs{bs}"
+        else:
+            # COO/hybrid: the SpMV is the same either way, so probe just the
+            # update half the decision actually switches.
+            def step(mode=mode):
+                return _update(w_synth, mode)
+
+            name = f"{mode}|update"
+        if name in by_name:
+            continue  # tile variants that fit to the same probe grid
+        by_name[name] = (mode, tiles)
+        run = jax.jit(step)
+
+        def call():
+            u, nrm = run()
+            u.block_until_ready()
+            return nrm
+
+        call()  # compile/trace outside the timed reps
+        ts = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            call()
+            ts.append(time.perf_counter() - t0)
+        timings[name] = float(np.median(ts) * 1e6)
+    return timings, by_name
+
+
+def resolve_iteration_plan(
+    n_rows: int,
+    width: int,
+    dtype=jnp.float32,
+    format: str = "ell",
+    tiles: TileConfig = TileConfig(),
+    interpret: bool = False,
+    tile_variants: bool = True,
+) -> IterationPlan:
+    """Resolve the whole-iteration plan with provenance.
+
+    Resolution order mirrors :func:`tuned_tiles`: a ``REPRO_ITER_UPDATE`` pin
+    wins outright ("override"); with ``REPRO_SPMV_TUNE=1`` a measured probe
+    over :func:`_iter_candidates` decides and persists ("tuned"); otherwise
+    the static mode table decides ("table").  ``tiles`` is the already-
+    resolved SpMV tile choice — the probe may refine it (ELL tile variants,
+    BSR block edges), and :func:`make_engine` adopts the winner's tiles.
+    """
+    env = os.environ.get("REPRO_ITER_UPDATE", "").strip().lower()
+    if env:
+        if env not in ITER_UPDATE_MODES:
+            raise ValueError(
+                f"REPRO_ITER_UPDATE={env!r}: expected one of {ITER_UPDATE_MODES}"
+            )
+        return IterationPlan(update=env, tiles=tiles, source="override")
+    table = IterationPlan(update=table_update_mode(interpret), tiles=tiles, source="table")
+    if not tune_enabled() or n_rows <= 0 or width <= 0:
+        return table
+    tuner = get_tuner()
+    key = "iter|" + _tune_key(format, dtype, n_rows, width, interpret)
+    hit = tuner.lookup_plan(key)
+    if hit is not None:
+        return hit
+    candidates = _iter_candidates(format, tiles, interpret, tile_variants)
+    budget = int(os.environ.get("REPRO_SPMV_TUNE_BUDGET", "6"))
+    candidates = candidates[: max(2, budget * 2)]
+    timings, by_name = _measure_iteration(n_rows, width, dtype, format, candidates, interpret)
+    tuner.measure_count += 1
+    if not timings:  # no candidate survived shape constraints
+        return table
+    best_name = min(timings, key=timings.get)
+    mode, best_tiles = by_name[best_name]
+    plan = IterationPlan(update=mode, tiles=best_tiles, source="tuned")
+    tuner.record_plan(key, plan, timings)
+    return plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -657,6 +998,9 @@ class SpmvEngine:
     requested: str = "auto"
     stats: Optional[Tuple[SpmvStats, ...]] = None
     tiles_from: str = "table"  # "table" | "tuned" | "override"
+    # Whole-iteration decision (update fusion mode + jointly-picked tiles);
+    # None on hand-built engines — consumers treat that as the static table.
+    iteration_plan: Optional[IterationPlan] = None
 
     def __post_init__(self):
         if self.format not in FORMATS:
@@ -764,6 +1108,9 @@ class SpmvEngine:
             "block_size": self.tiles.block_size,
             "interpret": self.interpret,
             "tiles_from": self.tiles_from,
+            "iteration_plan": (
+                self.iteration_plan.as_dict() if self.iteration_plan is not None else None
+            ),
         }
 
 
@@ -817,18 +1164,19 @@ def make_engine(
 
     interp = _default_interpret() if interpret is None else interpret
     tiles_from = "override"
+    n_rows = max(s.n_rows for s in stats)
+    # Tiles (and autotune probes) must see the width the built layout
+    # will actually have, not the raw row statistic: hybrid runs the ELL
+    # kernel at the capped width (8-slot aligned, to_device_hybrid),
+    # plain ELL pads to the 128-lane tile (to_device_ell/shard_to_ell).
+    if fmt == "hybrid":
+        width = -(-max(1, max(s.hyb_width for s in stats)) // 8) * 8
+    elif fmt == "ell":
+        width = -(-max(1, max(s.max_row_nnz for s in stats)) // 128) * 128
+    else:
+        width = max(s.max_row_nnz for s in stats)
+    explicit_tiles = tiles is not None
     if tiles is None:
-        n_rows = max(s.n_rows for s in stats)
-        # Tiles (and autotune probes) must see the width the built layout
-        # will actually have, not the raw row statistic: hybrid runs the ELL
-        # kernel at the capped width (8-slot aligned, to_device_hybrid),
-        # plain ELL pads to the 128-lane tile (to_device_ell/shard_to_ell).
-        if fmt == "hybrid":
-            width = -(-max(1, max(s.hyb_width for s in stats)) // 8) * 8
-        elif fmt == "ell":
-            width = -(-max(1, max(s.max_row_nnz for s in stats)) // 128) * 128
-        else:
-            width = max(s.max_row_nnz for s in stats)
         # The storage dtype governs the TPU sublane minimum of the value tiles.
         tiles, tiles_from = tuned_tiles(
             n_rows,
@@ -838,6 +1186,28 @@ def make_engine(
             block_size=block_size,
             interpret=interp,
         )
+    # Whole-iteration plan: fused-vs-unfused update (x tiles x BSR block
+    # edge) measured on a composite Lanczos step when tuning is on.  f64
+    # accumulation runs the jnp reference kernels, where no fusion applies.
+    if jnp.dtype(accum_dtype) == jnp.dtype(jnp.float64):
+        plan = IterationPlan(update="unfused", tiles=tiles, source="table")
+    else:
+        plan = resolve_iteration_plan(
+            n_rows,
+            width,
+            dtype=storage_dtype or accum_dtype,
+            format=fmt,
+            tiles=tiles,
+            interpret=interp,
+            # A user-pinned TileConfig is a layout commitment the probe must
+            # not second-guess (the layout may already be converted to it).
+            tile_variants=not explicit_tiles and tiles_from != "override",
+        )
+        if plan.source == "tuned" and not explicit_tiles and tiles_from != "override":
+            # The iteration probe picks update mode and tiles jointly; adopt
+            # its tiles (incl. the BSR block edge — a re-conversion) so the
+            # layout is built for the measured winner.
+            tiles, tiles_from = plan.tiles, "tuned"
     return SpmvEngine(
         format=fmt,
         accum_dtype=accum_dtype,
@@ -846,4 +1216,5 @@ def make_engine(
         requested=requested,
         stats=stats,
         tiles_from=tiles_from,
+        iteration_plan=plan,
     )

@@ -10,12 +10,20 @@ import jax
 import jax.numpy as jnp
 
 from ..sparse.formats import DeviceELL
+from .lanczos_fused import spmv_ell_alpha_kernel_call
 from .lanczos_update import lanczos_update_kernel_call
 from .mixed_dot import mixed_dot_kernel_call
 from .spmv_bsr import blocked_ell_from_csr, spmv_bsr_kernel_call
 from .spmv_ell import spmv_ell_kernel_call
 
-__all__ = ["default_interpret", "spmv_ell", "spmv_bsr", "mixed_dot", "lanczos_update"]
+__all__ = [
+    "default_interpret",
+    "spmv_ell",
+    "spmv_ell_alpha",
+    "spmv_bsr",
+    "mixed_dot",
+    "lanczos_update",
+]
 
 
 def default_interpret() -> bool:
@@ -32,6 +40,26 @@ def spmv_ell(mat: DeviceELL, x: jax.Array, accum_dtype=None, **kw) -> jax.Array:
     kw.setdefault("interpret", default_interpret())
     y = spmv_ell_kernel_call(mat.val, mat.col, x, accum_dtype=acc, **kw)
     return y[: mat.n_rows]
+
+
+def spmv_ell_alpha(mat: DeviceELL, x: jax.Array, v: jax.Array, accum_dtype=None, **kw):
+    """Fused ``w = A @ x`` and ``alpha = <v, w>`` through one Pallas pass.
+
+    ``x`` is the gather source (storage dtype); ``v`` the alpha operand in
+    compute dtype, length ``n_rows`` — padded up to the ELL row padding
+    (padded rows have zero values, so they add nothing to alpha).  Returns
+    ``(w (n_rows,), alpha scalar)`` in accum dtype.  f64 accumulation (CPU
+    validation) falls back to the jnp reference pair.
+    """
+    acc = jnp.dtype(accum_dtype or jnp.float32)
+    if acc == jnp.dtype(jnp.float64):
+        w = mat.matvec(x, accum_dtype=acc)
+        return w, jnp.sum(v.astype(acc) * w)
+    kw.setdefault("interpret", default_interpret())
+    rows = mat.val.shape[0]
+    vpad = jnp.pad(v, (0, rows - v.shape[0])) if v.shape[0] < rows else v
+    w, alpha = spmv_ell_alpha_kernel_call(mat.val, mat.col, x, vpad, accum_dtype=acc, **kw)
+    return w[: mat.n_rows], alpha[0]
 
 
 def spmv_bsr(blocked, x: jax.Array, accum_dtype=None, **kw) -> jax.Array:

@@ -161,15 +161,31 @@ def test_thick_restart_bounded_memory(norm_csr):
 
 
 def test_fused_update_policy_gating():
-    """Non-compensated policies route through the fused Pallas kernel;
-    compensated policies keep the reference reductions for beta."""
+    """Non-compensated policies may route through the fused Pallas kernel;
+    compensated policies keep the reference reductions for beta.  Routing is
+    plan-driven: with no measured plan the static mode table decides (unfused
+    in interpret mode), so the fused record needs an explicit pin here."""
     from repro.core import FCF
     from repro.core.lanczos import fused_update_enabled, make_local_ops
 
     assert fused_update_enabled(FFF) and fused_update_enabled(FDF)
     assert not fused_update_enabled(FCF)
-    assert make_local_ops(lambda x: x, FFF).fused_update is not None
+    assert make_local_ops(lambda x: x, FFF, fused=True).fused_update is not None
+    # The policy gate wins over any pin or plan for compensated policies.
+    assert make_local_ops(lambda x: x, FCF, fused=True).fused_update is None
     assert make_local_ops(lambda x: x, FCF).fused_update is None
+
+
+def test_update_mode_table_default(monkeypatch):
+    """With no plan and no env pins, interpret mode defaults to the unfused
+    update (measured: the Pallas interpreter loses on per-step overhead)."""
+    from repro.core.lanczos import make_local_ops, resolve_update_mode
+
+    monkeypatch.delenv("REPRO_FUSED_LANCZOS", raising=False)
+    monkeypatch.delenv("REPRO_ITER_UPDATE", raising=False)
+    assert resolve_update_mode(FFF.effective()) == "unfused"
+    ops = make_local_ops(lambda x: x, FFF)
+    assert ops.fused_update is None and ops.fused_iteration is None
 
 
 def test_fused_update_kill_switch(monkeypatch):
@@ -186,6 +202,7 @@ def test_fused_lanczos_matches_reference_loop(web_csr, reorth, monkeypatch):
     its fused norm) reproduces the unfused reference loop."""
     from repro.api import eigsh
 
+    monkeypatch.setenv("REPRO_FUSED_LANCZOS", "1")  # force the fused update
     r_fused = eigsh(web_csr, 4, num_iters=12, policy="FFF", reorth=reorth, seed=3)
     monkeypatch.setenv("REPRO_FUSED_LANCZOS", "0")
     r_ref = eigsh(web_csr, 4, num_iters=12, policy="FFF", reorth=reorth, seed=3)
@@ -210,6 +227,7 @@ def test_fused_update_wired_into_loop(monkeypatch):
         return real(*a, **k)
 
     monkeypatch.setattr(kops, "lanczos_update", spy)
+    monkeypatch.setenv("REPRO_FUSED_LANCZOS", "1")  # force-enable: no plan here
     a = np.diag(np.arange(1.0, 17.0))
     mv = lambda x: jnp.asarray(a, x.dtype) @ x  # noqa: E731
     v1 = jnp.ones((16,), jnp.float32)

@@ -521,15 +521,17 @@ def test_autotuner_tunes_caches_and_persists(tune_env):
     e1 = make_engine(csr, "ell")
     tuner = eng_mod.get_tuner()
     assert e1.tiles_from == "tuned"
-    assert tuner.measure_count == 1
+    # two probe passes: SpMV tiles + the whole-iteration plan
+    assert tuner.measure_count == 2
     assert tune_env.exists()
     payload = json.loads(tune_env.read_text())
-    assert payload["version"] == 1 and len(payload["entries"]) == 1
-    (rec,) = payload["entries"].values()
+    assert payload["version"] == 2 and len(payload["entries"]) == 2
+    rec = next(r for r in payload["entries"].values() if r.get("kind") != "iteration")
     assert rec["block_r"] == e1.tiles.block_r and rec["block_w"] == e1.tiles.block_w
+    assert rec["grid"] == eng_mod.grid_fingerprint()
     # same shape bucket: memoized, no second measurement
     e2 = make_engine(csr, "ell")
-    assert tuner.measure_count == 1 and e2.tiles == e1.tiles
+    assert tuner.measure_count == 2 and e2.tiles == e1.tiles
 
 
 def test_autotuner_frozen_cache_is_deterministic(tune_env, monkeypatch):
@@ -540,11 +542,26 @@ def test_autotuner_frozen_cache_is_deterministic(tune_env, monkeypatch):
     import repro.kernels.engine as eng_mod
 
     # width is the *layout* width the engine probes: banded max_row 5 pads
-    # to the 128-lane ELL tile
+    # to the 128-lane ELL tile.  Entries carry the live grid fingerprint —
+    # unstamped or stale entries are (correctly) dropped and re-measured.
     key = eng_mod._tune_key("ell", jnp.float32, 256, 128, interpret=True)
+    fp = eng_mod.grid_fingerprint()
     tune_env.write_text(
         json.dumps(
-            {"version": 1, "entries": {key: {"block_r": 128, "block_w": 1024}}}
+            {
+                "version": 2,
+                "entries": {
+                    key: {"block_r": 128, "block_w": 1024, "grid": fp},
+                    "iter|" + key: {
+                        "kind": "iteration",
+                        "update": "unfused",
+                        "block_r": 128,
+                        "block_w": 1024,
+                        "block_size": 8,
+                        "grid": fp,
+                    },
+                },
+            }
         )
     )
 
@@ -552,9 +569,11 @@ def test_autotuner_frozen_cache_is_deterministic(tune_env, monkeypatch):
         raise AssertionError("a frozen tune cache must not re-measure")
 
     monkeypatch.setattr(eng_mod, "_measure_ell_tiles", _poisoned)
+    monkeypatch.setattr(eng_mod, "_measure_iteration", _poisoned)
     e = make_engine(banded_csr(256), "ell")
     assert e.tiles_from == "tuned"
     assert (e.tiles.block_r, e.tiles.block_w) == (128, 1024)
+    assert e.iteration_plan.update == "unfused" and e.iteration_plan.source == "tuned"
 
 
 def test_autotuner_override_wins(tune_env, monkeypatch):

@@ -1,0 +1,186 @@
+"""Whole-iteration autotuner: plan resolution, cache contract, parity.
+
+The tentpole invariants:
+
+* with probes disabled the static mode table decides (interpret -> unfused);
+* measured plans round-trip through the persisted JSON cache, including the
+  fused/unfused decision and the BSR block-size edge;
+* a frozen (pre-seeded) cache is deterministic — no probe ever runs and the
+  recorded decision is served verbatim;
+* entries stamped by a different candidate space (grid fingerprint) are
+  dropped, not served;
+* routing the live solver through any plan rung preserves the spectrum —
+  fused and unfused updates are bit-identical for uniform policies.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.engine as eng
+from repro.kernels.engine import (
+    ITER_UPDATE_MODES,
+    IterationPlan,
+    TileConfig,
+    grid_fingerprint,
+    resolve_iteration_plan,
+    table_update_mode,
+)
+from repro.sparse import generate
+
+
+@pytest.fixture
+def tuning(monkeypatch, tmp_path):
+    """Isolated tuner: fresh cache file, probes ON, tiny budget, no pins."""
+    cache = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_SPMV_TUNE", "1")
+    monkeypatch.setenv("REPRO_SPMV_TUNE_BUDGET", "3")
+    monkeypatch.setenv("REPRO_SPMV_TUNE_CACHE", str(cache))
+    monkeypatch.delenv("REPRO_ITER_UPDATE", raising=False)
+    monkeypatch.delenv("REPRO_FUSED_LANCZOS", raising=False)
+    monkeypatch.setattr(eng, "_TUNER", None)
+    yield cache
+    monkeypatch.setattr(eng, "_TUNER", None)
+
+
+def _fresh_tuner(monkeypatch):
+    monkeypatch.setattr(eng, "_TUNER", None)
+    return eng.get_tuner()
+
+
+def test_table_fallback_when_probes_disabled(monkeypatch):
+    monkeypatch.setenv("REPRO_SPMV_TUNE", "0")
+    monkeypatch.delenv("REPRO_ITER_UPDATE", raising=False)
+    monkeypatch.setattr(eng, "_TUNER", None)
+    p_int = resolve_iteration_plan(1024, 32, interpret=True)
+    p_tpu = resolve_iteration_plan(1024, 32, interpret=False)
+    assert p_int.source == p_tpu.source == "table"
+    assert p_int.update == table_update_mode(True) == "unfused"
+    assert p_tpu.update == table_update_mode(False) == "fused"
+    assert eng.tuner_probe_count() == 0  # the table never measures
+
+
+def test_env_pin_overrides_everything(tuning, monkeypatch):
+    monkeypatch.setenv("REPRO_ITER_UPDATE", "fused_spmv")
+    plan = resolve_iteration_plan(512, 64, interpret=True)
+    assert plan.update == "fused_spmv" and plan.source == "override"
+    assert eng.tuner_probe_count() == 0  # pins never probe
+    monkeypatch.setenv("REPRO_ITER_UPDATE", "sideways")
+    with pytest.raises(ValueError, match="REPRO_ITER_UPDATE"):
+        resolve_iteration_plan(512, 64, interpret=True)
+
+
+def test_measured_plan_roundtrips_through_cache(tuning, monkeypatch):
+    cache = tuning
+    plan = resolve_iteration_plan(512, 64, format="ell", interpret=True)
+    assert plan.source == "tuned" and plan.update in ITER_UPDATE_MODES
+    assert eng.get_tuner().measure_count == 1
+
+    payload = json.loads(cache.read_text())
+    assert payload["version"] == 2
+    iter_recs = {k: r for k, r in payload["entries"].items() if k.startswith("iter|")}
+    assert iter_recs, "measured plan must persist as an iter| entry"
+    (rec,) = iter_recs.values()
+    assert rec["kind"] == "iteration" and rec["update"] == plan.update
+    assert rec["grid"] == grid_fingerprint()
+    assert rec["candidates_us"], "raw probe timings kept for postmortems"
+
+    # A fresh tuner (next CI run restoring the cache) serves the identical
+    # decision — fused/unfused choice and tiles included — without probing.
+    _fresh_tuner(monkeypatch)
+    again = resolve_iteration_plan(512, 64, format="ell", interpret=True)
+    assert again == plan
+    assert eng.get_tuner().measure_count == 0
+
+
+def test_bsr_block_size_decision_roundtrips(tuning, monkeypatch):
+    plan = resolve_iteration_plan(
+        512, 64, format="bsr", tiles=TileConfig(), interpret=True
+    )
+    assert plan.source == "tuned"
+    assert plan.update in ("unfused", "fused")  # no fused-SpMV pass for BSR
+    assert plan.tiles.block_size in eng._ITER_BSR_BLOCKS
+    _fresh_tuner(monkeypatch)
+    again = resolve_iteration_plan(512, 64, format="bsr", tiles=TileConfig(), interpret=True)
+    assert again == plan and again.tiles.block_size == plan.tiles.block_size
+    assert eng.get_tuner().measure_count == 0
+
+
+def _seed_cache(cache, key, update="fused", grid=None):
+    rec = {
+        "kind": "iteration",
+        "update": update,
+        "block_r": 16,
+        "block_w": 64,
+        "block_size": 8,
+        "grid": grid if grid is not None else grid_fingerprint(),
+        "best_us": 1.0,
+        "candidates_us": {"seeded": 1.0},
+    }
+    cache.write_text(json.dumps({"version": 2, "entries": {key: rec}}))
+
+
+def test_frozen_cache_is_deterministic(tuning, monkeypatch):
+    """A pre-seeded cache entry is served verbatim, repeatedly, with zero
+    probes — CI runs with a restored cache cannot flap on runner noise."""
+    cache = tuning
+    key = "iter|" + eng._tune_key("ell", jnp.float32, 512, 64, True)
+    _seed_cache(cache, key, update="fused")
+    expect = IterationPlan(
+        update="fused", tiles=TileConfig(block_r=16, block_w=64, block_size=8), source="tuned"
+    )
+    for _ in range(3):
+        _fresh_tuner(monkeypatch)
+        assert resolve_iteration_plan(512, 64, format="ell", interpret=True) == expect
+        assert eng.get_tuner().measure_count == 0
+
+
+def test_stale_grid_fingerprint_invalidates(tuning, monkeypatch):
+    """An entry stamped by a different candidate space must be re-measured,
+    never served — the cache self-invalidates on autotuner/grid changes."""
+    cache = tuning
+    key = "iter|" + eng._tune_key("ell", jnp.float32, 512, 64, True)
+    _seed_cache(cache, key, update="fused", grid="0" * 16)
+    _fresh_tuner(monkeypatch)
+    plan = resolve_iteration_plan(512, 64, format="ell", interpret=True)
+    assert plan.source == "tuned"
+    assert eng.get_tuner().measure_count == 1  # probed despite the entry
+    rec = json.loads(cache.read_text())["entries"][key]
+    assert rec["grid"] == grid_fingerprint()  # re-stamped with the live space
+
+
+def test_engine_surfaces_plan_provenance(monkeypatch):
+    monkeypatch.setenv("REPRO_SPMV_TUNE", "0")
+    monkeypatch.delenv("REPRO_ITER_UPDATE", raising=False)
+    csr = generate("web", 256, 4.0, seed=2, values="normalized")
+    e = eng.make_engine(csr, "ell")
+    assert e.iteration_plan is not None
+    desc = e.describe()
+    assert desc["iteration_plan"]["update"] == e.iteration_plan.update
+    assert desc["iteration_plan"]["source"] in ("table", "tuned", "override")
+
+
+# ------------------------------ parity ---------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["fused", "fused_spmv"])
+def test_update_modes_bit_identical_eigenvalues(mode, monkeypatch):
+    """Routing is a pure performance decision: for a uniform policy every
+    plan rung returns the *same bits*.  n is padding-free (512 = multiple of
+    every tile edge) so the fused alpha reduces over exactly the same lanes
+    as the reference dot."""
+    from repro.api import eigsh, session_cache_clear
+
+    csr = generate("web", 512, 6.0, seed=5, values="normalized")
+    monkeypatch.setenv("REPRO_SPMV_TUNE", "0")
+    monkeypatch.delenv("REPRO_FUSED_LANCZOS", raising=False)
+    vals = {}
+    for m in ("unfused", mode):
+        monkeypatch.setenv("REPRO_ITER_UPDATE", m)
+        session_cache_clear()
+        r = eigsh(csr, 4, num_iters=16, policy="FFF", reorth="full", seed=7)
+        vals[m] = np.asarray(r.eigenvalues)
+    session_cache_clear()
+    np.testing.assert_array_equal(vals["unfused"], vals[mode])

@@ -1,0 +1,98 @@
+"""Compile-only Pallas lowering canary (``REPRO_PALLAS_LOWER_CHECK=1``).
+
+Interpret-mode tests exercise kernel *semantics*; this module instead pushes
+every Pallas entrypoint through ``jax.jit(...).lower(...).compile()`` so API
+drift in new jax releases (pallas_call signature, BlockSpec semantics, mosaic
+lowering) surfaces as a compile failure on the latest-stable canary CI legs —
+before anyone bumps the pin.  Nothing here checks numerics and nothing runs
+the kernels; off-TPU the entrypoints are lowered in their interpret
+configuration (exactly what CPU CI executes), on TPU as real mosaic kernels.
+
+Skipped entirely unless ``REPRO_PALLAS_LOWER_CHECK=1`` — lowering each kernel
+is redundant with the semantic suite on the pinned leg and just adds wall
+time there.
+"""
+
+import os
+
+import pytest
+
+if os.environ.get("REPRO_PALLAS_LOWER_CHECK", "").lower() not in ("1", "true", "on"):
+    pytest.skip(
+        "Pallas lowering canary disabled (set REPRO_PALLAS_LOWER_CHECK=1)",
+        allow_module_level=True,
+    )
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lanczos_fused import spmv_ell_alpha_kernel_call
+from repro.kernels.lanczos_update import lanczos_update_kernel_call
+from repro.kernels.mixed_dot import mixed_dot_kernel_call
+from repro.kernels.ops import default_interpret
+from repro.kernels.spmv_bsr import spmv_bsr_kernel_call
+from repro.kernels.spmv_ell import spmv_ell_kernel_call
+
+INTERPRET = default_interpret()
+
+
+def _compile(fn, *args, **static):
+    """Trace, lower and compile the entrypoint; the executable is discarded."""
+    jitted = jax.jit(functools.partial(fn, interpret=INTERPRET, **static))
+    jitted.lower(*args).compile()
+
+
+def test_lower_mixed_dot():
+    a = jnp.ones((4096,), jnp.float32)
+    _compile(mixed_dot_kernel_call, a, a, block=1024, accum_dtype=jnp.float32)
+
+
+def test_lower_mixed_dot_compensated():
+    a = jnp.ones((4096,), jnp.bfloat16)
+    _compile(
+        mixed_dot_kernel_call, a, a, block=1024, accum_dtype=jnp.float32, compensated=True
+    )
+
+
+def test_lower_lanczos_update():
+    w = jnp.ones((4096,), jnp.float32)
+    a = jnp.float32(0.25)
+    _compile(lanczos_update_kernel_call, w, w, w, a, a, block=1024)
+
+
+def test_lower_spmv_ell():
+    val = jnp.ones((64, 128), jnp.float32)
+    col = jnp.zeros((64, 128), jnp.int32)
+    x = jnp.ones((64,), jnp.float32)
+    _compile(spmv_ell_kernel_call, val, col, x, block_r=8, block_w=128)
+
+
+def test_lower_spmv_bsr():
+    bs, nbr, slots = 8, 4, 2
+    val = jnp.ones((nbr, slots, bs, bs), jnp.float32)
+    bcol = jnp.zeros((nbr, slots), jnp.int32)
+    x = jnp.ones((nbr * bs,), jnp.float32)
+    _compile(spmv_bsr_kernel_call, val, bcol, x, accum_dtype=jnp.float32)
+
+
+def test_lower_spmv_ell_alpha():
+    val = jnp.ones((64, 128), jnp.float32)
+    col = jnp.zeros((64, 128), jnp.int32)
+    x = jnp.ones((64,), jnp.float32)
+    v = jnp.ones((64,), jnp.float32)
+    _compile(spmv_ell_alpha_kernel_call, val, col, x, v, block_r=8, block_w=128)
+
+
+def test_lowered_text_mentions_every_kernel():
+    """The lowered module is a real artifact, not a folded constant: its
+    StableHLO must still contain computation (sanity guard against jit
+    constant-folding the whole call away)."""
+    a = jnp.asarray(np.arange(2048, dtype=np.float32))
+    jitted = jax.jit(
+        functools.partial(mixed_dot_kernel_call, block=1024, interpret=INTERPRET)
+    )
+    text = jitted.lower(a, a).as_text()
+    assert "func" in text and len(text) > 100
