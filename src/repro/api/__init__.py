@@ -13,6 +13,7 @@ selection policy, :class:`EigenResult` for the result schema, and
 ``session`` for the prepared-session / batched-serving layer.
 """
 
+from ..core.lanczos import NumericalBreakdown
 from .coerce import CoercedInput, coerce_input, matrix_fingerprint
 from .dispatch import BACKENDS, CHUNKED_NNZ_THRESHOLD, select_backend
 from .frontend import SolverConfig, eigsh, is_auto_policy, resolve_policy
@@ -35,6 +36,7 @@ __all__ = [
     "EigQuery",
     "SolverConfig",
     "EigenResult",
+    "NumericalBreakdown",
     "resolve_policy",
     "is_auto_policy",
     "select_backend",

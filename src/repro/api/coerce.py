@@ -19,6 +19,7 @@ whenever the input provides it.
 from __future__ import annotations
 
 import hashlib
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -73,6 +74,44 @@ def matrix_fingerprint(a) -> Optional[str]:
     return None
 
 
+def _validate_values(data, storage_dtype, what: str) -> None:
+    """Fail fast on inputs no solve can survive: NaN/Inf entries, or a value
+    range the requested storage dtype cannot represent finitely.
+
+    Catching this at ``prepare()``/submit time turns a confusing mid-solve
+    ``NumericalBreakdown`` (or silently-Inf bf16 cast) into a named
+    ``ValueError`` at the call that introduced the bad data.  O(nnz) host
+    scan, paid once per session build — never per solve.
+    ``REPRO_VALIDATE_INPUT=0`` is the kill switch.
+    """
+    if os.environ.get("REPRO_VALIDATE_INPUT", "1").lower() in ("0", "false", "off"):
+        return
+    arr = np.asarray(data)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return
+    finite = np.isfinite(arr)
+    if not finite.all():
+        bad = int(arr.size - np.count_nonzero(finite))
+        raise ValueError(
+            f"input matrix contains {bad} non-finite value(s) in its {what}; "
+            "eigsh requires finite input — mask or clean the data before "
+            "prepare()/submit (set REPRO_VALIDATE_INPUT=0 to bypass)"
+        )
+    try:
+        limit = float(jnp.finfo(storage_dtype).max)
+    except (TypeError, ValueError):
+        return
+    peak = float(np.max(np.abs(arr))) if arr.size else 0.0
+    if peak > limit:
+        raise ValueError(
+            f"input matrix peak magnitude {peak:.3e} overflows the requested "
+            f"storage dtype {jnp.dtype(storage_dtype).name} "
+            f"(finite max {limit:.3e}): this dtype combination is not "
+            "finite-safe — rescale the matrix or pick a wider storage policy "
+            "(set REPRO_VALIDATE_INPUT=0 to bypass)"
+        )
+
+
 def _csr_from_scipy(a) -> CSR:
     m = a.tocsr()
     m.sort_indices()
@@ -112,6 +151,7 @@ def coerce_input(
         return matrix_fingerprint(x) if want_fingerprint else None
 
     if isinstance(a, CSR):
+        _validate_values(a.data, storage_dtype, "CSR data")
         return CoercedInput(operator=None, csr=a, n=a.n, fingerprint=_fp(a))
 
     if isinstance(a, (DeviceCOO, DeviceELL)):
@@ -124,11 +164,13 @@ def coerce_input(
     # stays an optional import.
     if hasattr(a, "tocsr") and hasattr(a, "shape"):
         csr = _csr_from_scipy(a)
+        _validate_values(csr.data, storage_dtype, "sparse data")
         return CoercedInput(operator=None, csr=csr, n=csr.n, fingerprint=_fp(csr))
 
     if isinstance(a, (np.ndarray, jax.Array)):
         if a.ndim != 2 or a.shape[0] != a.shape[1]:
             raise ValueError(f"eigsh needs a square 2-D array, got shape {a.shape}")
+        _validate_values(a, storage_dtype, "entries")
         return CoercedInput(
             operator=DenseOperator(jnp.asarray(a, dtype=storage_dtype)),
             csr=None,

@@ -126,6 +126,19 @@ class SolverConfig:
     stage_depth: int = 1  # chunked backend: chunks prefetched ahead of compute
     jacobi: str = "host"  # phase-2 placement, "host" (paper) or "jax"
     axis: str = "data"  # mesh axis name for the distributed backend
+    # Breakdown handling: "raise" (default — the in-loop health probe turns
+    # NaN/Inf and beta underflow into a typed NumericalBreakdown), "auto"
+    # (probe + escalate: reseed / precision rung up / unfuse / chunked
+    # fallback, trail on EigenResult.recovery_trail), or "none" (legacy:
+    # probes off, garbage flows through).  Per-query override via
+    # eigsh(recovery=...).  Deliberately NOT a _LAYOUT_FIELDS member: it
+    # never changes what a session builds.
+    recovery: Optional[str] = None
+    # Solve checkpointing (restarted + chunked engines): a directory enables
+    # periodic snapshots via serving.store.SolveCheckpoint; interrupted
+    # solves resume from the last completed restart cycle / step block.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 8  # chunked host loop: steps between snapshots
 
 
 def _resolve_reorth(reorth: Optional[str], backend: str) -> str:
@@ -177,6 +190,9 @@ def eigsh(
     jacobi: str = "host",
     mesh=None,
     axis: str = "data",
+    recovery: Optional[str] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
 ) -> EigenResult:
     """Top-K eigenpairs (largest |lambda|) of a symmetric operator.
 
@@ -242,6 +258,17 @@ def eigsh(
         ``backend="auto"`` is an explicit request for the distributed
         backend (the default mesh is all visible devices on one axis named
         ``axis``).
+      recovery: breakdown handling — None/"raise" (default): the health
+        probe raises a typed ``NumericalBreakdown`` instead of returning
+        NaN eigenpairs; "auto": catch and escalate (re-seed on lucky
+        breakdown, one precision rung up on overflow, fused->unfused on
+        kernel errors, single->chunked on device OOM) with the action
+        trail on ``EigenResult.recovery_trail``; "none": legacy behavior,
+        probes off.
+      checkpoint_dir: directory for periodic solve snapshots (restarted +
+        chunked engines); an interrupted run with the same matrix + solve
+        parameters resumes from its last snapshot bit-identically.
+      checkpoint_every: chunked host loop — Lanczos steps between snapshots.
 
     Returns:
       An :class:`EigenResult` with an identical schema on every backend.
@@ -281,6 +308,9 @@ def eigsh(
         stage_depth=stage_depth,
         jacobi=jacobi,
         axis=axis,
+        recovery=recovery,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
     )
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
@@ -293,9 +323,13 @@ def eigsh(
 
     session, _hit = get_session(A, cfg, mesh=mesh, n=n)
     # Per-query fields come from THIS call's config — a cached session may
-    # have been prepared under different solver defaults.
-    return session.eigsh(
-        k,
+    # have been prepared under different solver defaults.  Routed through
+    # eigsh_many(defaults=cfg) so non-query knobs that must bind per call
+    # (recovery, checkpoint_dir) resolve against THIS config too.
+    from .session import EigQuery
+
+    q = EigQuery(
+        k=k,
         policy=cfg.policy,
         tol=cfg.tol,
         num_iters=cfg.num_iters,
@@ -305,4 +339,6 @@ def eigsh(
         subspace=cfg.subspace,
         max_restarts=cfg.max_restarts,
         jacobi=cfg.jacobi,
+        recovery=cfg.recovery,
     )
+    return session.eigsh_many([q], defaults=cfg)[0]

@@ -104,6 +104,14 @@ class EigenResult:
         first; the last entry is the policy this result executed).  None for
         explicit-policy solves.  The chosen per-phase dtype map rides in
         ``partition["spmv"]["precision"]["phase_map"]``.
+      recovery_trail: ``recovery="auto"`` action trail — one dict per
+        recovery action taken before this (successful) attempt:
+        ``{action, error, kind, iteration, from, to, attempt}`` where
+        ``action`` is "reseed" (lucky breakdown → new start vector),
+        "escalate_policy" (overflow → one precision rung up),
+        "unfuse" (kernel lowering/execution error → reference recurrence),
+        or "fallback_chunked" (device OOM → out-of-core engine).  None when
+        the solve succeeded first try or recovery was off.
     """
 
     eigenvalues: jax.Array
@@ -124,6 +132,7 @@ class EigenResult:
     tridiag: Optional[LanczosResult] = None
     session_reuse: bool = False
     policy_escalations: Optional[list] = None
+    recovery_trail: Optional[list] = None
 
     def __iter__(self):
         # scipy.sparse.linalg.eigsh compatibility: ``w, v = eigsh(A, k)``.
@@ -169,6 +178,7 @@ class EigenResult:
             "spmv_format": _jsonify(self.spmv_format),
             "session_reuse": bool(self.session_reuse),
             "policy_escalations": _jsonify(self.policy_escalations),
+            "recovery_trail": _jsonify(self.recovery_trail),
         }
 
     @classmethod
@@ -197,6 +207,7 @@ class EigenResult:
             tridiag=None,
             session_reuse=bool(d.get("session_reuse", False)),
             policy_escalations=d.get("policy_escalations"),
+            recovery_trail=d.get("recovery_trail"),
         )
 
     @property

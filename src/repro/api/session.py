@@ -54,7 +54,7 @@ import numpy as np
 
 from ..core.distributed import PreparedShards, prepare_sharded, solve_sharded
 from ..core.eigensolver import ritz_decompose, ritz_extract, solve_fixed
-from ..core.lanczos import LanczosResult, lanczos_tridiag_multi
+from ..core.lanczos import LanczosResult, NumericalBreakdown, lanczos_tridiag_multi
 from ..core.operators import (
     ChunkedOperator,
     DenseOperator,
@@ -196,6 +196,75 @@ class EigQuery:
     subspace: Any = _UNSET
     max_restarts: Any = _UNSET
     jacobi: Any = _UNSET
+    recovery: Any = _UNSET
+
+
+# recovery="auto" escalation bounds: total attempts (the first solve plus up
+# to five recovery actions) and how many fresh start vectors a lucky
+# breakdown may burn before it is treated as structural and re-raised.
+_MAX_RECOVERY_ATTEMPTS = 6
+_MAX_RESEEDS = 2
+
+
+def _classify_failure(exc) -> Optional[str]:
+    """Map an in-solve exception to a ``recovery="auto"`` action, or None
+    when no documented recovery applies (the error re-raises unchanged).
+
+    Classification is deliberately conservative: only errors whose shape
+    identifies a *transient or escapable* failure mode map to an action —
+    user errors (``ValueError``/``TypeError`` from validation) never retry.
+    """
+    from ..core.lanczos import NumericalBreakdown as _NB
+
+    if isinstance(exc, _NB):
+        # A lucky breakdown (the Krylov space closed early) wants a new
+        # start vector; non-finite recurrence scalars want more headroom.
+        return "reseed" if exc.kind == "beta_underflow" else "escalate_policy"
+    msg = str(exc)
+    if (
+        isinstance(exc, MemoryError)
+        or "RESOURCE_EXHAUSTED" in msg
+        or "out of memory" in msg.lower()
+    ):
+        return "fallback_chunked"
+    mod = type(exc).__module__ or ""
+    looks_kernel = (
+        "lowering" in msg.lower() or "Mosaic" in msg or "pallas" in msg.lower()
+    )
+    from ..testing.faults import InjectedKernelError
+
+    if isinstance(exc, InjectedKernelError):
+        return "unfuse"
+    if looks_kernel and (
+        mod.startswith("jax")
+        or mod.startswith("jaxlib")
+        or isinstance(exc, (RuntimeError, NotImplementedError))
+    ):
+        return "unfuse"
+    return None
+
+
+def _policy_rank(pol: PrecisionPolicy) -> tuple:
+    """Orderable cost/headroom rank of a policy: compute width first (what
+    breakdown escalation buys), then compensation, then storage width —
+    matching :func:`auto_ladder`'s cheapest-first ordering."""
+    p = pol.effective()
+    return (
+        jnp.dtype(p.compute).itemsize,
+        int(bool(p.compensated)),
+        jnp.dtype(p.storage).itemsize,
+    )
+
+
+def _next_rung(pol: PrecisionPolicy) -> Optional[PrecisionPolicy]:
+    """The cheapest :func:`auto_ladder` rung strictly above ``pol`` in
+    compute headroom, or None when ``pol`` already tops the ladder."""
+    cur = _policy_rank(pol)
+    for rung in auto_ladder():
+        cand = resolve_policy(rung).effective()
+        if _policy_rank(cand) > cur:
+            return cand
+    return None
 
 
 def _as_query(q) -> EigQuery:
@@ -214,8 +283,10 @@ def _as_query(q) -> EigQuery:
 def _norm_group_key(q: "_NormQuery") -> tuple:
     """Group-compatibility key of a normalized query: queries sharing it are
     answered by ONE Lanczos sweep (``eigsh_many`` groups by exactly this; the
-    serving scheduler coalesces queued queries by it)."""
-    return (q.backend, q.pkey, q.pol.name, q.reorth, q.jacobi)
+    serving scheduler coalesces queued queries by it).  ``recovery`` joins
+    the key: a recovering sweep may escalate policy / unfuse / reseed, so a
+    ``recovery="none"`` query must never ride along with it."""
+    return (q.backend, q.pkey, q.pol.name, q.reorth, q.jacobi, q.recovery)
 
 
 class _NormQuery(NamedTuple):
@@ -237,6 +308,9 @@ class _NormQuery(NamedTuple):
     v0: Any
     jacobi: str
     start_key: str
+    recovery: str  # "none" | "raise" | "auto"
+    ckpt_dir: Optional[str]  # solve-checkpoint directory (None = off)
+    ckpt_every: int  # chunked host loop: steps between snapshots
 
 
 @dataclasses.dataclass
@@ -338,7 +412,7 @@ class EigenSession:
         self._verify_a = None  # lazy f64 matrix for the auto ladder's verification
         self._build_lock = threading.Lock()
         self._query_lock = threading.RLock()  # queries serialize per session
-        self.stats = {"queries": 0, "sweeps": 0, "cache_hits": 0}
+        self.stats = {"queries": 0, "sweeps": 0, "cache_hits": 0, "recoveries": 0}
         self.prepare_s = time.perf_counter() - t0
         self.prepare_conversions = conversion_count() - conv0
         self.prepare_tuner_probes = tuner_probe_count() - probes0
@@ -538,6 +612,7 @@ class EigenSession:
         subspace=_UNSET,
         max_restarts=_UNSET,
         jacobi=_UNSET,
+        recovery=_UNSET,
     ) -> EigenResult:
         """Solve one query against the prepared plan.  Unset keywords inherit
         the session configuration; see :func:`repro.api.eigsh` for semantics."""
@@ -552,6 +627,7 @@ class EigenSession:
             subspace=subspace,
             max_restarts=max_restarts,
             jacobi=jacobi,
+            recovery=recovery,
         )
         return self.eigsh_many([q])[0]
 
@@ -797,6 +873,11 @@ class EigenSession:
         max_restarts = int(pick(q.max_restarts, cfg.max_restarts))
         if backend == "restarted" and max_restarts < 1:
             raise ValueError(f"max_restarts must be >= 1, got {max_restarts}")
+        recovery = pick(q.recovery, getattr(cfg, "recovery", None)) or "raise"
+        if recovery not in ("none", "raise", "auto"):
+            raise ValueError(
+                f"recovery must be 'none', 'raise', or 'auto'; got {recovery!r}"
+            )
         seed = int(pick(q.seed, cfg.seed))
         if q.v0 is not None:
             h = hashlib.blake2b(np.asarray(q.v0).tobytes(), digest_size=8)
@@ -821,6 +902,9 @@ class EigenSession:
             v0=q.v0,
             jacobi=pick(q.jacobi, cfg.jacobi),
             start_key=start_key,
+            recovery=recovery,
+            ckpt_dir=getattr(cfg, "checkpoint_dir", None),
+            ckpt_every=int(getattr(cfg, "checkpoint_every", 8) or 8),
         )
 
     def _solve_auto(self, rq: EigQuery, cfg: SolverConfig) -> EigenResult:
@@ -916,6 +1000,11 @@ class EigenSession:
         return int(self.n)
 
     def _solve_group(self, group: List[_NormQuery]):
+        if group[0].recovery == "auto":
+            return self._solve_group_recovering(group)
+        return self._solve_group_inner(group)
+
+    def _solve_group_inner(self, group: List[_NormQuery], fused_pin: Optional[bool] = None):
         backend, pol = group[0].backend, group[0].pol
         prep, built = self._ensure(backend, pol)
         if not built:
@@ -927,7 +1016,86 @@ class EigenSession:
             return self._run_restarted(starts, prep, built)
         if backend == "distributed":
             return self._run_distributed(starts, prep, built)
-        return self._run_fixed(starts, prep, built, backend)
+        return self._run_fixed(starts, prep, built, backend, fused_pin=fused_pin)
+
+    def _solve_group_recovering(self, group: List[_NormQuery]):
+        """``recovery="auto"``: run the group, catching in-solve failures and
+        escalating along the documented axes — re-seed the start vector on a
+        lucky breakdown (beta underflow: the Krylov space closed early, a
+        different start almost surely escapes), one precision rung up on
+        overflow/NaN (:func:`auto_ladder` order), fused->unfused on kernel
+        lowering/execution errors, single->chunked on device OOM.  Every
+        action is appended to a trail that rides out on the results as
+        ``recovery_trail``; an unrecoverable (or exhausted) failure re-raises
+        the original error with the trail attached when it is a
+        :class:`NumericalBreakdown`."""
+        trail: List[dict] = []
+        qs = list(group)
+        fused_pin: Optional[bool] = None
+        reseeds = 0
+        last_exc: Optional[BaseException] = None
+        for attempt in range(_MAX_RECOVERY_ATTEMPTS):
+            try:
+                out = self._solve_group_inner(qs, fused_pin=fused_pin)
+            except Exception as exc:
+                last_exc = exc
+                action = _classify_failure(exc)
+                if action is None:
+                    raise self._attach_trail(exc, trail)
+                entry = {
+                    "action": action,
+                    "error": f"{type(exc).__name__}: {exc}",
+                    "attempt": attempt,
+                }
+                if isinstance(exc, NumericalBreakdown):
+                    entry["kind"] = exc.kind
+                    entry["iteration"] = exc.iteration
+                if action == "reseed":
+                    if reseeds >= _MAX_RESEEDS:
+                        raise self._attach_trail(exc, trail)
+                    reseeds += 1
+                    seed2 = qs[0].seed + 1000 + attempt
+                    entry["from"] = qs[0].start_key
+                    entry["to"] = f"seed:{seed2}"
+                    qs = [
+                        q._replace(seed=seed2, v0=None, start_key=f"seed:{seed2}")
+                        for q in qs
+                    ]
+                elif action == "escalate_policy":
+                    nxt = _next_rung(qs[0].pol)
+                    if nxt is None:  # already at the ladder top
+                        raise self._attach_trail(exc, trail)
+                    entry["from"] = qs[0].pol.name
+                    entry["to"] = nxt.name
+                    qs = [q._replace(pol=nxt, pkey=policy_key(nxt)) for q in qs]
+                elif action == "unfuse":
+                    if fused_pin is False or qs[0].backend == "distributed":
+                        raise self._attach_trail(exc, trail)
+                    entry["from"] = "fused"
+                    entry["to"] = "unfused"
+                    fused_pin = False
+                elif action == "fallback_chunked":
+                    if qs[0].backend == "chunked" or self.csr is None:
+                        raise self._attach_trail(exc, trail)
+                    entry["from"] = qs[0].backend
+                    entry["to"] = "chunked"
+                    qs = [q._replace(backend="chunked") for q in qs]
+                trail.append(entry)
+                self.stats["recoveries"] = self.stats.get("recoveries", 0) + 1
+                continue
+            if trail:
+                out = [
+                    (idx, dataclasses.replace(res, recovery_trail=list(trail)))
+                    for idx, res in out
+                ]
+            return out
+        raise self._attach_trail(last_exc, trail)
+
+    @staticmethod
+    def _attach_trail(exc, trail):
+        if isinstance(exc, NumericalBreakdown) and trail:
+            exc.recovery_trail = list(trail)
+        return exc
 
     def _finish(
         self,
@@ -1038,7 +1206,37 @@ class EigenSession:
             "spmv": op.engine.describe() if op.engine is not None else {"format": "coo"},
         }
 
-    def _run_fixed(self, starts, prep: _Prepared, built: bool, backend: str):
+    def _solve_checkpoint(self, q: _NormQuery, pol, backend: str, k: int, m: int):
+        """(store, token) for this sweep's snapshots, or None when solve
+        checkpointing is off.  The token hashes the matrix fingerprint plus
+        every parameter that shapes the trajectory — budget knobs
+        (max_restarts, the chunked loop's snapshot period) stay out so an
+        interrupted run relaunched with a different budget still resumes."""
+        if q.ckpt_dir is None:
+            return None
+        from ..serving.store import SolveCheckpoint
+
+        store = SolveCheckpoint(q.ckpt_dir)
+        token = SolveCheckpoint.token(
+            self.ensure_fingerprint(),
+            backend=backend,
+            policy=pol.name,
+            k=k,
+            m=m,
+            start=q.start_key,
+            tol=q.tol_eff,
+            reorth=q.reorth,
+        )
+        return store, token
+
+    def _run_fixed(
+        self,
+        starts,
+        prep: _Prepared,
+        built: bool,
+        backend: str,
+        fused_pin: Optional[bool] = None,
+    ):
         out = []
         pol = next(iter(starts.values()))[0].pol
         all_qs = [q for qs in starts.values() for q in qs]
@@ -1050,6 +1248,11 @@ class EigenSession:
             k_max = max(q.k for q in qs)
             m = max(q.m for q in qs)
             transfers0 = prep.operator.staging["transfers"] if backend == "chunked" else 0
+            ckpt = None
+            if backend == "chunked":  # only the host loop can snapshot
+                pair = self._solve_checkpoint(qs[0], pol, backend, k_max, m)
+                if pair is not None:
+                    ckpt = (*pair, qs[0].ckpt_every)
             sweep = solve_fixed(
                 prep.operator,
                 k_max,
@@ -1059,7 +1262,9 @@ class EigenSession:
                 v1=qs[0].v0,
                 seed=qs[0].seed,
                 jacobi=jacobi,
-                ops=prep.ops_for(pol),
+                ops=prep.ops_for(pol, fused=fused_pin),
+                probe=qs[0].recovery != "none",
+                checkpoint=ckpt,
             )
             self.stats["sweeps"] += 1
             partition = (
@@ -1193,6 +1398,8 @@ class EigenSession:
                 tol=tol_target,
                 seed=q0.seed,
                 v1=q0.v0,
+                probe=q0.recovery != "none",
+                checkpoint=self._solve_checkpoint(q0, pol, "restarted", k_max, m),
             )
             self.stats["sweeps"] += 1
             for q in qs:
@@ -1234,6 +1441,7 @@ class EigenSession:
                 axis=self.cfg.axis,
                 v1=q0.v0,
                 prepared=prep.shards,
+                probe=q0.recovery != "none",
             )
             self.stats["sweeps"] += 1
             for q in qs:
@@ -1383,6 +1591,9 @@ def prepare(
     stage_depth: int = 1,
     jacobi: str = "host",
     axis: str = "data",
+    recovery: Optional[str] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
 ) -> EigenSession:
     """Plan phase of :func:`repro.api.eigsh`: coerce, place, convert, tune —
     once — and return the :class:`EigenSession` that owns the result.
@@ -1410,6 +1621,9 @@ def prepare(
         stage_depth=stage_depth,
         jacobi=jacobi,
         axis=axis,
+        recovery=recovery,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
     )
     return EigenSession(A, cfg, mesh=mesh, n=n).warmup()
 

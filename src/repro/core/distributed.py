@@ -45,7 +45,14 @@ from ..kernels.engine import SpmvEngine, make_engine, shard_stats
 from ..sparse.formats import CSR, shard_to_blocked_ell, shard_to_ell, shard_to_hybrid
 from .eigensolver import EigResult
 from .jacobi import jacobi_eigh_host, tridiag_to_dense
-from .lanczos import LanczosResult, Ops, _lanczos_loop, resolve_update_mode
+from ..testing import faults as _faults
+from .lanczos import (
+    LanczosResult,
+    Ops,
+    _lanczos_loop,
+    check_tridiag_health,
+    resolve_update_mode,
+)
 from .partition import PartitionedMatrix, nnz_balanced_splits, partition_matrix
 from .precision import PrecisionPolicy, FDF, compensated_sum
 
@@ -196,6 +203,7 @@ def sharded_lanczos(
     (default: the COO triplets of ``pm`` — the legacy segment-sum path).
     """
     policy = policy.effective()
+    _faults.check_sweep_entry()
     if mats is None:
         mats = (pm.row, pm.col, pm.val)
 
@@ -214,6 +222,9 @@ def sharded_lanczos(
         **_SHARD_MAP_KW,
     )
     alpha, beta, beta_last, basis_sh = jax.jit(fn)(v1_padded, *mats)
+    # The wrapper re-traces per call (fresh jit object), so an armed Lanczos
+    # fault is baked into this launch; count it host-side (see faults docs).
+    _faults.consume_lanczos(_faults.trace_key())
     return LanczosResult(alpha=alpha, beta=beta, basis=basis_sh, beta_last=beta_last)
 
 
@@ -338,6 +349,7 @@ def solve_sharded(
     spmv_format: str = "auto",
     engine: Optional[SpmvEngine] = None,
     prepared: Optional[PreparedShards] = None,
+    probe: bool = True,
 ) -> ShardedSolveOutput:
     """End-to-end distributed Top-K eigensolver on a 1-axis mesh.
 
@@ -372,6 +384,8 @@ def solve_sharded(
         pm, v1p, m, policy, mesh, reorth=reorth, axis=axis, engine=engine, mats=mats
     )
     lres = jax.tree.map(lambda a: a.block_until_ready(), lres)  # timings = execution, not dispatch
+    if probe:
+        check_tridiag_health(lres, policy)
     t_lanczos = time.perf_counter() - t0
     t1 = time.perf_counter()
     alpha = np.asarray(lres.alpha, dtype=np.float64)

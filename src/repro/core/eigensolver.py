@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .jacobi import jacobi_eigh, jacobi_eigh_host, tridiag_to_dense
-from .lanczos import LanczosResult, lanczos_tridiag, ops_for_operator
+from .lanczos import LanczosResult, check_tridiag_health, lanczos_tridiag, ops_for_operator
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
@@ -126,6 +126,8 @@ def solve_fixed(
     seed: int = 0,
     jacobi: str = "host",
     ops=None,
+    probe: bool = True,
+    checkpoint=None,
 ) -> FixedSolveOutput:
     """Compute the K eigenpairs of largest |lambda| of a symmetric operator.
 
@@ -157,9 +159,14 @@ def solve_fixed(
         # fully-fused SpMV+alpha) instead of the bare policy gate.
         ops = ops_for_operator(op, policy)
     lres = lanczos_tridiag(
-        op.bound_matvec(policy), v1, m, policy, reorth=reorth, jit=use_jit, ops=ops
+        op.bound_matvec(policy), v1, m, policy, reorth=reorth, jit=use_jit, ops=ops,
+        checkpoint=checkpoint if not use_jit else None,
     )
     lres = jax.tree.map(lambda x: x.block_until_ready(), lres)
+    if probe:
+        # Health probe on the already-materialized tridiagonal scalars: a
+        # typed NumericalBreakdown beats NaN eigenvalues (see lanczos module).
+        check_tridiag_health(lres, policy)
     t_lanczos = time.perf_counter() - t0
 
     # Phase 2 — Jacobi on the K x K tridiagonal matrix.

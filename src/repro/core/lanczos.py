@@ -54,10 +54,13 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..testing import faults as _faults
 from .precision import PrecisionPolicy, compensated_sum
 
 __all__ = [
     "LanczosResult",
+    "NumericalBreakdown",
+    "check_tridiag_health",
     "lanczos_tridiag",
     "lanczos_tridiag_multi",
     "make_local_ops",
@@ -66,6 +69,79 @@ __all__ = [
     "resolve_update_mode",
     "Ops",
 ]
+
+
+class NumericalBreakdown(ArithmeticError):
+    """The Lanczos recurrence produced values no downstream phase can use.
+
+    ``kind`` is the breakdown taxonomy the recovery layer dispatches on:
+
+    * ``"nonfinite"`` — NaN/Inf in alpha, beta, or the residual norm; the
+      shape of low-precision overflow (bf16/fp8 rungs) or a poisoned SpMV.
+      Recovery re-runs one precision rung up the ladder.
+    * ``"beta_underflow"`` — beta collapsed to ~0 *before* the final step:
+      the classical "lucky breakdown" (the start vector hit an invariant
+      subspace too early).  Recovery re-seeds the start vector.
+
+    ``iteration`` is the first offending step, ``policy`` the precision
+    policy name the sweep ran under.
+    """
+
+    def __init__(self, kind: str, iteration: int, policy: Optional[str] = None, detail: str = ""):
+        self.kind = kind
+        self.iteration = iteration
+        self.policy = policy
+        self.recovery_trail: Optional[list] = None  # stamped when recovery gives up
+        msg = f"Lanczos breakdown: {kind} at iteration {iteration}"
+        if policy:
+            msg += f" under policy {policy}"
+        if detail:
+            msg += f" ({detail})"
+        super().__init__(msg)
+
+
+def check_tridiag_health(result: "LanczosResult", policy: PrecisionPolicy) -> None:
+    """Post-sweep health probe: raise :class:`NumericalBreakdown` instead of
+    letting garbage flow into the Ritz phase.
+
+    Cost is O(m) host work on the already-materialized tridiagonal scalars
+    (the (m, n) basis is never touched), so it is ~free next to the sweep.
+    ``beta_last`` is checked for non-finiteness only: a *small* final
+    residual norm means the subspace converged, which is success, not
+    breakdown.  Multi-start (vmapped) results are checked flattened.
+    """
+    import numpy as np
+
+    pol = getattr(policy, "name", None) or str(policy)
+    alpha = np.asarray(result.alpha, dtype=np.float64).reshape(-1)
+    beta = np.asarray(result.beta, dtype=np.float64).reshape(-1)
+    m = result.alpha.shape[-1]
+    tiny = float(jnp.finfo(policy.effective().compute).tiny) * 1e3
+    # A breakdown cascades (beta ~ 0 at step i makes alpha at step i+1
+    # non-finite), so find the EARLIEST offending step across all checks —
+    # that is the one whose kind the recovery layer must dispatch on.
+    found = []  # (iteration, priority, kind, detail)
+    bad = ~np.isfinite(alpha)
+    if bad.any():
+        j = int(np.argmax(bad))
+        found.append((j % m, 0, "nonfinite", f"alpha[{j % m}]={alpha[j]!r}"))
+    bad = ~np.isfinite(beta)
+    if bad.any():
+        j = int(np.argmax(bad))
+        found.append((j % max(m - 1, 1), 0, "nonfinite", f"beta[{j % max(m - 1, 1)}]={beta[j]!r}"))
+    if result.beta_last is not None:
+        bl = np.asarray(result.beta_last, dtype=np.float64).reshape(-1)
+        if not np.isfinite(bl).all():
+            found.append((m - 1, 0, "nonfinite", "beta_last"))
+    small = beta <= tiny
+    if small.any():
+        j = int(np.argmax(small))
+        found.append(
+            (j % max(m - 1, 1), 1, "beta_underflow", f"beta={beta[j]:.3e} <= {tiny:.3e}")
+        )
+    if found:
+        i, _, kind, detail = min(found)
+        raise NumericalBreakdown(kind, i, pol, detail)
 
 
 class LanczosResult(NamedTuple):
@@ -292,8 +368,11 @@ def _reorth_mask(m: int, i: jax.Array, mode: str, dtype) -> jax.Array:
     raise ValueError(f"unknown reorth mode {mode!r}")
 
 
-@partial(jax.jit, static_argnames=("ops", "num_iters", "policy", "reorth"))
-def _lanczos_jit(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str):
+@partial(jax.jit, static_argnames=("ops", "num_iters", "policy", "reorth", "fault_key"))
+def _lanczos_jit(v1, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str, fault_key=None):
+    # fault_key is unused in the computation: it exists so an armed fault
+    # (read at trace time inside the loop body) retraces under its own cache
+    # key and the poisoned executable never shadows the clean one.
     return _lanczos_loop(v1, ops, num_iters, policy, reorth)
 
 
@@ -304,6 +383,7 @@ def _lanczos_loop(
     policy: PrecisionPolicy,
     reorth: str,
     host_loop: bool = False,
+    checkpoint=None,
 ):
     m = num_iters
     n = v1.shape[0]
@@ -329,12 +409,14 @@ def _lanczos_loop(
             u, alpha, fused_nrm = ops.fused_iteration(
                 v, v_prev, beta_prev, need_norm=(reorth == "none")
             )
+            u = _faults.tap_spmv(u, i)
             alphas = alphas.at[i].set(alpha)
             if reorth == "none":
                 nrm_sq = fused_nrm
         else:
             # --- projection (line 9): SpMV in compute precision ---
             u = ops.matvec(v.astype(sdt)).astype(cdt)
+            u = _faults.tap_spmv(u, i)
             # --- alpha (line 10): sync point A ---
             alpha = ops.dot(v, u)
             alphas = alphas.at[i].set(alpha)
@@ -363,6 +445,7 @@ def _lanczos_loop(
             beta = jnp.sqrt(jnp.maximum(nrm_sq.astype(cdt), 0.0))
         else:
             beta = jnp.sqrt(jnp.maximum(ops.dot(u, u), 0.0))
+        beta = _faults.tap_beta(beta, i)
         betas = betas.at[i].set(beta)
         return (basis, alphas, betas, v, u, beta)
 
@@ -373,8 +456,46 @@ def _lanczos_loop(
         # device; tracing it would bake every chunk into one executable and
         # defeat the bounded-residency staging).
         carry = init
-        for i in range(m):
+        start = 0
+        if checkpoint is not None:
+            store, token, every = checkpoint
+            state = store.load(token)
+            if (
+                state is not None
+                and state.get("engine") == "lanczos"
+                and int(state.get("n", -1)) == n
+                and int(state.get("m", -1)) == m
+            ):
+                carry = (
+                    jnp.asarray(state["basis"], sdt),
+                    jnp.asarray(state["alphas"], cdt),
+                    jnp.asarray(state["betas"], cdt),
+                    jnp.asarray(state["v_prev"], cdt),
+                    jnp.asarray(state["w"], cdt),
+                    jnp.asarray(state["beta_prev"], cdt),
+                )
+                start = int(state["i"]) + 1
+        for i in range(start, m):
             carry = body(i, carry)
+            if checkpoint is not None and (i + 1) % every == 0 and i + 1 < m:
+                basis_c, alphas_c, betas_c, v_prev_c, w_c, beta_prev_c = carry
+                store.save(
+                    token,
+                    {
+                        "engine": "lanczos",
+                        "i": i,
+                        "n": n,
+                        "m": m,
+                        "basis": basis_c,
+                        "alphas": alphas_c,
+                        "betas": betas_c,
+                        "v_prev": v_prev_c,
+                        "w": w_c,
+                        "beta_prev": beta_prev_c,
+                    },
+                )
+        if checkpoint is not None:
+            store.clear(token)
         basis, alphas, betas = carry[:3]
     else:
         basis, alphas, betas, _, _, _ = jax.lax.fori_loop(0, m, body, init)
@@ -391,22 +512,31 @@ def lanczos_tridiag(
     reorth: str = "half",
     ops: Optional[Ops] = None,
     jit: bool = True,
+    checkpoint=None,
 ) -> LanczosResult:
     """Run ``num_iters`` Lanczos steps. See module docstring.
 
     ``jit=False`` runs an eager host loop (no ``fori_loop``), letting the
     matvec perform host-side work per iteration — the out-of-core engine's
-    mode (see :class:`~repro.core.operators.ChunkedOperator`).
+    mode (see :class:`~repro.core.operators.ChunkedOperator`).  Only that
+    host loop honors ``checkpoint`` — a ``(store, token, every)`` triple
+    (see :class:`~repro.serving.store.SolveCheckpoint`) snapshotting the
+    loop carry every ``every`` completed steps and resuming from the last
+    snapshot bit-identically.
     """
     policy = policy.effective()
+    _faults.check_sweep_entry()
     ops = ops or make_local_ops(matvec, policy)
     if jit:
-        return _lanczos_jit(v1, ops, num_iters, policy, reorth)
-    return _lanczos_loop(v1, ops, num_iters, policy, reorth, host_loop=True)
+        fault_key = _faults.trace_key()
+        res = _lanczos_jit(v1, ops, num_iters, policy, reorth, fault_key=fault_key)
+        _faults.consume_lanczos(fault_key)
+        return res
+    return _lanczos_loop(v1, ops, num_iters, policy, reorth, host_loop=True, checkpoint=checkpoint)
 
 
-@partial(jax.jit, static_argnames=("ops", "num_iters", "policy", "reorth"))
-def _lanczos_vmap(v1s, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str):
+@partial(jax.jit, static_argnames=("ops", "num_iters", "policy", "reorth", "fault_key"))
+def _lanczos_vmap(v1s, ops: Ops, num_iters: int, policy: PrecisionPolicy, reorth: str, fault_key=None):
     return jax.vmap(lambda v: _lanczos_loop(v, ops, num_iters, policy, reorth))(v1s)
 
 
@@ -427,5 +557,9 @@ def lanczos_tridiag_multi(
     vmappability of the *matvec* (dense / COO segment-sum are safe).
     """
     policy = policy.effective()
+    _faults.check_sweep_entry()
     ops = ops or make_local_ops(matvec, policy, fused=False)
-    return _lanczos_vmap(v1s, ops, num_iters, policy, reorth)
+    fault_key = _faults.trace_key()
+    res = _lanczos_vmap(v1s, ops, num_iters, policy, reorth, fault_key=fault_key)
+    _faults.consume_lanczos(fault_key)
+    return res

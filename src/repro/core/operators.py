@@ -35,6 +35,7 @@ from ..sparse.formats import (
     to_device_ell,
     to_device_hybrid,
 )
+from ..testing import faults as _faults
 from .precision import PrecisionPolicy
 
 __all__ = [
@@ -282,6 +283,7 @@ class ChunkedOperator(LinearOperator):
 
         def stage(j):
             if j < self.num_chunks and j not in staged:
+                _faults.check_chunk_io(j)
                 staged[j] = tuple(jax.device_put(a) for a in self._chunks[j])
                 self.staging["transfers"] += 1
 

@@ -36,9 +36,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..testing import faults as _faults
 from .eigensolver import EigResult
 from .jacobi import jacobi_eigh_host
-from .lanczos import LanczosResult
+from .lanczos import LanczosResult, NumericalBreakdown
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
@@ -67,9 +68,24 @@ def solve_restarted(
     tol: float = 1e-8,
     seed: int = 0,
     v1: Optional[jax.Array] = None,
+    probe: bool = True,
+    checkpoint=None,
 ) -> RestartedSolveOutput:
     """Top-k eigenpairs by |lambda| with restarts until the Ritz residual
-    bound satisfies ``tol`` (relative) for every pair."""
+    bound satisfies ``tol`` (relative) for every pair.
+
+    ``probe`` enables the in-loop health check: alpha/beta are already
+    Python floats here, so non-finite values and beta underflow raise a
+    typed :class:`NumericalBreakdown` at the offending step for free.
+
+    ``checkpoint`` is a ``(store, token)`` pair (see
+    :class:`~repro.serving.store.SolveCheckpoint`): the full restart state
+    (basis block, projected matrix, arrow border, next start vector,
+    counters) is snapshotted after every completed compression, and a rerun
+    with the same token resumes from the last completed cycle bit-identically
+    — each cycle's fill loop depends only on that state, never on the
+    original ``v1``.
+    """
     policy = policy.effective()
     cdt, sdt = policy.compute, policy.storage
     abdt = policy.phase_dtype("alpha_beta")  # alpha/beta reduction phase
@@ -107,15 +123,41 @@ def solve_restarted(
     steps = 0
     restarts = 0
     resid = np.zeros(k)
+    breakdown_tiny = float(jnp.finfo(cdt).tiny) * 1e3
+    pol_name = getattr(policy, "name", None) or str(policy)
 
-    for cycle in range(max_restarts):
+    start_cycle = 0
+    if checkpoint is not None:
+        store, token = checkpoint
+        state = store.load(token)
+        if (
+            state is not None
+            and state.get("engine") == "restarted"
+            and int(state.get("n", -1)) == n
+            and int(state.get("m", -1)) == m
+            and int(state.get("k", -1)) == k
+        ):
+            basis = jnp.asarray(state["basis"], sdt)
+            t_hat = np.asarray(state["t_hat"], np.float64)
+            s_border = np.asarray(state["s_border"], np.float64)
+            v = jnp.asarray(state["v"], cdt)
+            nkeep = int(state["nkeep"])
+            steps = int(state["steps"])
+            restarts = int(state["restarts"])
+            start_cycle = int(state["cycle"]) + 1
+
+    for cycle in range(start_cycle, max_restarts):
+        _faults.check_solve_crash(cycle)
         # --- fill rows nkeep..m-1 with (re-orthogonalized) Lanczos steps ---
         beta_prev = 0.0
         v_prev = jnp.zeros((n,), cdt)
         for i in range(nkeep, m):
             basis = basis.at[i].set(v.astype(sdt))
             u = mv(v.astype(sdt)).astype(cdt)
+            u = _faults.tap_spmv(u, i)
             alpha = float(_dot(v, u))
+            if probe and not np.isfinite(alpha):
+                raise NumericalBreakdown("nonfinite", i, pol_name, f"alpha={alpha!r}")
             t_hat[i, i] = alpha
             u = u - alpha * v - beta_prev * v_prev
             if i == nkeep and nkeep > 0:
@@ -127,6 +169,15 @@ def solve_restarted(
             mask = (jnp.arange(m) <= i).astype(cdt)
             u = _orth(u, basis, mask)
             beta = float(jnp.sqrt(jnp.maximum(_dot(u, u), 0.0)))
+            beta = float(_faults.tap_beta(beta, i))
+            if probe:
+                if not np.isfinite(beta):
+                    raise NumericalBreakdown("nonfinite", i, pol_name, f"beta={beta!r}")
+                if beta <= breakdown_tiny and i < m - 1:
+                    raise NumericalBreakdown(
+                        "beta_underflow", i, pol_name,
+                        f"beta={beta:.3e} <= {breakdown_tiny:.3e}",
+                    )
             if i < m - 1:
                 t_hat[i, i + 1] = beta
                 t_hat[i + 1, i] = beta
@@ -159,6 +210,29 @@ def solve_restarted(
         nkeep = k
         # v (the next Lanczos vector) already holds the residual direction
 
+        if checkpoint is not None:
+            store, token = checkpoint
+            store.save(
+                token,
+                {
+                    "engine": "restarted",
+                    "cycle": cycle,
+                    "n": n,
+                    "m": m,
+                    "k": k,
+                    "nkeep": nkeep,
+                    "steps": steps,
+                    "restarts": restarts,
+                    "basis": basis,
+                    "t_hat": t_hat,
+                    "s_border": s_border,
+                    "v": v,
+                },
+            )
+
+    if checkpoint is not None:
+        store, token = checkpoint
+        store.clear(token)  # completed: the snapshot must not resurrect
     evals_k = jnp.asarray(evals[:k], dtype=policy.output)
     wk = jnp.asarray(w[:, :k], dtype=rzdt)
     x = (basis.astype(rzdt).T @ wk).astype(policy.output)

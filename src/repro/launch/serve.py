@@ -11,12 +11,22 @@ via a temp dir) it then simulates a server restart: a second scheduler
 warms every matrix from the store and the conversion counter is asserted
 not to move — the zero-conversion warm-start contract, verified live.
 
+``--kill-resume`` is the crash drill: run the smoke as a subprocess,
+SIGTERM it mid-burst, assert it shuts down bounded (the scheduler's close
+path fails pending futures typed — no submitter thread can hang), then
+restart against the same store and assert the warm-resume contract still
+holds.  SIGTERM itself is handled as a graceful ``SystemExit`` so the
+scheduler context manager unwinds instead of the process dying mid-future.
+
 (The old LM decode driver moved with its engine: ``repro.serving.lm``.)
 """
 
 from __future__ import annotations
 
 import argparse
+import signal
+import subprocess
+import sys
 import tempfile
 import threading
 import time
@@ -70,6 +80,60 @@ def _run_stream(sched, keys, args):
     return wall, errors
 
 
+def _install_sigterm_handler() -> None:
+    """Turn SIGTERM into a graceful ``SystemExit(143)``: the scheduler's
+    context manager then runs ``close()`` — in-flight work finishes, queued
+    futures fail typed — so no submitter thread is ever stranded on a future
+    that cannot resolve.  Main thread only (signal API requirement)."""
+    if threading.current_thread() is not threading.main_thread():
+        return
+
+    def _graceful(signum, frame):
+        raise SystemExit(143)
+
+    signal.signal(signal.SIGTERM, _graceful)
+
+
+def _kill_resume(args) -> int:
+    """The crash drill: smoke-run a child server, SIGTERM it mid-burst,
+    assert the shutdown is bounded, then restart on the same store and
+    assert the warm-resume contract (see module docstring)."""
+    store_dir = args.store or tempfile.mkdtemp(prefix="repro-serving-")
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--smoke", "--store", store_dir]
+    child = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+    )
+    resident = False
+    assert child.stdout is not None
+    for line in child.stdout:
+        print(f"[child] {line}", end="")
+        if line.startswith("resident:"):
+            resident = True
+            break
+    if not resident:
+        child.kill()
+        child.wait()
+        print("FAIL: child exited before its matrices became resident")
+        return 1
+    time.sleep(1.0)  # land the SIGTERM inside the query burst
+    child.send_signal(signal.SIGTERM)
+    try:
+        out, _ = child.communicate(timeout=60.0)
+    except subprocess.TimeoutExpired:
+        child.kill()
+        print("FAIL: child hung after SIGTERM — stranded queries in shutdown")
+        return 1
+    for line in out.splitlines():
+        print(f"[child] {line}")
+    print(f"kill-resume: child exited rc={child.returncode} within bound after SIGTERM")
+    rc = main(["--smoke", "--store", store_dir])
+    if rc != 0:
+        print("FAIL: restart after SIGTERM did not warm-resume")
+        return 1
+    print("kill-resume: warm resume after SIGTERM verified")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true", help="small sizes, temp store, fast")
@@ -81,7 +145,16 @@ def main(argv=None) -> int:
     ap.add_argument("--window-ms", type=float, default=20.0, help="admission window")
     ap.add_argument("--max-group", type=int, default=16)
     ap.add_argument("--store", default=None, help="session store dir (persists warm state)")
+    ap.add_argument(
+        "--kill-resume",
+        action="store_true",
+        help="crash drill: SIGTERM a child smoke run mid-burst, then assert "
+        "bounded shutdown + warm resume from the same store",
+    )
     args = ap.parse_args(argv)
+    _install_sigterm_handler()
+    if args.kill_resume:
+        return _kill_resume(args)
     if args.smoke:
         args.n = min(args.n, 1024)
         args.matrices = min(args.matrices, 2)

@@ -23,17 +23,26 @@ from .scheduler import (
     QueryHandle,
     QueueFullError,
     SchedulerConfig,
+    SchedulerCrashedError,
     ServingError,
+    SessionUnhealthyError,
     UnknownMatrixError,
 )
-from .store import SessionStore, default_store_root
+from .store import (
+    SessionStore,
+    SolveCheckpoint,
+    default_checkpoint_root,
+    default_store_root,
+)
 
 __all__ = [
     "EigenScheduler",
     "SchedulerConfig",
     "QueryHandle",
     "SessionStore",
+    "SolveCheckpoint",
     "default_store_root",
+    "default_checkpoint_root",
     "ServingMetrics",
     "ServerStats",
     "LatencyHistogram",
@@ -42,6 +51,8 @@ __all__ = [
     "DeadlineExceededError",
     "QueryCancelledError",
     "UnknownMatrixError",
+    "SessionUnhealthyError",
+    "SchedulerCrashedError",
 ]
 
 _LEGACY = ("Engine", "ServeConfig")

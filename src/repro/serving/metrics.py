@@ -111,6 +111,14 @@ class ServerStats:
         with at least one other query (0.0 = everything solo).
       warm_starts / cold_builds: sessions restored from the persistent store
         (zero conversions) vs built from scratch.
+      retries: dispatch attempts re-queued after a retryable solve failure
+        (each retry is one increment — a request retried twice counts 2).
+      rejected_breaker: submissions refused because the matrix's circuit
+        breaker was open (``SessionUnhealthyError``).
+      breaker_trips: times a per-matrix breaker transitioned to open.
+      watchdog_trips: dispatch-thread deaths detected by the watchdog.
+      dispatch_errors: exceptions that escaped a dispatch and were contained
+        by the loop guard (each one failed its group typed, not the thread).
       latency: per-phase histogram summaries (``queue`` / ``solve`` /
         ``e2e``), each with count / mean_s / p50_s / p99_s / max_s.
     """
@@ -128,6 +136,11 @@ class ServerStats:
     coalesce_rate: float
     warm_starts: int
     cold_builds: int
+    retries: int
+    rejected_breaker: int
+    breaker_trips: int
+    watchdog_trips: int
+    dispatch_errors: int
     latency: Dict[str, Dict[str, float]]
 
     @property
@@ -149,6 +162,9 @@ class ServerStats:
             f"cancelled {self.cancelled}; failed {self.failed}\n"
             f"  sessions: {self.sessions} resident "
             f"({self.warm_starts} warm-started, {self.cold_builds} cold-built)\n"
+            f"  recovery: {self.retries} retries, {self.rejected_breaker} breaker-rejected "
+            f"({self.breaker_trips} trips), {self.dispatch_errors} dispatch errors, "
+            f"{self.watchdog_trips} watchdog trips\n"
             f"  latency e2e p50 {e2e.get('p50_s', 0.0) * 1e3:.2f}ms "
             f"p99 {e2e.get('p99_s', 0.0) * 1e3:.2f}ms; "
             f"queue p50 {q.get('p50_s', 0.0) * 1e3:.2f}ms p99 {q.get('p99_s', 0.0) * 1e3:.2f}ms"
@@ -171,6 +187,11 @@ class ServingMetrics:
         self.coalesced_queries = 0  # completed queries that shared a sweep
         self.warm_starts = 0
         self.cold_builds = 0
+        self.retries = 0
+        self.rejected_breaker = 0
+        self.breaker_trips = 0
+        self.watchdog_trips = 0
+        self.dispatch_errors = 0
         self.queue_wait = LatencyHistogram()
         self.solve = LatencyHistogram()
         self.e2e = LatencyHistogram()
@@ -209,6 +230,11 @@ class ServingMetrics:
                 coalesce_rate=coalesce_rate,
                 warm_starts=self.warm_starts,
                 cold_builds=self.cold_builds,
+                retries=self.retries,
+                rejected_breaker=self.rejected_breaker,
+                breaker_trips=self.breaker_trips,
+                watchdog_trips=self.watchdog_trips,
+                dispatch_errors=self.dispatch_errors,
                 latency={
                     "queue": self.queue_wait.snapshot(),
                     "solve": self.solve.snapshot(),

@@ -30,19 +30,29 @@ that layer:
   persists cold-built sessions for the next process.
 * **Metrics**: queue depth, batch occupancy, coalesce rate, warm-start
   counters, and p50/p99 latency histograms via :meth:`EigenScheduler.stats`.
+* **Fault tolerance**: per-request retry budgets (exponential backoff +
+  jitter, transient solve failures only), a per-matrix circuit breaker
+  (N consecutive dispatch failures open it — submissions fail fast with
+  :class:`SessionUnhealthyError` until a cooldown probe closes it again),
+  a dispatch-loop guard that contains any per-group exception (failing the
+  group typed, never the thread), and a watchdog thread that detects
+  dispatch-thread death and fails every stranded request with
+  :class:`SchedulerCrashedError` instead of hanging its futures forever.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 from ..api.frontend import SolverConfig
 from ..api.result import EigenResult, with_queue_time
 from ..api.session import EigenSession, _as_query
+from ..testing import faults as _faults
 from .metrics import ServerStats, ServingMetrics
 from .store import SessionStore
 
@@ -55,6 +65,8 @@ __all__ = [
     "DeadlineExceededError",
     "QueryCancelledError",
     "UnknownMatrixError",
+    "SessionUnhealthyError",
+    "SchedulerCrashedError",
 ]
 
 
@@ -78,6 +90,20 @@ class UnknownMatrixError(ServingError):
     """The named matrix is not resident in the scheduler's session pool."""
 
 
+class SessionUnhealthyError(ServingError):
+    """The matrix's circuit breaker is open: its last
+    ``SchedulerConfig.breaker_threshold`` dispatches all failed, so
+    submissions fail fast instead of queueing onto a known-bad session.
+    The breaker half-opens after ``breaker_cooldown_s`` — one probe query
+    is admitted; success closes it, failure re-opens it."""
+
+
+class SchedulerCrashedError(ServingError):
+    """The dispatch thread died; the watchdog failed every pending request
+    with this instead of leaving their futures hanging.  ``start()`` the
+    scheduler again to recover."""
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Serving knobs.
@@ -92,12 +118,34 @@ class SchedulerConfig:
       max_sessions: bounded session pool — adding a matrix beyond this
         evicts the least-recently-used resident session (persisted to the
         store first, when one is attached).
+      max_retries: per-request retry budget for *transient* dispatch
+        failures (numerical breakdown, OOM, I/O, injected faults — never
+        validation errors).  0 (default) fails on first error, matching the
+        pre-retry behavior exactly.
+      retry_backoff_s: base delay before a retried request becomes eligible
+        again; attempt ``i`` waits ``retry_backoff_s * 2**(i-1)`` scaled by
+        up to ``1 + retry_jitter`` of random jitter (decorrelates retry
+        storms after a shared-cause failure).
+      retry_jitter: jitter fraction on the backoff (0 = deterministic).
+      breaker_threshold: consecutive dispatch failures on one matrix that
+        open its circuit breaker (submissions then raise
+        :class:`SessionUnhealthyError` until a cooldown probe succeeds).
+        0 (default) disables the breaker.
+      breaker_cooldown_s: how long an open breaker rejects before it
+        half-opens and admits one probe query.
+      watchdog_interval_s: poll period of the dispatch-thread watchdog.
     """
 
     max_queue: int = 256
     admission_window_s: float = 2e-3
     max_group: int = 32
     max_sessions: int = 8
+    max_retries: int = 0
+    retry_backoff_s: float = 0.05
+    retry_jitter: float = 0.2
+    breaker_threshold: int = 0
+    breaker_cooldown_s: float = 5.0
+    watchdog_interval_s: float = 0.5
 
 
 class QueryHandle:
@@ -121,6 +169,8 @@ class QueryHandle:
         self._exception: Optional[BaseException] = None
         self._cancelled = False
         self._started = False
+        self.attempts = 0  # dispatch attempts so far (retry accounting)
+        self.not_before = 0.0  # monotonic time before which a retry must wait
 
     # -- caller side ------------------------------------------------------
 
@@ -169,6 +219,12 @@ class QueryHandle:
         self._exception = exc
         self._event.set()
 
+    def _reset_for_retry(self) -> None:
+        """Back onto the queue after a retryable failure: un-mark dispatched
+        so cancel() works again while the retry waits out its backoff."""
+        with self._lock:
+            self._started = False
+
 
 class EigenScheduler:
     """Async eigensolver server over a bounded pool of prepared sessions.
@@ -203,8 +259,12 @@ class EigenScheduler:
         self._cv = threading.Condition(self._lock)
         self._queue: Deque[QueryHandle] = deque()
         self._thread: Optional[threading.Thread] = None
+        self._watchdog: Optional[threading.Thread] = None
         self._running = False
         self._closed = False
+        self._crashed = False
+        self._inflight: List[QueryHandle] = []  # group the dispatch thread holds
+        self._breakers: Dict[str, dict] = {}  # matrix -> breaker state
         if start:
             self.start()
 
@@ -217,10 +277,18 @@ class EigenScheduler:
             if self._running:
                 return self
             self._running = True
+            self._crashed = False
             self._thread = threading.Thread(
                 target=self._loop, name="eigen-scheduler", daemon=True
             )
             self._thread.start()
+            self._watchdog = threading.Thread(
+                target=self._watchdog_loop,
+                args=(self._thread,),
+                name="eigen-scheduler-watchdog",
+                daemon=True,
+            )
+            self._watchdog.start()
         return self
 
     def close(self, *, persist: bool = True, timeout: float = 30.0) -> None:
@@ -234,6 +302,10 @@ class EigenScheduler:
         if self._thread is not None:
             self._thread.join(timeout)
             self._thread = None
+        if self._watchdog is not None:
+            # The watchdog exits on its next poll once _running is False.
+            self._watchdog.join(self.config.watchdog_interval_s * 4)
+            self._watchdog = None
         with self._cv:
             leftovers = list(self._queue)
             self._queue.clear()
@@ -335,6 +407,11 @@ class EigenScheduler:
         with self._cv:
             if self._closed:
                 raise ServingError("scheduler is closed")
+            if self._crashed:
+                raise SchedulerCrashedError(
+                    "scheduler dispatch thread died; start() it again to recover"
+                )
+            self._breaker_admit_locked(matrix)
             if len(self._queue) >= self.config.max_queue:
                 self.metrics.inc("rejected_full")
                 raise QueueFullError(
@@ -353,6 +430,60 @@ class EigenScheduler:
             depth = len(self._queue)
             nsess = len(self._sessions)
         return self.metrics.snapshot(queue_depth=depth, sessions=nsess)
+
+    # ------------------------------------------------------ circuit breaker
+
+    def _breaker_admit_locked(self, matrix: str) -> None:
+        """Fail-fast gate at submission (caller holds the lock): raises
+        :class:`SessionUnhealthyError` while the matrix's breaker is open.
+        After the cooldown the breaker half-opens — ONE probe submission
+        passes; further submissions keep failing until the probe's dispatch
+        outcome closes (success) or re-opens (failure) the breaker."""
+        if self.config.breaker_threshold <= 0:
+            return
+        b = self._breakers.get(matrix)
+        if b is None or b["state"] == "closed":
+            return
+        now = time.monotonic()
+        if b["state"] == "open" and now >= b["open_until"]:
+            b["state"] = "half"  # this submission is the probe
+            return
+        self.metrics.inc("rejected_breaker")
+        raise SessionUnhealthyError(
+            f"matrix {matrix!r} breaker is {b['state']} after "
+            f"{b['failures']} consecutive dispatch failure(s); "
+            f"retry after the cooldown ({self.config.breaker_cooldown_s}s)"
+        )
+
+    def _breaker_record(self, matrix: str, ok: bool) -> None:
+        """Fold one dispatch outcome into the matrix's breaker state."""
+        if self.config.breaker_threshold <= 0:
+            return
+        with self._cv:
+            b = self._breakers.setdefault(
+                matrix, {"state": "closed", "failures": 0, "open_until": 0.0}
+            )
+            if ok:
+                b["state"] = "closed"
+                b["failures"] = 0
+                return
+            b["failures"] += 1
+            tripping = (
+                b["failures"] >= self.config.breaker_threshold
+                or b["state"] == "half"  # the probe itself failed
+            )
+            if tripping and b["state"] != "open":
+                b["state"] = "open"
+                b["open_until"] = time.monotonic() + self.config.breaker_cooldown_s
+                self.metrics.inc("breaker_trips")
+            elif b["state"] == "open":
+                b["open_until"] = time.monotonic() + self.config.breaker_cooldown_s
+
+    def breaker_state(self, matrix: str) -> str:
+        """Current breaker state for a matrix: "closed" | "open" | "half"."""
+        with self._cv:
+            b = self._breakers.get(matrix)
+            return b["state"] if b else "closed"
 
     # ------------------------------------------------------- dispatch loop
 
@@ -386,7 +517,12 @@ class EigenScheduler:
             h = self._queue.popleft()
             if self._resolve_dead(h, now):
                 continue
-            if len(taken) < room and h.matrix == seed.matrix and h.group_key == seed.group_key:
+            if (
+                len(taken) < room
+                and h.matrix == seed.matrix
+                and h.group_key == seed.group_key
+                and h.not_before <= now  # retries wait out their backoff
+            ):
                 taken.append(h)
             else:
                 keep.append(h)
@@ -403,11 +539,18 @@ class EigenScheduler:
                 if not self._running:
                     return None
                 now = time.monotonic()
+                backing_off: Deque[QueryHandle] = deque()
                 while self._queue:
                     h = self._queue.popleft()
-                    if not self._resolve_dead(h, now):
-                        seed = h
-                        break
+                    if self._resolve_dead(h, now):
+                        continue
+                    if h.not_before > now:
+                        backing_off.append(h)  # retry not yet eligible
+                        continue
+                    seed = h
+                    break
+                while backing_off:  # restore skipped retries, order kept
+                    self._queue.appendleft(backing_off.pop())
                 if seed is None:
                     self._cv.wait(timeout=0.1)
             group = [seed]
@@ -450,10 +593,9 @@ class EigenScheduler:
         try:
             results = sess.eigsh_many([h.query for h in live])
         except Exception as exc:
-            self.metrics.inc("failed", len(live))
-            for h in live:
-                h._set_exception(exc)
+            self._dispatch_failed(live, exc)
             return
+        self._breaker_record(live[0].matrix, ok=True)
         self.metrics.record_group(len(live))
         for h, res in zip(live, results):
             queue_s = t_dispatch - h.submit_t
@@ -462,9 +604,114 @@ class EigenScheduler:
             self.metrics.inc("completed")
             h._set_result(res)
 
+    @staticmethod
+    def _retryable(exc: BaseException) -> bool:
+        """Is this dispatch failure worth a retry?  Transient solver/runtime
+        failures only — a validation error fails the same way every time."""
+        from ..core.lanczos import NumericalBreakdown
+        from ..testing.faults import InjectedFault
+
+        if isinstance(exc, (ServingError, ValueError, TypeError)):
+            return False
+        if isinstance(exc, (NumericalBreakdown, OSError, MemoryError, InjectedFault)):
+            return True
+        msg = str(exc)
+        return "RESOURCE_EXHAUSTED" in msg or "out of memory" in msg.lower()
+
+    def _dispatch_failed(self, live: List[QueryHandle], exc: Exception) -> None:
+        """One dispatch blew up: feed the breaker, then split the group into
+        requeued retries (budget left, transient failure — exponential
+        backoff + jitter decides when each becomes eligible) and terminal
+        failures (resolved with the original exception)."""
+        self._breaker_record(live[0].matrix, ok=False)
+        cfg = self.config
+        retryable = cfg.max_retries > 0 and self._retryable(exc)
+        retry = [h for h in live if retryable and h.attempts < cfg.max_retries]
+        fail = [h for h in live if h not in retry]
+        if fail:
+            self.metrics.inc("failed", len(fail))
+            for h in fail:
+                h._set_exception(exc)
+        if not retry:
+            return
+        now = time.monotonic()
+        with self._cv:
+            for h in retry:
+                h.attempts += 1
+                backoff = cfg.retry_backoff_s * (2.0 ** (h.attempts - 1))
+                backoff *= 1.0 + max(0.0, cfg.retry_jitter) * random.random()
+                h.not_before = now + backoff
+                h._reset_for_retry()
+                self._queue.append(h)
+            self.metrics.inc("retries", len(retry))
+            self._cv.notify_all()
+
     def _loop(self) -> None:
+        # Guarded loop: ANY exception a dispatch leaks is contained here —
+        # the group fails typed, the thread survives, the next group runs.
+        # (Before this guard, one leaked exception killed the thread and
+        # stranded every queued future forever.)  Injected
+        # SchedulerThreadDeath derives from BaseException on purpose: it
+        # escapes the guard and genuinely kills the thread, which is the
+        # watchdog's test surface.
         while True:
             group = self._next_group()
             if group is None:
                 return
-            self._dispatch(group)
+            with self._cv:
+                self._inflight = group
+            try:
+                _faults.check_scheduler()
+                self._dispatch(group)
+            except Exception as exc:
+                self.metrics.inc("dispatch_errors")
+                pending = [h for h in group if not h.done()]
+                if pending:
+                    self.metrics.inc("failed", len(pending))
+                    err = ServingError(
+                        f"internal dispatch failure: {type(exc).__name__}: {exc}"
+                    )
+                    for h in pending:
+                        h._set_exception(err)
+            with self._cv:
+                self._inflight = []
+
+    # ------------------------------------------------------------ watchdog
+
+    def _watchdog_loop(self, thread: threading.Thread) -> None:
+        """Detect dispatch-thread death (anything that escapes the loop
+        guard) and fail every stranded request with a typed
+        :class:`SchedulerCrashedError` — a crashed scheduler must never
+        leave submitters blocked on futures that cannot resolve."""
+        while True:
+            time.sleep(self.config.watchdog_interval_s)
+            with self._cv:
+                if not self._running or self._thread is not thread:
+                    return  # closed, or superseded by a restart
+            if not thread.is_alive():
+                self._on_dispatch_death()
+                return
+
+    def _on_dispatch_death(self) -> None:
+        with self._cv:
+            if not self._running:
+                return  # normal close raced us
+            self._crashed = True
+            self._running = False
+            stranded = [
+                h
+                for h in list(self._queue) + list(self._inflight)
+                if not h.done()
+            ]
+            self._queue.clear()
+            self._inflight = []
+            self.metrics.inc("watchdog_trips")
+            if stranded:
+                self.metrics.inc("failed", len(stranded))
+            self._cv.notify_all()
+        err = SchedulerCrashedError(
+            "dispatch thread died unexpectedly; this query was failed by the "
+            "watchdog (start() the scheduler again to recover)"
+        )
+        for h in stranded:
+            h._set_exception(err)

@@ -24,6 +24,7 @@ warns and is treated as absent.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -32,10 +33,16 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["SessionStore", "default_store_root"]
+__all__ = [
+    "SessionStore",
+    "SolveCheckpoint",
+    "default_store_root",
+    "default_checkpoint_root",
+]
 
 _HEADER = "header.json"
 _PLANS = "plans.npz"
+_CKPT_SCHEMA = 1
 
 
 def default_store_root() -> str:
@@ -158,3 +165,151 @@ class SessionStore:
         if state is None:
             return 0
         return session.import_plans(state)
+
+
+def default_checkpoint_root() -> str:
+    """Default checkpoint location: ``REPRO_SOLVE_CHECKPOINTS`` if set, else
+    a ``solve_checkpoints`` directory next to the SpMV tune cache."""
+    env = os.environ.get("REPRO_SOLVE_CHECKPOINTS")
+    if env:
+        return env
+    from ..kernels.engine import DEFAULT_TUNE_CACHE
+
+    return os.path.join(os.path.dirname(DEFAULT_TUNE_CACHE), "solve_checkpoints")
+
+
+class SolveCheckpoint:
+    """Mid-solve snapshot store — the :class:`SessionStore` sibling for
+    *in-flight* state rather than prepared plans.
+
+    The restarted engine saves its full restart state (basis block,
+    projected matrix, arrow border, next start vector, counters) after
+    every completed compression; the chunked engine's host Lanczos loop
+    saves its carry every N steps.  A killed run re-invoked with the same
+    token resumes from the last snapshot **bit-identically**: each saved
+    state fully determines the remaining trajectory (per-cycle
+    ``beta_prev`` resets to 0, so no unsaved recurrence state leaks across
+    the snapshot boundary), and arrays round-trip exactly (bf16 is widened
+    to f32 — lossless — for npz, and narrowed back on load).
+
+    Layout on disk (one directory per solve token)::
+
+        <root>/<token>/
+            header.json   # schema + scalar state (engine, cycle/step, dims)
+            state.npz     # the array state
+
+    Writes are atomic (temp file + ``os.replace``) so a crash mid-save
+    leaves the previous snapshot intact, never a torn one.  Completed
+    solves ``clear`` their entry so a finished token cannot resurrect.
+    """
+
+    _STATE = "state.npz"
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = Path(root if root is not None else default_checkpoint_root())
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    @staticmethod
+    def token(matrix_fp: Optional[str], **params) -> str:
+        """Deterministic solve identity: matrix fingerprint + the solve
+        parameters that shape the trajectory (backend, policy, k, m, seed,
+        tol, reorth — NOT budget knobs like max_restarts, which only decide
+        where the trajectory stops)."""
+        h = hashlib.blake2b(digest_size=12)
+        h.update((matrix_fp or "anon").encode())
+        for key in sorted(params):
+            h.update(f"|{key}={params[key]!r}".encode())
+        return h.hexdigest()
+
+    def path_for(self, token: str) -> Path:
+        return self.root / token
+
+    def entries(self) -> list:
+        return sorted(p.name for p in self.root.iterdir() if (p / _HEADER).exists())
+
+    def save(self, token: str, state: dict) -> Path:
+        """Persist one snapshot: ndarray/jax-array values go to the npz
+        (bf16 widened to f32, original dtype recorded), everything else to
+        the JSON header."""
+        path = self.path_for(token)
+        path.mkdir(parents=True, exist_ok=True)
+        arrays = {}
+        dtypes = {}
+        header = {"schema": _CKPT_SCHEMA}
+        for key, val in state.items():
+            if hasattr(val, "ndim") or isinstance(val, np.ndarray):
+                arr = np.asarray(val)
+                dtypes[key] = str(arr.dtype)
+                if arr.dtype.name == "bfloat16":
+                    arr = arr.astype(np.float32)  # exact widening
+                arrays[key] = arr
+            else:
+                header[key] = val
+        header["array_dtypes"] = dtypes
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path / self._STATE)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(header, f, indent=1)
+            os.replace(tmp, path / _HEADER)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    def load(self, token: str) -> Optional[dict]:
+        """The last snapshot for ``token``, or None when absent/corrupt
+        (corrupt entries warn and read as absent: the solve starts over,
+        identical to having no checkpoint)."""
+        import warnings
+
+        path = self.path_for(token)
+        if not (path / _HEADER).exists():
+            return None
+        try:
+            with open(path / _HEADER) as f:
+                header = json.load(f)
+            if header.get("schema") != _CKPT_SCHEMA:
+                return None
+            dtypes = header.pop("array_dtypes", {})
+            state = dict(header)
+            with np.load(path / self._STATE) as z:
+                for key in z.files:
+                    arr = z[key]
+                    want = dtypes.get(key)
+                    if want == "bfloat16":
+                        import ml_dtypes
+
+                        arr = arr.astype(ml_dtypes.bfloat16)  # exact narrowing back
+                    state[key] = arr
+            return state
+        except Exception as exc:
+            warnings.warn(
+                f"corrupt solve checkpoint {path.name} ignored "
+                f"({type(exc).__name__}: {exc}); the solve restarts from zero",
+                stacklevel=2,
+            )
+            return None
+
+    def clear(self, token: str) -> bool:
+        """Remove ``token``'s snapshot; True when something was deleted."""
+        path = self.path_for(token)
+        if not path.exists():
+            return False
+        for name in (self._STATE, _HEADER):
+            try:
+                (path / name).unlink()
+            except FileNotFoundError:
+                pass
+        try:
+            path.rmdir()
+        except OSError:
+            pass  # stray tmp files: leave the directory, entry is still gone
+        return True

@@ -1,0 +1,342 @@
+"""Deterministic fault injection for the solver and serving layers.
+
+The recovery paths in this repo (``recovery="auto"`` escalation, solve
+checkpoint resume, scheduler retries / circuit breaker / watchdog) are only
+trustworthy while something exercises them.  This module is that something:
+a process-local registry of *armed* faults that production code consults at
+well-defined injection points, each firing deterministically at a requested
+iteration / chunk / cycle and then disarming itself.
+
+Two ways to arm a fault:
+
+* context manager (tests)::
+
+      from repro.testing import faults
+      with faults.inject("spmv_nan@iter=7"):
+          eigsh(a, k=4)           # SpMV output at Lanczos step 7 is NaN
+
+* environment (CI permutations)::
+
+      REPRO_FAULT="beta_collapse@iter=3" python -m ...
+
+Grammar: ``kind[@key=val[,key=val...]]`` with keys ``iter`` / ``chunk`` /
+``cycle`` (aliases for the trigger index) and ``count`` (times to fire
+before going inert, default 1).  Kinds:
+
+==================  =========================================================
+``spmv_nan``        NaN written into the SpMV output at Lanczos step *iter*
+``beta_collapse``   beta forced to 0 at step *iter* (lucky-breakdown shape)
+``kernel_error``    raises :class:`InjectedKernelError` at sweep entry (the
+                    shape of a Pallas/XLA lowering or execution failure)
+``oom``             raises :class:`InjectedOOMError` at sweep entry (the
+                    shape of a device RESOURCE_EXHAUSTED allocation failure)
+``chunk_io_error``  raises :class:`InjectedChunkIOError` while staging chunk
+                    *chunk* of an out-of-core stream
+``solve_crash``     raises :class:`InjectedCrash` at the start of restart
+                    cycle *cycle* (checkpoint/resume tests)
+``scheduler_crash`` raises :class:`SchedulerThreadDeath` — a BaseException,
+                    so it escapes ``except Exception`` wrappers and really
+                    kills the dispatch thread (watchdog tests)
+==================  =========================================================
+
+Determinism under ``jax.jit``: the Lanczos taps are *decided at trace time*
+(the armed spec is read host-side while the loop body traces) and the
+injected poison is guarded by ``jnp.where(i == iter, ...)`` so it lands on
+exactly one step whether ``i`` is a tracer or a Python int.  The armed state
+is part of the jit cache key (see ``trace_key``), so a poisoned trace can
+never be cached under the clean key, and a clean retry after the fault
+disarms recompiles nothing.  On the jitted path the taps do **not** count a
+firing (tracing happens zero or one times, execution many): the sweep
+launcher calls :func:`consume_lanczos` host-side after each launch whose
+cache key carried the fault, so ``fired`` advances exactly once per poisoned
+sweep whether the trace was fresh or a cache hit.
+
+When nothing is armed every hook is a cheap no-op (one list + one environ
+lookup per *solve*, not per iteration).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Optional, Union
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultSpec",
+    "parse_fault",
+    "inject",
+    "fault_spec",
+    "trace_key",
+    "reset",
+    "tap_spmv",
+    "tap_beta",
+    "consume_lanczos",
+    "check_sweep_entry",
+    "check_chunk_io",
+    "check_solve_crash",
+    "check_scheduler",
+    "InjectedFault",
+    "InjectedKernelError",
+    "InjectedOOMError",
+    "InjectedChunkIOError",
+    "InjectedCrash",
+    "SchedulerThreadDeath",
+]
+
+FAULT_KINDS = (
+    "spmv_nan",
+    "beta_collapse",
+    "kernel_error",
+    "oom",
+    "chunk_io_error",
+    "solve_crash",
+    "scheduler_crash",
+)
+
+_ENV_VAR = "REPRO_FAULT"
+
+
+class InjectedFault:
+    """Mixin marking an exception as injected by this harness."""
+
+
+class InjectedKernelError(InjectedFault, RuntimeError):
+    """Stands in for a Pallas/XLA lowering or execution failure."""
+
+
+class InjectedOOMError(InjectedFault, RuntimeError):
+    """Stands in for a device allocation failure (message shape matters:
+    recovery classifies on the RESOURCE_EXHAUSTED marker XLA uses)."""
+
+
+class InjectedChunkIOError(InjectedFault, OSError):
+    """Stands in for an I/O error while staging an out-of-core chunk."""
+
+
+class InjectedCrash(InjectedFault, RuntimeError):
+    """Aborts a solve mid-run (checkpoint/resume tests)."""
+
+
+class SchedulerThreadDeath(InjectedFault, BaseException):
+    """Kills a scheduler thread for real: derives from BaseException so the
+    dispatch loop's ``except Exception`` guard cannot swallow it — the
+    watchdog path is what must handle the aftermath."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One armed fault.  ``fired`` counts applications; the spec goes inert
+    once ``fired >= count`` so recovery retries run clean."""
+
+    kind: str
+    iteration: Optional[int] = None
+    count: int = 1
+    fired: int = 0
+
+    @property
+    def armed(self) -> bool:
+        return self.fired < self.count
+
+
+def parse_fault(text: str) -> FaultSpec:
+    """Parse ``kind[@key=val[,key=val...]]`` (see module docstring)."""
+    text = text.strip()
+    kind, _, params = text.partition("@")
+    kind = kind.strip()
+    if kind not in FAULT_KINDS:
+        raise ValueError(f"unknown fault kind {kind!r}; expected one of {FAULT_KINDS}")
+    spec = FaultSpec(kind=kind)
+    if params:
+        for item in params.split(","):
+            key, sep, val = item.partition("=")
+            key = key.strip()
+            if not sep:
+                raise ValueError(f"fault param {item!r} in {text!r}: expected key=value")
+            try:
+                ival = int(val)
+            except ValueError:
+                raise ValueError(f"fault param {item!r} in {text!r}: value must be an int")
+            if key in ("iter", "chunk", "cycle", "iteration"):
+                spec.iteration = ival
+            elif key == "count":
+                spec.count = ival
+            else:
+                raise ValueError(
+                    f"unknown fault param {key!r} in {text!r}; "
+                    "expected iter/chunk/cycle or count"
+                )
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# registry: a context-manager stack plus a lazily parsed REPRO_FAULT env spec.
+# Env specs are cached per raw string so their fired-count survives repeated
+# lookups within one process (one process == one deterministic firing).
+
+_lock = threading.Lock()
+_stack: list[FaultSpec] = []
+_env_cache: dict[str, list[FaultSpec]] = {}
+
+
+def _env_specs() -> list[FaultSpec]:
+    raw = os.environ.get(_ENV_VAR, "").strip()
+    if not raw:
+        return []
+    cached = _env_cache.get(raw)
+    if cached is None:
+        cached = [parse_fault(part) for part in raw.split(";") if part.strip()]
+        _env_cache[raw] = cached
+    return cached
+
+
+@contextlib.contextmanager
+def inject(spec: Union[str, FaultSpec]):
+    """Arm a fault for the duration of the block; yields the live spec so
+    tests can assert on ``fired``."""
+    fs = parse_fault(spec) if isinstance(spec, str) else spec
+    with _lock:
+        _stack.append(fs)
+    try:
+        yield fs
+    finally:
+        with _lock:
+            _stack.remove(fs)
+
+
+def reset() -> None:
+    """Disarm everything (including cached env specs) — test teardown."""
+    with _lock:
+        _stack.clear()
+        _env_cache.clear()
+
+
+def fault_spec(kind: str) -> Optional[FaultSpec]:
+    """The innermost armed spec for ``kind``, or None.  Cheap when idle."""
+    if _stack:
+        with _lock:
+            for fs in reversed(_stack):
+                if fs.kind == kind and fs.armed:
+                    return fs
+    for fs in _env_specs():
+        if fs.kind == kind and fs.armed:
+            return fs
+    return None
+
+
+def trace_key() -> Optional[tuple]:
+    """Hashable description of the armed Lanczos-visible faults, for use as
+    a jit static argument: None when idle (the clean cache key), a unique
+    tuple per (spec, fired) state otherwise — so poisoned traces can never
+    shadow the clean compiled sweep."""
+    parts = []
+    for kind in ("spmv_nan", "beta_collapse"):
+        fs = fault_spec(kind)
+        if fs is not None:
+            parts.append((fs.kind, fs.iteration, fs.count, fs.fired))
+    return tuple(parts) if parts else None
+
+
+# ---------------------------------------------------------------------------
+# injection points (called from production code; all cheap no-ops when idle)
+
+
+def tap_spmv(u, i):
+    """Poison the SpMV output at the armed step.  ``i`` may be a tracer
+    (jitted ``fori_loop``) or a Python int (eager host loop)."""
+    fs = fault_spec("spmv_nan")
+    if fs is None:
+        return u
+    import jax.numpy as jnp
+
+    it = fs.iteration or 0
+    if isinstance(i, int):
+        if i != it:
+            return u
+        fs.fired += 1
+        return u.at[0].set(jnp.asarray(jnp.nan, u.dtype))
+    # Traced: counted per *launch* by consume_lanczos, not per trace — a
+    # cached poisoned trace still executes the poison.
+    poisoned = u.at[0].set(jnp.asarray(jnp.nan, u.dtype))
+    return jnp.where(jnp.equal(i, it), poisoned, u)
+
+
+def tap_beta(beta, i):
+    """Collapse beta to 0 at the armed step (lucky-breakdown shape).
+    Accepts a jax scalar + tracer step, or Python floats (restarted loop)."""
+    fs = fault_spec("beta_collapse")
+    if fs is None:
+        return beta
+    it = fs.iteration or 0
+    if isinstance(i, int):
+        if i != it:
+            return beta
+        fs.fired += 1
+        return type(beta)(0.0) if isinstance(beta, float) else beta * 0
+    import jax.numpy as jnp
+
+    # Traced: counted per launch by consume_lanczos (see tap_spmv).
+    return jnp.where(jnp.equal(i, it), jnp.zeros_like(beta), beta)
+
+
+def consume_lanczos(key: Optional[tuple]) -> None:
+    """Count one firing per fault kind baked into a just-launched jitted
+    sweep.  ``key`` is the ``trace_key()`` the launch was keyed on: None
+    means the sweep was clean and nothing is consumed.  Called host-side by
+    the sweep launchers so a cache hit on a poisoned trace (which executes
+    the poison but never re-traces the tap) still advances ``fired``."""
+    if not key:
+        return
+    for kind, *_ in key:
+        fs = fault_spec(kind)
+        if fs is not None:
+            fs.fired += 1
+
+
+def check_sweep_entry() -> None:
+    """Raise the armed sweep-entry fault (kernel_error / oom), if any.
+    Called once per Lanczos sweep, host-side, before any device work."""
+    fs = fault_spec("kernel_error")
+    if fs is not None:
+        fs.fired += 1
+        raise InjectedKernelError("injected Mosaic lowering failure (fault harness)")
+    fs = fault_spec("oom")
+    if fs is not None:
+        fs.fired += 1
+        raise InjectedOOMError(
+            "RESOURCE_EXHAUSTED: out of memory while allocating Krylov basis "
+            "(fault harness)"
+        )
+
+
+def check_chunk_io(chunk_index: int) -> None:
+    """Raise the armed chunk-staging I/O fault when ``chunk_index`` matches."""
+    fs = fault_spec("chunk_io_error")
+    if fs is None:
+        return
+    if fs.iteration is not None and chunk_index != fs.iteration:
+        return
+    fs.fired += 1
+    raise InjectedChunkIOError(f"injected I/O error staging chunk {chunk_index}")
+
+
+def check_solve_crash(cycle: int) -> None:
+    """Abort a restarted solve at the armed cycle (checkpoint tests)."""
+    fs = fault_spec("solve_crash")
+    if fs is None:
+        return
+    if fs.iteration is not None and cycle != fs.iteration:
+        return
+    fs.fired += 1
+    raise InjectedCrash(f"injected crash at restart cycle {cycle}")
+
+
+def check_scheduler() -> None:
+    """Kill the calling scheduler thread (BaseException — see class doc)."""
+    fs = fault_spec("scheduler_crash")
+    if fs is None:
+        return
+    fs.fired += 1
+    raise SchedulerThreadDeath("injected dispatch-thread death")

@@ -1,0 +1,458 @@
+"""Fault-matrix suite: every injection point x every engine.
+
+Each case asserts the documented outcome of ``ISSUE`` section "robustness":
+a typed error (``NumericalBreakdown`` / ``InjectedFault`` subclasses /
+serving errors) under ``recovery="raise"``, or a converged result carrying
+an explicit ``recovery_trail`` under ``recovery="auto"`` — never a hang,
+never a NaN result.  Plus the checkpoint/resume round-trips (bit-identical
+eigenvalues after a mid-solve crash) and the scheduler's retry / circuit
+breaker / watchdog / dispatch-loop-guard behaviors.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import NumericalBreakdown, eigsh, session_cache_clear
+from repro.api.coerce import coerce_input
+from repro.api.result import EigenResult
+from repro.serving import (
+    EigenScheduler,
+    SchedulerConfig,
+    SchedulerCrashedError,
+    ServingError,
+    SessionUnhealthyError,
+    SolveCheckpoint,
+)
+from repro.sparse import generate
+from repro.testing import faults
+
+K = 4
+ITERS = 20
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    faults.reset()
+    session_cache_clear()
+    yield
+    faults.reset()
+    session_cache_clear()
+
+
+@pytest.fixture(scope="module")
+def web():
+    return generate("web", 384, 6.0, seed=7, values="normalized")
+
+
+@pytest.fixture(scope="module")
+def small():
+    return generate("web", 256, 6.0, seed=3, values="normalized")
+
+
+def _trail_actions(res):
+    return [t["action"] for t in (res.recovery_trail or [])]
+
+
+# ---------------------------------------------------------------------------
+# grammar + registry mechanics
+
+
+def test_parse_fault_grammar():
+    fs = faults.parse_fault("spmv_nan@iter=3,count=2")
+    assert (fs.kind, fs.iteration, fs.count) == ("spmv_nan", 3, 2)
+    assert faults.parse_fault("chunk_io_error@chunk=1").iteration == 1
+    assert faults.parse_fault("solve_crash@cycle=4").iteration == 4
+    assert faults.parse_fault("kernel_error").iteration is None
+
+
+@pytest.mark.parametrize(
+    "bad", ["frobnicate", "spmv_nan@iter", "spmv_nan@iter=x", "spmv_nan@depth=3"]
+)
+def test_parse_fault_rejects(bad):
+    with pytest.raises(ValueError):
+        faults.parse_fault(bad)
+
+
+def test_inject_arms_and_disarms():
+    assert faults.fault_spec("spmv_nan") is None
+    with faults.inject("spmv_nan@iter=1") as fs:
+        assert faults.fault_spec("spmv_nan") is fs
+    assert faults.fault_spec("spmv_nan") is None
+
+
+def test_fault_count_exhaustion():
+    u = jnp.ones((4,), jnp.float32)
+    with faults.inject("spmv_nan@iter=1,count=2") as fs:
+        for _ in range(3):
+            faults.tap_spmv(u, 1)  # host path: int step consumes directly
+        assert fs.fired == 2  # third application was inert
+        assert faults.fault_spec("spmv_nan") is None
+
+
+def test_consume_lanczos_counts_per_launch():
+    with faults.inject("spmv_nan@iter=1") as fs:
+        key = faults.trace_key()
+        assert key and key[0][0] == "spmv_nan"
+        faults.consume_lanczos(key)
+        assert fs.fired == 1
+        assert faults.trace_key() is None  # exhausted -> clean key
+    faults.consume_lanczos(None)  # no-op
+
+
+def test_env_var_injection(monkeypatch, small):
+    monkeypatch.setenv("REPRO_FAULT", "spmv_nan@iter=2")
+    with pytest.raises(NumericalBreakdown) as ei:
+        eigsh(small, K, policy="FFF", num_iters=ITERS, recovery="raise")
+    assert ei.value.kind == "nonfinite"
+
+
+# ---------------------------------------------------------------------------
+# typed breakdowns, per engine (recovery="raise")
+
+ENGINES = ["single", "restarted", "chunked", "distributed"]
+
+
+def _solve(a, backend, **kw):
+    kw.setdefault("policy", "FFF")
+    kw.setdefault("num_iters", ITERS)
+    if backend == "restarted":
+        kw.setdefault("subspace", 12)
+        kw.setdefault("tol", 1e-10)
+        kw.pop("num_iters")
+    if backend == "chunked":
+        kw.setdefault("chunk_nnz", 1024)
+    return eigsh(a, K, backend=backend, **kw)
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_spmv_nan_raises_typed(web, backend):
+    with faults.inject("spmv_nan@iter=3"):
+        with pytest.raises(NumericalBreakdown) as ei:
+            _solve(web, backend, recovery="raise")
+    exc = ei.value
+    assert exc.kind == "nonfinite"
+    assert exc.iteration == 3
+    assert exc.policy  # names the policy it broke under
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_beta_collapse_raises_typed(web, backend):
+    with faults.inject("beta_collapse@iter=2"):
+        with pytest.raises(NumericalBreakdown) as ei:
+            _solve(web, backend, recovery="raise")
+    exc = ei.value
+    assert exc.kind == "beta_underflow"
+    assert exc.iteration == 2
+
+
+def test_recovery_none_disables_probe(web):
+    # The pre-robustness contract: no probe, the NaN flows into the result.
+    with faults.inject("spmv_nan@iter=3"):
+        res = _solve(web, "single", recovery="none")
+    assert not np.all(np.isfinite(np.asarray(res.eigenvalues)))
+
+
+# ---------------------------------------------------------------------------
+# recovery="auto": documented escalation per failure class
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_auto_escalates_policy_on_nan(web, backend):
+    with faults.inject("spmv_nan@iter=3"):
+        res = _solve(web, backend, recovery="auto")
+    assert "escalate_policy" in _trail_actions(res)
+    step = next(t for t in res.recovery_trail if t["action"] == "escalate_policy")
+    assert (step["from"], step["to"]) == ("FFF", "FCF")
+    assert step["kind"] == "nonfinite"
+    assert np.all(np.isfinite(np.asarray(res.eigenvalues)))
+
+
+@pytest.mark.parametrize("backend", ["single", "restarted"])
+def test_auto_reseeds_on_beta_collapse(web, backend):
+    with faults.inject("beta_collapse@iter=2"):
+        res = _solve(web, backend, recovery="auto")
+    step = next(t for t in res.recovery_trail if t["action"] == "reseed")
+    assert step["kind"] == "beta_underflow"
+    assert step["from"] != step["to"]
+    assert np.all(np.isfinite(np.asarray(res.eigenvalues)))
+
+
+def test_kernel_error_raise_mode_propagates(web):
+    with faults.inject("kernel_error"):
+        with pytest.raises(faults.InjectedKernelError):
+            _solve(web, "single", recovery="raise")
+
+
+def test_auto_unfuses_on_kernel_error(web):
+    with faults.inject("kernel_error"):
+        res = _solve(web, "single", recovery="auto")
+    assert "unfuse" in _trail_actions(res)
+    assert np.all(np.isfinite(np.asarray(res.eigenvalues)))
+
+
+def test_oom_raise_mode_propagates(web):
+    with faults.inject("oom"):
+        with pytest.raises(faults.InjectedOOMError):
+            _solve(web, "single", recovery="raise")
+
+
+def test_auto_falls_back_to_chunked_on_oom(web):
+    with faults.inject("oom"):
+        res = _solve(web, "single", recovery="auto")
+    assert "fallback_chunked" in _trail_actions(res)
+    assert res.backend == "chunked"
+    assert np.all(np.isfinite(np.asarray(res.eigenvalues)))
+
+
+def test_oom_on_chunked_has_no_fallback(web):
+    # Already at the bottom of the memory ladder: the typed error surfaces.
+    with faults.inject("oom@iter=0,count=99"):
+        with pytest.raises(faults.InjectedOOMError):
+            _solve(web, "chunked", recovery="auto")
+
+
+def test_chunk_io_error_is_typed_oserror(web):
+    with faults.inject("chunk_io_error@chunk=0"):
+        with pytest.raises(OSError) as ei:
+            _solve(web, "chunked", recovery="raise")
+    assert isinstance(ei.value, faults.InjectedChunkIOError)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume round-trips
+
+
+def test_restarted_checkpoint_resume_bit_identical(web, tmp_path):
+    kw = dict(policy="FDF", backend="restarted", tol=1e-10, subspace=16, seed=3)
+    ref = eigsh(web, K, **kw)
+    session_cache_clear()
+    with faults.inject("solve_crash@cycle=2"):
+        with pytest.raises(faults.InjectedCrash):
+            eigsh(web, K, checkpoint_dir=str(tmp_path), **kw)
+    store = SolveCheckpoint(str(tmp_path))
+    assert store.entries(), "crash must leave a resumable snapshot"
+    session_cache_clear()
+    res = eigsh(web, K, checkpoint_dir=str(tmp_path), **kw)
+    np.testing.assert_array_equal(
+        np.asarray(ref.eigenvalues), np.asarray(res.eigenvalues)
+    )
+    assert not store.entries(), "completed solve must clear its checkpoint"
+
+
+def test_host_loop_checkpoint_resume_bit_identical(tmp_path):
+    # The chunked engine's eager loop, interrupted mid-sweep: resume from the
+    # last snapshot must replay to the exact same tridiagonalization.
+    from repro.core.lanczos import lanczos_tridiag
+    from repro.core.precision import FDF
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((48, 48))
+    aj = jnp.asarray((a + a.T) / 2, jnp.float64)
+    pol = FDF.effective()
+    v1 = jnp.asarray(rng.standard_normal(48), jnp.float64)
+    m, every = 16, 4
+
+    def mv(v):
+        return aj @ v.astype(jnp.float64)
+
+    calls = {"n": 0}
+
+    def mv_crash(v):
+        calls["n"] += 1
+        if calls["n"] == 11:  # after the i=7 snapshot, before the i=11 one
+            raise RuntimeError("injected mid-sweep crash")
+        return mv(v)
+
+    ref = lanczos_tridiag(mv, v1, m, pol, reorth="full", jit=False)
+    store = SolveCheckpoint(str(tmp_path))
+    token = SolveCheckpoint.token("unit-fp", engine="lanczos", m=m)
+    with pytest.raises(RuntimeError):
+        lanczos_tridiag(
+            mv_crash, v1, m, pol, reorth="full", jit=False,
+            checkpoint=(store, token, every),
+        )
+    assert store.entries(), "crash must leave a resumable snapshot"
+    res = lanczos_tridiag(
+        mv, v1, m, pol, reorth="full", jit=False, checkpoint=(store, token, every)
+    )
+    assert not store.entries()
+    np.testing.assert_array_equal(np.asarray(ref.alpha), np.asarray(res.alpha))
+    np.testing.assert_array_equal(np.asarray(ref.beta), np.asarray(res.beta))
+    np.testing.assert_array_equal(np.asarray(ref.basis), np.asarray(res.basis))
+
+
+def test_checkpoint_token_excludes_budget_knobs():
+    t1 = SolveCheckpoint.token("fp", backend="restarted", policy="FDF", k=4, m=16)
+    t2 = SolveCheckpoint.token("fp", backend="restarted", policy="FDF", k=4, m=16)
+    t3 = SolveCheckpoint.token("fp", backend="restarted", policy="FDF", k=4, m=32)
+    assert t1 == t2 != t3
+
+
+# ---------------------------------------------------------------------------
+# scheduler: retries, circuit breaker, watchdog, dispatch-loop guard
+
+SK = dict(k=4, num_iters=16)
+
+
+def test_scheduler_retry_recovers(small):
+    cfg = SchedulerConfig(max_retries=1, retry_backoff_s=0.01, watchdog_interval_s=0.1)
+    with EigenScheduler(cfg) as s:
+        key = s.add_matrix(small)
+        with faults.inject("spmv_nan@iter=3"):
+            h = s.submit(key, **SK)
+            res = h.result(timeout=120.0)
+        st = s.stats()
+    assert res.k == 4
+    assert st.retries == 1 and st.failed == 0
+
+
+def test_scheduler_retry_budget_exhausts_typed(small):
+    cfg = SchedulerConfig(max_retries=1, retry_backoff_s=0.01, watchdog_interval_s=0.1)
+    with EigenScheduler(cfg) as s:
+        key = s.add_matrix(small)
+        with faults.inject("spmv_nan@iter=3,count=99"):
+            h = s.submit(key, **SK)
+            exc = h.exception(timeout=120.0)
+        st = s.stats()
+    assert isinstance(exc, NumericalBreakdown)
+    assert st.retries == 1 and st.failed == 1
+
+
+def test_scheduler_never_retries_bad_requests(small):
+    cfg = SchedulerConfig(max_retries=3, retry_backoff_s=0.01, watchdog_interval_s=0.1)
+    with EigenScheduler(cfg) as s:
+        key = s.add_matrix(small)
+        with pytest.raises(ValueError):
+            s.submit(key, k=4, num_iters=2)  # m < k: a caller bug, not transient
+        st = s.stats()
+    assert st.retries == 0  # caller bugs are rejected, never retried
+
+
+def test_scheduler_circuit_breaker_cycle(small):
+    import time
+
+    cfg = SchedulerConfig(
+        breaker_threshold=2, breaker_cooldown_s=0.3, watchdog_interval_s=0.1
+    )
+    with EigenScheduler(cfg) as s:
+        key = s.add_matrix(small)
+        with faults.inject("spmv_nan@iter=3,count=99"):
+            for _ in range(2):
+                h = s.submit(key, **SK)
+                assert h.exception(timeout=120.0) is not None
+        deadline = time.monotonic() + 5.0
+        while s.breaker_state(key) != "open" and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert s.breaker_state(key) == "open"
+        with pytest.raises(SessionUnhealthyError):
+            s.submit(key, **SK)
+        time.sleep(0.35)  # cooldown: next submit is the half-open probe
+        h = s.submit(key, **SK)
+        res = h.result(timeout=120.0)
+        st = s.stats()
+        assert res.k == 4
+        assert s.breaker_state(key) == "closed"
+    assert st.breaker_trips == 1
+    assert st.rejected_breaker == 1
+
+
+@pytest.mark.filterwarnings("ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_scheduler_watchdog_fails_pending_typed(small):
+    cfg = SchedulerConfig(watchdog_interval_s=0.05)
+    s = EigenScheduler(cfg)
+    try:
+        key = s.add_matrix(small)
+        with faults.inject("scheduler_crash"):
+            h = s.submit(key, **SK)
+            exc = h.exception(timeout=30.0)
+        assert isinstance(exc, SchedulerCrashedError)
+        with pytest.raises(SchedulerCrashedError):
+            s.submit(key, **SK)
+        assert s.stats().watchdog_trips == 1
+        s.start()  # explicit restart recovers the scheduler
+        h2 = s.submit(key, **SK)
+        assert h2.result(timeout=120.0).k == 4
+    finally:
+        s.close()
+
+
+def test_scheduler_dispatch_loop_survives_internal_bug(small):
+    # Regression (issue satellite a): an exception escaping the dispatch
+    # loop used to kill the thread and strand every pending handle.
+    s = EigenScheduler(SchedulerConfig(watchdog_interval_s=0.1))
+    try:
+        key = s.add_matrix(small)
+        orig, calls = s._dispatch, {"n": 0}
+
+        def boom(group):
+            if calls["n"] == 0:
+                calls["n"] += 1
+                raise RuntimeError("synthetic dispatch bug")
+            return orig(group)
+
+        s._dispatch = boom
+        h = s.submit(key, **SK)
+        exc = h.exception(timeout=30.0)
+        assert isinstance(exc, ServingError)
+        assert "internal dispatch failure" in str(exc)
+        assert s._thread.is_alive(), "dispatch thread must survive the bug"
+        h2 = s.submit(key, **SK)
+        assert h2.result(timeout=120.0).k == 4
+        assert s.stats().dispatch_errors == 1
+    finally:
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# input validation at coercion (fail fast, named error)
+
+
+def test_nan_scipy_input_rejected():
+    sp = pytest.importorskip("scipy.sparse")
+    a = sp.identity(8, format="csr") * 1.0
+    a.data[0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        eigsh(a, 2, num_iters=6)
+
+
+def test_nan_dense_input_rejected():
+    a = np.eye(8)
+    a[0, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        eigsh(a, 2, num_iters=6)
+
+
+def test_storage_overflow_rejected():
+    a = np.eye(8) * 1e5  # > float16 max under HFF storage
+    with pytest.raises(ValueError, match="overflows"):
+        eigsh(a, 2, policy="HFF", num_iters=6)
+
+
+def test_validation_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_VALIDATE_INPUT", "0")
+    a = np.eye(8)
+    a[0, 0] = np.nan
+    coerce_input(a)  # must not raise with validation off
+
+
+def test_scheduler_rejects_bad_matrix_at_submit_time(small):
+    sp = pytest.importorskip("scipy.sparse")
+    a = sp.identity(32, format="csr") * 1.0
+    a.data[0] = np.nan
+    with EigenScheduler(SchedulerConfig(watchdog_interval_s=0.1)) as s:
+        with pytest.raises(ValueError, match="non-finite"):
+            s.add_matrix(a)
+
+
+# ---------------------------------------------------------------------------
+# result schema
+
+
+def test_recovery_trail_roundtrips_through_dict(web):
+    with faults.inject("spmv_nan@iter=3"):
+        res = _solve(web, "single", recovery="auto")
+    assert res.recovery_trail
+    back = EigenResult.from_dict(res.to_dict())
+    assert back.recovery_trail == res.recovery_trail
