@@ -23,7 +23,9 @@ def main() -> None:
     os.environ.setdefault("REPRO_SPMV_TUNE", "1")
     os.environ.setdefault("REPRO_SPMV_TUNE_BUDGET", "3")
     os.environ.setdefault("REPRO_SPMV_TUNE_CACHE", ".cache/spmv_tune.json")
-    cache = os.environ["REPRO_SPMV_TUNE_CACHE"]
+    from repro.configs import env as envcfg
+
+    cache = envcfg.raw("REPRO_SPMV_TUNE_CACHE")
 
     import repro.kernels.engine as eng_mod
     from repro.sparse import generate

@@ -1,0 +1,67 @@
+"""repro.analysis — static verification of the eigensolver's three riskiest
+claims: the precision phase map (jaxpr-traced, P-rules), the Pallas kernel
+tiling contracts (grid-mapping-checked, K-rules), and the serving layer's
+lock and config discipline (AST-linted, C/E-rules).
+
+Three ways in, same checks:
+
+  * library — :func:`run_checks` / the per-pass ``run()`` functions;
+  * CLI — ``python -m repro.analysis [--check ...] [--strict]``;
+  * CI — the ``analysis`` job (see .github/workflows/ci.yml).
+
+Rule IDs are stable (see :data:`RULES` and the README's "Static analysis"
+table); a source-anchored finding can be suppressed with an inline
+``# repro: ignore[RULE]`` comment on its line.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+from .findings import RULES, Finding, Findings, format_findings, is_suppressed
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "Findings",
+    "CHECKS",
+    "format_findings",
+    "is_suppressed",
+    "run_checks",
+]
+
+# Check name -> zero-arg-callable factory (imported lazily: the precision
+# pass pulls in the whole solver stack, the AST passes need nothing).
+CHECKS = ("precision", "kernels", "concurrency", "config")
+
+
+def run_checks(
+    checks: Optional[Iterable[str]] = None,
+    *,
+    repo_root: str = ".",
+    vmem_budget_mb: Optional[float] = None,
+) -> Dict[str, Findings]:
+    """Run the selected passes; returns {check name: findings}."""
+    selected = list(checks) if checks is not None else list(CHECKS)
+    unknown = [c for c in selected if c not in CHECKS]
+    if unknown:
+        raise ValueError(f"unknown checks {unknown}; available: {list(CHECKS)}")
+    out: Dict[str, Findings] = {}
+    for name in selected:
+        if name == "precision":
+            from . import precision_flow
+
+            out[name] = precision_flow.run()
+        elif name == "kernels":
+            from . import kernel_check
+
+            out[name] = kernel_check.run(vmem_budget_mb)
+        elif name == "concurrency":
+            from . import concurrency
+
+            out[name] = concurrency.run(repo_root=repo_root)
+        elif name == "config":
+            from . import config_lint
+
+            out[name] = config_lint.run(repo_root=repo_root)
+    return out

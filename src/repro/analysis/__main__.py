@@ -1,0 +1,78 @@
+"""CLI: ``python -m repro.analysis [--check NAME]... [--strict]``.
+
+Exit status: 0 when clean (or when not ``--strict``), 1 when ``--strict``
+and any finding survived suppression.  ``--summary-out`` appends a one-line
+result (the CI job points it at ``$GITHUB_STEP_SUMMARY``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import CHECKS, format_findings, run_checks
+
+
+def _summary_line(results, elapsed: float) -> str:
+    total = sum(len(v) for v in results.values())
+    per = ", ".join(f"{k}: {len(v)}" for k, v in results.items())
+    status = "clean" if total == 0 else f"{total} finding(s)"
+    return (
+        f"static analysis: {status} ({per}) in {elapsed:.1f}s"
+    )
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verification: precision flow, kernel tiling, "
+        "concurrency and config discipline.",
+    )
+    parser.add_argument(
+        "--check",
+        action="append",
+        choices=CHECKS,
+        help="run only this pass (repeatable; default: all)",
+    )
+    parser.add_argument(
+        "--strict", action="store_true", help="exit 1 on any finding"
+    )
+    parser.add_argument(
+        "--vmem-budget-mb",
+        type=float,
+        default=None,
+        help="VMEM budget for K003 (default: REPRO_ANALYSIS_VMEM_MB, 16.0)",
+    )
+    parser.add_argument(
+        "--repo-root", default=".", help="tree the AST passes lint (default: cwd)"
+    )
+    parser.add_argument(
+        "--summary-out",
+        default=None,
+        help="append a one-line summary to this file (e.g. $GITHUB_STEP_SUMMARY)",
+    )
+    args = parser.parse_args(argv)
+
+    t0 = time.time()
+    results = run_checks(
+        args.check, repo_root=args.repo_root, vmem_budget_mb=args.vmem_budget_mb
+    )
+    elapsed = time.time() - t0
+
+    total = 0
+    for name, findings in results.items():
+        print(f"[{name}] {len(findings)} finding(s)")
+        if findings:
+            print(format_findings(findings))
+        total += len(findings)
+    line = _summary_line(results, elapsed)
+    print(line)
+    if args.summary_out:
+        with open(args.summary_out, "a", encoding="utf-8") as fh:
+            fh.write(line + "\n")
+    return 1 if (args.strict and total) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

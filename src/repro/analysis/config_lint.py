@@ -1,0 +1,165 @@
+"""Config lints: every REPRO_* knob flows through one declared registry.
+
+  * **E001** — AST pass over the source tree: any ``os.environ[...]``,
+    ``os.environ.get(...)`` or ``os.getenv(...)`` *read* of a ``REPRO_*``
+    name outside ``configs/env.py`` bypasses the registry (no type
+    discipline, no default, invisible to the docs sync).  Writes —
+    ``os.environ[...] = ...``, ``.setdefault``, ``.pop``, ``del`` — are
+    allowed: pinning a knob for a subprocess or a trace is how the registry
+    itself is *driven*.
+
+  * **E002** — the registry and the README agree both ways: every declared
+    knob appears in the README, and every ``REPRO_*`` token the README
+    mentions is a declared knob (docs for deleted knobs rot fast).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Optional, Tuple
+
+from .findings import Finding, Findings, filter_suppressed
+
+__all__ = [
+    "DEFAULT_TARGETS",
+    "find_raw_env_reads",
+    "check_file",
+    "check_readme_sync",
+    "run",
+]
+
+DEFAULT_TARGETS = ("src/repro", "benchmarks")
+_EXCLUDE_SUFFIXES = (os.path.join("configs", "env.py"),)
+_REPRO_RE = re.compile(r"\bREPRO_[A-Z0-9_]+\b")
+
+
+def _repro_name(node: ast.AST) -> Optional[str]:
+    """The REPRO_* string constant a call/subscript argument carries."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        if node.value.startswith("REPRO_"):
+            return node.value
+    return None
+
+
+def _is_os_environ(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == "environ"
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "os"
+    )
+
+
+def find_raw_env_reads(source: str, path: str = "<string>") -> Findings:
+    """E001 findings for one module's source text."""
+    tree = ast.parse(source, filename=path)
+    findings: List[Finding] = []
+
+    def flag(name: str, lineno: int, how: str) -> None:
+        findings.append(
+            Finding(
+                "E001",
+                f"raw {how} read of {name} — route it through"
+                f" repro.configs.env (declared knobs only)",
+                file=path,
+                line=lineno,
+            )
+        )
+
+    for node in ast.walk(tree):
+        # os.getenv("REPRO_X")  /  os.environ.get("REPRO_X")
+        if isinstance(node, ast.Call):
+            func = node.func
+            if (
+                isinstance(func, ast.Attribute)
+                and func.attr == "getenv"
+                and isinstance(func.value, ast.Name)
+                and func.value.id == "os"
+            ):
+                name = _repro_name(node.args[0]) if node.args else None
+                if name:
+                    flag(name, node.lineno, "os.getenv")
+            elif (
+                isinstance(func, ast.Attribute)
+                and func.attr == "get"
+                and _is_os_environ(func.value)
+            ):
+                name = _repro_name(node.args[0]) if node.args else None
+                if name:
+                    flag(name, node.lineno, "os.environ.get")
+        # os.environ["REPRO_X"] in Load context (stores/deletes are writes)
+        elif isinstance(node, ast.Subscript):
+            if _is_os_environ(node.value) and isinstance(node.ctx, ast.Load):
+                name = _repro_name(node.slice)
+                if name:
+                    flag(name, node.lineno, "os.environ[]")
+    return filter_suppressed(findings, source.splitlines())
+
+
+def check_file(path: str, repo_root: str = ".") -> Findings:
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    rel = os.path.relpath(path, repo_root)
+    return find_raw_env_reads(source, rel)
+
+
+def check_readme_sync(
+    knob_names: Iterable[str], readme_text: str, readme_path: str = "README.md"
+) -> Findings:
+    """E002: registry <-> README, both directions."""
+    declared = set(knob_names)
+    documented = set(_REPRO_RE.findall(readme_text))
+    findings: List[Finding] = []
+    for name in sorted(declared - documented):
+        findings.append(
+            Finding(
+                "E002",
+                f"knob {name} is declared in repro/configs/env.py but"
+                f" undocumented in {readme_path}",
+                file=readme_path,
+            )
+        )
+    for name in sorted(documented - declared):
+        findings.append(
+            Finding(
+                "E002",
+                f"{readme_path} documents {name}, which is not declared in"
+                f" repro/configs/env.py (deleted or misspelled knob)",
+                file=readme_path,
+            )
+        )
+    return findings
+
+
+def _iter_py(target: str) -> List[str]:
+    if os.path.isfile(target):
+        return [target]
+    out = []
+    for dirpath, _, files in os.walk(target):
+        out.extend(
+            os.path.join(dirpath, f) for f in sorted(files) if f.endswith(".py")
+        )
+    return out
+
+
+def run(
+    targets: Tuple[str, ...] = DEFAULT_TARGETS, repo_root: str = "."
+) -> Findings:
+    findings: List[Finding] = []
+    for target in targets:
+        full = target if os.path.isabs(target) else os.path.join(repo_root, target)
+        if not os.path.exists(full):
+            continue
+        for path in _iter_py(full):
+            if any(path.endswith(suffix) for suffix in _EXCLUDE_SUFFIXES):
+                continue
+            findings.extend(check_file(path, repo_root))
+    readme = os.path.join(repo_root, "README.md")
+    if os.path.exists(readme):
+        from ..configs.env import KNOBS
+
+        with open(readme, encoding="utf-8") as fh:
+            findings.extend(check_readme_sync(KNOBS, fh.read()))
+    return findings

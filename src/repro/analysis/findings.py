@@ -1,0 +1,98 @@
+"""Finding/rule infrastructure shared by every ``repro.analysis`` pass.
+
+Each rule has a stable ID (table below, mirrored in the README's "Static
+analysis" section); findings carry ``file:line`` when they anchor to source
+and a synthetic location (``<trace:...>``) when they anchor to a traced
+computation.  A finding on a source line can be suppressed with an inline
+``# repro: ignore[RULE]`` comment on that line — grep-able, per-rule, and
+deliberately loud in review diffs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional
+
+__all__ = ["RULES", "Finding", "Findings", "is_suppressed", "format_findings"]
+
+# Stable rule IDs.  Never renumber: suppression comments and CI baselines
+# reference these strings.
+RULES: Dict[str, str] = {
+    # Precision-flow verifier (jaxpr-level)
+    "P001": "undeclared upcast: a conversion widens into a dtype the policy never declares",
+    "P002": "double rounding: value cast down then back up through an undeclared dtype",
+    "P003": "phase leak: arithmetic executes in a dtype foreign to the declared phase",
+    "P004": "model divergence: phase_op_counts disagrees with the jaxpr-measured counts",
+    # Pallas kernel static checker
+    "K001": "tile does not divide the padded layout dims of the kernel grid",
+    "K002": "index map addresses a block outside the operand bounds",
+    "K003": "estimated VMEM footprint of the kernel's refs exceeds the budget",
+    "K004": "grid-pinned accumulator output written along a parallel grid dimension",
+    # Concurrency lints (AST-level)
+    "C001": "field declared in _GUARDED_BY mutated outside a `with self.<lock>` block",
+    "C002": "lock acquisition order violation between scheduler and session locks",
+    # Config lints
+    "E001": "raw os.environ/os.getenv read of a REPRO_* knob bypassing configs/env.py",
+    "E002": "env-knob registry and README documentation out of sync",
+}
+
+_IGNORE_RE = re.compile(r"#\s*repro:\s*ignore\[([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verified problem: a stable rule ID, a location, and the story."""
+
+    rule: str
+    message: str
+    file: str = ""  # repo-relative path, or "" for trace-anchored findings
+    line: int = 0
+    context: str = ""  # e.g. "FDF/single/fused" or a kernel/tile label
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise ValueError(f"unknown rule ID {self.rule!r}; known: {sorted(RULES)}")
+
+    def location(self) -> str:
+        if self.file:
+            return f"{self.file}:{self.line}" if self.line else self.file
+        return f"<{self.context}>" if self.context else "<trace>"
+
+    def __str__(self) -> str:
+        ctx = f" [{self.context}]" if self.context and self.file else ""
+        return f"{self.rule} {self.location()}{ctx}: {self.message}"
+
+
+Findings = List[Finding]
+
+
+def is_suppressed(source_line: str, rule: str) -> bool:
+    """True when ``source_line`` carries ``# repro: ignore[...]`` naming ``rule``."""
+    m = _IGNORE_RE.search(source_line)
+    if not m:
+        return False
+    rules = {r.strip() for r in m.group(1).split(",")}
+    return rule in rules
+
+
+def filter_suppressed(
+    findings: Iterable[Finding], source_lines: Optional[List[str]]
+) -> Findings:
+    """Drop findings whose anchoring source line suppresses their rule."""
+    if source_lines is None:
+        return list(findings)
+    kept = []
+    for f in findings:
+        if f.line and 1 <= f.line <= len(source_lines):
+            if is_suppressed(source_lines[f.line - 1], f.rule):
+                continue
+        kept.append(f)
+    return kept
+
+
+def format_findings(findings: Iterable[Finding]) -> str:
+    fs = list(findings)
+    if not fs:
+        return "no findings"
+    return "\n".join(str(f) for f in fs)

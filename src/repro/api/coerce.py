@@ -19,13 +19,13 @@ whenever the input provides it.
 from __future__ import annotations
 
 import hashlib
-import os
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..configs import env as envcfg
 from ..core.operators import (
     CallableOperator,
     DenseOperator,
@@ -84,7 +84,7 @@ def _validate_values(data, storage_dtype, what: str) -> None:
     scan, paid once per session build — never per solve.
     ``REPRO_VALIDATE_INPUT=0`` is the kill switch.
     """
-    if os.environ.get("REPRO_VALIDATE_INPUT", "1").lower() in ("0", "false", "off"):
+    if not envcfg.get_bool("REPRO_VALIDATE_INPUT"):
         return
     arr = np.asarray(data)
     if not np.issubdtype(arr.dtype, np.floating):

@@ -26,13 +26,15 @@ from __future__ import annotations
 import os
 from typing import Optional
 
+from ..configs import env as envcfg
+
 __all__ = ["BACKENDS", "CHUNKED_NNZ_THRESHOLD", "select_backend", "host_available_bytes"]
 
 BACKENDS = ("single", "distributed", "restarted", "chunked")
 
 # nnz above which an in-core COO copy (val f32 + row/col i32 = 12 B/nnz) is
 # deemed too large to keep device-resident; overridable for experiments.
-CHUNKED_NNZ_THRESHOLD = int(os.environ.get("REPRO_EIGSH_CHUNK_NNZ", 25_000_000))
+CHUNKED_NNZ_THRESHOLD = envcfg.get_int("REPRO_EIGSH_CHUNK_NNZ")
 
 _MATRIX_BACKENDS = ("distributed", "chunked")
 

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..configs import env as envcfg
 from ..core.distributed import PreparedShards, prepare_sharded, solve_sharded
 from ..core.eigensolver import ritz_decompose, ritz_extract, solve_fixed
 from ..core.lanczos import LanczosResult, NumericalBreakdown, lanczos_tridiag_multi
@@ -378,6 +379,12 @@ class EigenSession:
       prepare_s: wall seconds the eager plan phase took.
       stats: {"queries", "sweeps", "cache_hits"} counters.
     """
+
+    # Checked by repro.analysis C001: the prepared-plan cache is mutated
+    # only under the build lock (queries hold _query_lock, which is a
+    # different lock — reads of _prepared race only with idempotent
+    # inserts, and insertion goes through _build_lock).
+    _GUARDED_BY = {"_prepared": "_build_lock"}
 
     def __init__(
         self,
@@ -1169,6 +1176,30 @@ class EigenSession:
                 reorth=q.reorth,
             ),
         }
+        # Jaxpr-measured counterpart (repro.analysis P004 ground truth):
+        # traces the session's own operator — no execution, no data copies —
+        # so it is opt-in; a trace failure degrades to an error note, never
+        # a failed solve.
+        if envcfg.get_bool("REPRO_PRECISION_MEASURE"):
+            if prep.operator is None:
+                spmv["precision"]["ops_by_dtype_measured"] = {
+                    "error": "no single-device operator to trace (distributed plan)"
+                }
+            else:
+                try:
+                    from ..analysis.precision_flow import measure_session_ops
+
+                    spmv["precision"]["ops_by_dtype_measured"] = measure_session_ops(
+                        q.pol,
+                        prep.operator,
+                        backend=q.backend,
+                        m=max(int(iterations), 1),
+                        k=q.k,
+                        reorth=q.reorth,
+                        jacobi=q.jacobi,
+                    )
+                except Exception as exc:  # pragma: no cover - defensive
+                    spmv["precision"]["ops_by_dtype_measured"] = {"error": str(exc)}
         part["spmv"] = spmv
         res = EigenResult(
             eigenvalues=eigenvalues,
@@ -1646,7 +1677,7 @@ _CACHE_LOCK = threading.Lock()  # eigsh() must stay safe to call concurrently
 
 def _cache_limit() -> int:
     try:
-        return int(os.environ.get("REPRO_EIGSH_SESSION_CACHE", "8"))
+        return envcfg.get_int("REPRO_EIGSH_SESSION_CACHE")
     except ValueError:
         return 8
 
@@ -1656,7 +1687,7 @@ def _cache_budget_bytes() -> int:
     problem data alone exceeds it is never cached — the out-of-core sizes
     the chunked backend exists for must not stay pinned after the call."""
     try:
-        return int(float(os.environ.get("REPRO_EIGSH_SESSION_CACHE_MB", "2048")) * 1e6)
+        return int(envcfg.get_float("REPRO_EIGSH_SESSION_CACHE_MB") * 1e6)
     except ValueError:
         return 2_048_000_000
 

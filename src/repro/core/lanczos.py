@@ -47,13 +47,13 @@ fused update; ``REPRO_ITER_UPDATE`` pins the exact mode at the plan layer.
 from __future__ import annotations
 
 import dataclasses
-import os
 from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..configs import env as envcfg
 from ..testing import faults as _faults
 from .precision import PrecisionPolicy, compensated_sum
 
@@ -180,7 +180,7 @@ def fused_update_enabled(policy: PrecisionPolicy) -> bool:
     and a per-phase ``alpha_beta`` override splits the fused norm's dtype
     away from the recurrence's, so it keeps the reference path too;
     ``REPRO_FUSED_LANCZOS=0`` is the kill switch."""
-    if os.environ.get("REPRO_FUSED_LANCZOS", "1").lower() in ("0", "false", "off"):
+    if not envcfg.get_bool("REPRO_FUSED_LANCZOS"):
         return False
     if policy.compensated:
         return False
@@ -206,7 +206,7 @@ def resolve_update_mode(policy: PrecisionPolicy, plan=None, fused: Optional[bool
         return "fused" if (fused and fused_update_enabled(policy)) else "unfused"
     if not fused_update_enabled(policy):
         return "unfused"
-    pin = os.environ.get("REPRO_ITER_UPDATE", "").strip().lower()
+    pin = (envcfg.get_str("REPRO_ITER_UPDATE") or "").strip().lower()
     if pin:
         # Same pin resolve_iteration_plan honors — re-checked here so it
         # also reaches warm sessions whose plan was built before the pin.
@@ -217,7 +217,7 @@ def resolve_update_mode(policy: PrecisionPolicy, plan=None, fused: Optional[bool
                 f"REPRO_ITER_UPDATE={pin!r}: expected one of {ITER_UPDATE_MODES}"
             )
         return pin
-    env = os.environ.get("REPRO_FUSED_LANCZOS", "").strip().lower()
+    env = (envcfg.raw("REPRO_FUSED_LANCZOS") or "").strip().lower()
     if env in ("1", "true", "on", "yes"):
         if plan is not None and plan.update != "unfused":
             return plan.update

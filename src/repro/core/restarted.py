@@ -43,7 +43,49 @@ from .lanczos import LanczosResult, NumericalBreakdown
 from .operators import LinearOperator
 from .precision import FDF, PrecisionPolicy
 
-__all__ = ["RestartedSolveOutput", "solve_restarted", "topk_eigs_restarted"]
+__all__ = [
+    "RestartedSolveOutput",
+    "restart_kernels",
+    "ritz_project",
+    "solve_restarted",
+    "topk_eigs_restarted",
+]
+
+
+def restart_kernels(policy: PrecisionPolicy):
+    """The restarted engine's jitted vector kernels ``(dot, orth)``.
+
+    Module-level (rather than closures inside :func:`solve_restarted`) so the
+    precision-flow verifier (``repro.analysis``) traces the *same* callables
+    the engine executes — the declared phase map is checked against the real
+    lowering, not a re-implementation.
+    """
+    policy = policy.effective()
+    cdt = policy.compute
+    abdt = policy.phase_dtype("alpha_beta")
+    rdt = policy.phase_dtype("reorth")
+
+    @jax.jit
+    def dot(a, b):
+        return jnp.sum(a.astype(abdt) * b.astype(abdt)).astype(cdt)
+
+    @jax.jit
+    def orth(u, basis, nvalid_mask):
+        coeffs = (basis.astype(rdt) @ u.astype(rdt)) * nvalid_mask.astype(rdt)
+        return (u.astype(rdt) - coeffs @ basis.astype(rdt)).astype(cdt)
+
+    return dot, orth
+
+
+def ritz_project(basis: jax.Array, wk: jax.Array, policy: PrecisionPolicy, out_dtype=None):
+    """Ritz back-projection ``V^T @ W_k`` in the policy's ritz phase dtype.
+
+    Shared by the restart compression, the final eigenvector assembly, and
+    the precision-flow verifier's ritz-phase trace.
+    """
+    rzdt = policy.phase_dtype("ritz")
+    x = basis.astype(rzdt).T @ wk.astype(rzdt)
+    return x.astype(out_dtype if out_dtype is not None else policy.output)
 
 
 class RestartedSolveOutput(NamedTuple):
@@ -88,8 +130,6 @@ def solve_restarted(
     """
     policy = policy.effective()
     cdt, sdt = policy.compute, policy.storage
-    abdt = policy.phase_dtype("alpha_beta")  # alpha/beta reduction phase
-    rdt = policy.phase_dtype("reorth")  # re-orthogonalization phase
     rzdt = policy.phase_dtype("ritz")  # Ritz/restart arithmetic phase
     n = op.n
     m = m or max(2 * k, k + 8)
@@ -97,15 +137,7 @@ def solve_restarted(
     if max_restarts < 1:
         raise ValueError(f"max_restarts must be >= 1, got {max_restarts}")
     mv = op.bound_matvec(policy)
-
-    @jax.jit
-    def _dot(a, b):
-        return jnp.sum(a.astype(abdt) * b.astype(abdt)).astype(cdt)
-
-    @jax.jit
-    def _orth(u, basis, nvalid_mask):
-        coeffs = (basis.astype(rdt) @ u.astype(rdt)) * nvalid_mask.astype(rdt)
-        return (u.astype(rdt) - coeffs @ basis.astype(rdt)).astype(cdt)
+    _dot, _orth = restart_kernels(policy)
 
     t0 = time.perf_counter()
     if v1 is None:
@@ -200,7 +232,7 @@ def solve_restarted(
         # --- thick restart: compress to top-k Ritz vectors + residual dir ---
         restarts += 1
         wk = jnp.asarray(w[:, :k], dtype=rzdt)
-        ritz = (basis.astype(rzdt).T @ wk).T  # (k, n)
+        ritz = ritz_project(basis, wk, policy, out_dtype=rzdt).T  # (k, n)
         new_basis = jnp.zeros((m, n), sdt)
         new_basis = new_basis.at[:k].set(ritz.astype(sdt))
         basis = new_basis
@@ -235,7 +267,7 @@ def solve_restarted(
         store.clear(token)  # completed: the snapshot must not resurrect
     evals_k = jnp.asarray(evals[:k], dtype=policy.output)
     wk = jnp.asarray(w[:, :k], dtype=rzdt)
-    x = (basis.astype(rzdt).T @ wk).astype(policy.output)
+    x = ritz_project(basis, wk, policy)
     lres = LanczosResult(
         alpha=jnp.asarray(np.diag(t_hat), cdt),
         beta=jnp.asarray(np.diag(t_hat, 1), cdt),

@@ -68,6 +68,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..configs import env as envcfg
+
 __all__ = [
     "FORMATS",
     "ITER_UPDATE_MODES",
@@ -104,10 +106,7 @@ HYBRID_MAX_TAIL = 0.6
 
 
 def _env_float(name: str, default: float) -> float:
-    try:
-        return float(os.environ[name])
-    except (KeyError, ValueError):
-        return default
+    return envcfg.get_float(name, default, lenient=True)
 
 
 def ell_overhead_bound() -> float:
@@ -229,7 +228,7 @@ def select_tiles(
     steps sequentially with high per-step overhead and has no VMEM ceiling,
     so it gets few, large tiles — same kernel code, tractable wall time.
     """
-    env = os.environ.get("REPRO_SPMV_TILES")
+    env = envcfg.get_str("REPRO_SPMV_TILES")
     if env:
         parts = [int(p) for p in env.split(",")]
         if len(parts) not in (2, 3):
@@ -264,7 +263,7 @@ _TUNABLE_FORMATS = ("ell", "hybrid")
 
 def tune_enabled() -> bool:
     """Measured tuning is opt-in: the static table is the default behavior."""
-    return os.environ.get("REPRO_SPMV_TUNE", "0").lower() in ("1", "true", "on", "yes")
+    return envcfg.get_bool("REPRO_SPMV_TUNE")
 
 
 class TileTuner:
@@ -370,7 +369,7 @@ _TUNER: Optional[TileTuner] = None
 def get_tuner() -> TileTuner:
     """Process-wide tuner bound to the current ``REPRO_SPMV_TUNE_CACHE``."""
     global _TUNER
-    path = os.environ.get("REPRO_SPMV_TUNE_CACHE") or DEFAULT_TUNE_CACHE
+    path = envcfg.raw("REPRO_SPMV_TUNE_CACHE") or DEFAULT_TUNE_CACHE
     if _TUNER is None or _TUNER.cache_path != path:
         _TUNER = TileTuner(path)
     return _TUNER
@@ -399,7 +398,7 @@ def _candidate_tiles(
 ) -> Tuple[TileConfig, ...]:
     """Small grid around the static-table prior (the prior is always in it,
     so a tuned choice can never be worse than the table on the probe)."""
-    budget = int(os.environ.get("REPRO_SPMV_TUNE_BUDGET", "6"))
+    budget = envcfg.get_int("REPRO_SPMV_TUNE_BUDGET")
     min_r = 16 if jnp.dtype(dtype).itemsize == 2 else 8
     if interpret:
         # The interpreter pays ~ms per grid step: only few-large-tile layouts
@@ -505,7 +504,7 @@ def tuned_tiles(
     ``REPRO_SPMV_TUNE_CACHE`` so each (shape-bucket, dtype, format, mode) is
     measured at most once per cache lifetime.
     """
-    if os.environ.get("REPRO_SPMV_TILES"):
+    if envcfg.get_str("REPRO_SPMV_TILES"):
         return select_tiles(n_rows, width, dtype, block_size, interpret), "override"
     prior = select_tiles(n_rows, width, dtype, block_size, interpret)
     if not tune_enabled() or format not in _TUNABLE_FORMATS or n_rows <= 0 or width <= 0:
@@ -720,7 +719,7 @@ def resolve_iteration_plan(
     resolved SpMV tile choice — the probe may refine it (ELL tile variants,
     BSR block edges), and :func:`make_engine` adopts the winner's tiles.
     """
-    env = os.environ.get("REPRO_ITER_UPDATE", "").strip().lower()
+    env = (envcfg.get_str("REPRO_ITER_UPDATE") or "").strip().lower()
     if env:
         if env not in ITER_UPDATE_MODES:
             raise ValueError(
@@ -736,7 +735,7 @@ def resolve_iteration_plan(
     if hit is not None:
         return hit
     candidates = _iter_candidates(format, tiles, interpret, tile_variants)
-    budget = int(os.environ.get("REPRO_SPMV_TUNE_BUDGET", "6"))
+    budget = envcfg.get_int("REPRO_SPMV_TUNE_BUDGET")
     candidates = candidates[: max(2, budget * 2)]
     timings, by_name = _measure_iteration(n_rows, width, dtype, format, candidates, interpret)
     tuner.measure_count += 1

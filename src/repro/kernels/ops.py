@@ -93,7 +93,16 @@ def mixed_dot(
     if acc == jnp.dtype(jnp.float64):
         return jnp.sum(a.astype(acc) * b.astype(acc))
     kw.setdefault("interpret", default_interpret())
-    out = mixed_dot_kernel_call(a, b, accum_dtype=acc, compensated=compensated, **kw)
+    # Zero-pad up to the kernel block (padding lanes contribute nothing to
+    # the sum or its compensation) — mirrors lanczos_update below.
+    n = a.shape[0]
+    block = min(kw.pop("block", 4096), n)
+    pad = (-n) % block
+    if pad:
+        a, b = jnp.pad(a, (0, pad)), jnp.pad(b, (0, pad))
+    out = mixed_dot_kernel_call(
+        a, b, block=block, accum_dtype=acc, compensated=compensated, **kw
+    )
     return out.sum()
 
 

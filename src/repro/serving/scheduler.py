@@ -157,6 +157,10 @@ class QueryHandle:
     request died with.  ``cancel()`` withdraws a still-queued request.
     """
 
+    # Checked by repro.analysis rule C001: these fields are only mutated
+    # while holding the named lock (dispatch/cancel race on them).
+    _GUARDED_BY = {"_cancelled": "_lock", "_started": "_lock"}
+
     def __init__(self, matrix: str, query, group_key: Optional[tuple], deadline: Optional[float]):
         self.matrix = matrix
         self.query = query
@@ -243,6 +247,20 @@ class EigenScheduler:
     paused — submissions queue but nothing dispatches until :meth:`start` —
     which is also the deterministic way to test backpressure and deadlines.
     """
+
+    # Checked by repro.analysis rule C001.  Everything the dispatch thread
+    # and submitters share is guarded by the scheduler condition variable
+    # (``_cv`` wraps ``_lock``); ``_thread``/``_watchdog`` are lifecycle
+    # handles owned by start()/close() callers and deliberately absent.
+    _GUARDED_BY = {
+        "_sessions": "_cv",
+        "_queue": "_cv",
+        "_running": "_cv",
+        "_closed": "_cv",
+        "_crashed": "_cv",
+        "_inflight": "_cv",
+        "_breakers": "_cv",
+    }
 
     def __init__(
         self,
@@ -504,7 +522,7 @@ class EigenScheduler:
             return True
         return False
 
-    def _take_compatible(self, seed: QueryHandle, room: int) -> List[QueryHandle]:
+    def _take_compatible(self, seed: QueryHandle, room: int) -> List[QueryHandle]:  # repro: holds[_cv]
         """Pull every queued request coalescible with ``seed`` (same matrix,
         same non-None group key), resolving dead ones along the way.  Caller
         holds the lock."""

@@ -33,6 +33,8 @@ from typing import Optional
 
 import numpy as np
 
+from ..configs import env as envcfg
+
 __all__ = [
     "SessionStore",
     "SolveCheckpoint",
@@ -48,7 +50,7 @@ _CKPT_SCHEMA = 1
 def default_store_root() -> str:
     """Default store location: ``REPRO_SERVING_STORE`` if set, else a
     ``serving_store`` directory next to the SpMV tune cache."""
-    env = os.environ.get("REPRO_SERVING_STORE")
+    env = envcfg.get_str("REPRO_SERVING_STORE")
     if env:
         return env
     from ..kernels.engine import DEFAULT_TUNE_CACHE
@@ -170,7 +172,7 @@ class SessionStore:
 def default_checkpoint_root() -> str:
     """Default checkpoint location: ``REPRO_SOLVE_CHECKPOINTS`` if set, else
     a ``solve_checkpoints`` directory next to the SpMV tune cache."""
-    env = os.environ.get("REPRO_SOLVE_CHECKPOINTS")
+    env = envcfg.get_str("REPRO_SOLVE_CHECKPOINTS")
     if env:
         return env
     from ..kernels.engine import DEFAULT_TUNE_CACHE

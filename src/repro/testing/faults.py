@@ -59,9 +59,10 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import os
 import threading
 from typing import Optional, Union
+
+from ..configs import env as envcfg
 
 __all__ = [
     "FAULT_KINDS",
@@ -182,7 +183,7 @@ _env_cache: dict[str, list[FaultSpec]] = {}
 
 
 def _env_specs() -> list[FaultSpec]:
-    raw = os.environ.get(_ENV_VAR, "").strip()
+    raw = (envcfg.get_str(_ENV_VAR) or "").strip()
     if not raw:
         return []
     cached = _env_cache.get(raw)
