@@ -1,0 +1,158 @@
+"""Out-of-core smoke: solve an on-disk matrix under a host budget an order
+of magnitude smaller than the matrix.
+
+The driver:
+
+  1. synthesizes a banded ring graph, persists it as a diskcsr directory
+     (``repro.sparse.save_diskcsr``), and drops every in-RAM copy;
+  2. measures the process's anonymous-memory baseline (``VmData``) and caps
+     it with ``RLIMIT_DATA = baseline + payload // 10`` — the *solve* gets
+     one tenth of the matrix as its host budget (file-backed memmap pages
+     are not charged against RLIMIT_DATA, which is exactly the contract
+     under test: the payload must stream from disk, never live on the heap);
+  3. runs ``eigsh(path, ..., backend="chunked")`` end to end under that cap
+     and prints the staging counters the partition reports.
+
+Any allocation that tries to materialize the matrix (the pre-fix operator
+pinned every chunk up front) trips the rlimit and fails the job.  Exit code
+is the gate; run it via ``python -m benchmarks.oocore_smoke``.
+"""
+
+import argparse
+import gc
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+K = 4
+ITERS = 8
+BUDGET_DIV = 10
+
+
+def build_ring_csr(n: int, deg: int):
+    """Symmetric banded ring lattice: each row connects to ``deg`` nearest
+    neighbours (deg/2 each side) with deterministic weights — O(n*deg) to
+    build with pure NumPy, no scipy round-trip, exactly ``deg`` nnz per row."""
+    from repro.sparse.formats import CSR
+
+    half = deg // 2
+    offs = np.concatenate([np.arange(-half, 0), np.arange(1, half + 1)])
+    rows = np.repeat(np.arange(n, dtype=np.int64), offs.size)
+    cols = (rows + np.tile(offs, n)) % n
+    # symmetric weights: depend on the unordered pair, normalized per row
+    w = 1.0 / (1.0 + np.abs(np.tile(offs, n)).astype(np.float64))
+    order = np.lexsort((cols, rows))
+    indices = cols[order].astype(np.int32)
+    data = (w[order] / deg).astype(np.float64)
+    indptr = np.arange(0, n * offs.size + 1, offs.size, dtype=np.int64)
+    return CSR(indptr=indptr, indices=indices, data=data, shape=(n, n))
+
+
+def vmdata_kb() -> int:
+    """Anonymous data-segment size of this process (kB), from /proc."""
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmData:"):
+                return int(line.split()[1])
+    raise RuntimeError("VmData not found in /proc/self/status")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1 << 18)
+    ap.add_argument("--deg", type=int, default=96)
+    ap.add_argument("--budget-div", type=int, default=BUDGET_DIV)
+    ap.add_argument("--chunk-nnz", type=int, default=1 << 16)
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument(
+        "--no-rlimit", action="store_true",
+        help="skip the RLIMIT_DATA cap (non-Linux debugging)",
+    )
+    args = ap.parse_args(argv)
+
+    from repro.sparse import save_diskcsr
+
+    workdir = args.workdir or tempfile.mkdtemp(prefix="oocore-")
+    path = os.path.join(workdir, f"ring-n{args.n}-d{args.deg}")
+    csr = build_ring_csr(args.n, args.deg)
+    save_diskcsr(path, csr)
+    payload = int(csr.data.nbytes + csr.indices.nbytes + csr.indptr.nbytes)
+    del csr
+    gc.collect()
+
+    # Import + warm the solver stack BEFORE the cap: the budget charges the
+    # solve (chunk windows, Lanczos vectors, compiled executables), not the
+    # interpreter/JAX baseline (runtime threads, dispatch machinery) that
+    # exists either way — a tiny in-RAM chunked solve forces all of it up.
+    from repro.api import eigsh, session_cache_clear
+
+    # Same n / chunk_nnz / m as the gated solve but a near-empty payload:
+    # compiles the same executables and grows the allocator arenas once,
+    # outside the budget, without ever holding the big matrix in RAM.
+    warm = build_ring_csr(args.n, 2)
+    eigsh(warm, K, policy="FFF", num_iters=ITERS, backend="chunked",
+          format="coo", chunk_nnz=args.chunk_nnz, stage_depth=1)
+    session_cache_clear()
+    del warm
+    gc.collect()
+
+    budget = payload // args.budget_div
+    use_rlimit = not args.no_rlimit and sys.platform.startswith("linux")
+    if use_rlimit:
+        import resource
+
+        baseline_kb = vmdata_kb()
+        limit = baseline_kb * 1024 + budget
+        soft, hard = resource.getrlimit(resource.RLIMIT_DATA)
+        resource.setrlimit(
+            resource.RLIMIT_DATA,
+            (limit, hard if hard != resource.RLIM_INFINITY else resource.RLIM_INFINITY),
+        )
+        print(
+            f"# payload={payload / 1e6:.1f}MB budget={budget / 1e6:.1f}MB "
+            f"(payload/{args.budget_div}) baseline VmData={baseline_kb / 1e3:.1f}MB"
+        )
+    else:
+        print(f"# payload={payload / 1e6:.1f}MB budget={budget / 1e6:.1f}MB (rlimit OFF)")
+
+    try:
+        res = eigsh(
+            path, K, policy="FFF", num_iters=ITERS, backend="chunked",
+            format="coo", chunk_nnz=args.chunk_nnz, stage_depth=1,
+        )
+    finally:
+        if use_rlimit:
+            resource.setrlimit(resource.RLIMIT_DATA, (soft, hard))
+
+    lam = np.asarray(res.eigenvalues, np.float64)
+    if not np.all(np.isfinite(lam)):
+        print("FAIL: non-finite eigenvalues", lam)
+        return 1
+    part = res.partition
+    st = part["spmv"]["staging"]
+    print(
+        f"# solved n={args.n} nnz={args.n * args.deg} on disk: "
+        f"lambda_max={lam.max():.6f} chunks={part['num_chunks']} "
+        f"disk_backed={part['disk_backed']}"
+    )
+    print(
+        f"# staging: transfers={st['transfers']} "
+        f"bytes_staged={st['bytes_staged'] / 1e6:.1f}MB "
+        f"bandwidth={st['effective_bandwidth_gbps']:.2f}GB/s "
+        f"compression={st['compression_ratio']:.2f}x mode={st['mode']} "
+        f"max_resident={st['max_resident']}"
+    )
+    if not part["disk_backed"]:
+        print("FAIL: solve did not run disk-backed")
+        return 1
+    if st["bytes_staged"] <= 0 or st["transfers"] < part["num_chunks"]:
+        print("FAIL: staging counters empty — chunks were not streamed")
+        return 1
+    print(f"# OK: {payload / max(budget, 1)}x matrix solved under the budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,17 +47,27 @@ __all__ = [
     "run",
 ]
 
-KERNELS = ("spmv_ell", "spmv_bsr", "lanczos_update", "lanczos_fused", "mixed_dot")
+KERNELS = (
+    "spmv_ell",
+    "spmv_ell_packed",
+    "spmv_bsr",
+    "lanczos_update",
+    "lanczos_fused",
+    "mixed_dot",
+)
 
 # Which grid dims each kernel's DESIGN permits to execute in parallel.
 # Everything else is sequential (TPU grids execute minor-to-major in order;
 # the kernels rely on that for their accumulator patterns):
 #   spmv_ell / spmv_bsr: row tiles (dim 0) are independent — the width/slot
 #     sweep (dim 1) accumulates into the pinned row-tile output;
+#   spmv_ell_packed: 1-D grid of independent row tiles (the delta cumsum
+#     keeps the full width in one tile, so there is no accumulator at all);
 #   lanczos_update / mixed_dot / lanczos_fused: a scalar accumulator is
 #     pinned across the whole grid, so NO dim may be parallel.
 PARALLEL_DIMS: Dict[str, FrozenSet[int]] = {
     "spmv_ell": frozenset({0}),
+    "spmv_ell_packed": frozenset({0}),
     "spmv_bsr": frozenset({0}),
     "lanczos_update": frozenset(),
     "lanczos_fused": frozenset(),
@@ -312,6 +322,47 @@ def run(
                     context=f"spmv_bsr/{dname}/bs{bs}",
                 )
             )
+
+    # Packed-ELL (compressed staging): 1-D row grid, full width per tile.
+    # The staging layer builds rows_pad at the STAGED dtype's sublane
+    # minimum (bf16: 16, fp8: 32) and block_r adapts via _fit_tile, so
+    # the universe is the packed dtypes x index widths x row tiles.
+    from ..kernels.engine import _fit_tile as _fit
+    from ..kernels.spmv_ell_packed import (
+        PACKED_VALUE_DTYPES,
+        spmv_ell_packed_kernel_call,
+    )
+
+    wpadp = _pad_to(width, 128)
+    for pmode, vdt in sorted(PACKED_VALUE_DTYPES.items()):
+        min_r = {1: 32, 2: 16}.get(np.dtype(vdt).itemsize, 8)
+        rpadp = _pad_to(rows, min_r)
+        for idt in (jnp.int16, jnp.int32):
+            for want_br in (8, 16, 32):
+                br = _fit(max(want_br, min_r), rpadp)
+                pval = jax.ShapeDtypeStruct((rpadp, wpadp), np.dtype(vdt))
+                pscale = jax.ShapeDtypeStruct((rpadp, 1), f32)
+                pbase = jax.ShapeDtypeStruct((rpadp, 1), i32)
+                pdcol = jax.ShapeDtypeStruct((rpadp, wpadp), idt)
+                px = jax.ShapeDtypeStruct((rows,), f32)
+                for interp in (False, True):
+                    mode = "interp" if interp else "compiled"
+                    findings.extend(
+                        check_kernel_trace(
+                            lambda a, s, b, d, xx, _br=br, _i=interp: (
+                                spmv_ell_packed_kernel_call(
+                                    a, s, b, d, xx, block_r=_br,
+                                    accum_dtype=f32, interpret=_i,
+                                )
+                            ),
+                            (pval, pscale, pbase, pdcol, px),
+                            "spmv_ell_packed", vmem_budget=budget,
+                            context=(
+                                f"spmv_ell_packed/{pmode}/"
+                                f"{jnp.dtype(idt).name}/r{br}/{mode}"
+                            ),
+                        )
+                    )
 
     # Vector kernels: lengths that exercise the block clamp and the padding
     # wrappers (8000 is NOT a multiple of the 4096 default block — the ops.py

@@ -56,12 +56,14 @@ def select_backend(
     device_count: int = 1,
     free_bytes: Optional[int] = None,
     mesh_given: bool = False,
+    disk_bytes: Optional[int] = None,
 ) -> str:
     """Resolve ``backend="auto"`` (or validate an explicit request).
 
     Args:
       requested: "auto" or one of BACKENDS.
-      has_matrix: input coerced to an explicit host CSR.
+      has_matrix: input coerced to an explicit host CSR (disk-backed DiskCSR
+        mappings count: they can be re-partitioned/chunked from disk).
       nnz: non-zeros of that CSR (0 for matrix-free inputs).
       tol: requested convergence tolerance (None = fixed-iteration mode).
       device_count: visible (or mesh-provided) device count.
@@ -69,6 +71,10 @@ def select_backend(
       mesh_given: the caller passed an explicit ``jax.sharding.Mesh`` — under
         "auto" that is an explicit request for the distributed path and must
         not be silently dropped (e.g. when ``tol`` would pick restarted).
+      disk_bytes: on-disk payload size of a disk-backed (DiskCSR) input, or
+        None for in-RAM inputs.  Under "auto", a disk matrix whose payload
+        exceeds half the free host memory MUST stream: every other backend
+        would materialize it.
     """
     if requested != "auto":
         if requested not in BACKENDS:
@@ -81,6 +87,15 @@ def select_backend(
                 "operators can't be — pass the host CSR instead"
             )
         return requested
+
+    # Host-memory pressure rule for disk-backed inputs: a mapping bigger than
+    # the budget cannot be materialized by ANY other backend, so it overrides
+    # even tol/device-count preferences (the chunked engine honors tol=None
+    # fixed-m semantics; restarted-on-disk would page-thrash or OOM).
+    if disk_bytes is not None and has_matrix:
+        free = free_bytes if free_bytes is not None else host_available_bytes()
+        if free is None or disk_bytes > free // 2:
+            return "chunked"
 
     if mesh_given:
         if not has_matrix:

@@ -124,6 +124,12 @@ class SolverConfig:
     format: str = "auto"
     chunk_nnz: int = 1 << 20  # chunked backend: device-resident nnz per chunk
     stage_depth: int = 1  # chunked backend: chunks prefetched ahead of compute
+    # Chunked backend: how staged ELL chunks travel host -> device.  "f32"
+    # ships plain storage-dtype buffers; "bf16"/"fp8" quantize values (with
+    # per-row-block scales) and delta-encode columns, decompressed in-kernel
+    # (kernels/spmv_ell_packed) for 2-4x effective staging bandwidth; "auto"
+    # packs when the policy's storage dtype is already narrow.
+    staging: str = "f32"
     jacobi: str = "host"  # phase-2 placement, "host" (paper) or "jax"
     axis: str = "data"  # mesh axis name for the distributed backend
     # Breakdown handling: "raise" (default — the in-loop health probe turns
@@ -187,6 +193,7 @@ def eigsh(
     impl: Optional[str] = None,
     chunk_nnz: int = 1 << 20,
     stage_depth: int = 1,
+    staging: str = "f32",
     jacobi: str = "host",
     mesh=None,
     axis: str = "data",
@@ -197,9 +204,11 @@ def eigsh(
     """Top-K eigenpairs (largest |lambda|) of a symmetric operator.
 
     Args:
-      A: dense array, ``repro.sparse.CSR``, scipy sparse matrix,
-        ``LinearOperator`` (ours or scipy's), or a bare matvec callable
-        (then pass ``n=``).
+      A: dense array, ``repro.sparse.CSR``, scipy sparse matrix, a
+        ``repro.sparse.DiskCSR`` mapping or the path of a ``save_diskcsr``
+        directory (out-of-core: the matrix streams from disk and is never
+        fully materialized), ``LinearOperator`` (ours or scipy's), or a bare
+        matvec callable (then pass ``n=``).
       k: number of eigenpairs.
       config: a :class:`SolverConfig` carrying every solver knob below; when
         given, the individual keyword arguments are ignored (``v0`` / ``n`` /
@@ -253,6 +262,12 @@ def eigsh(
         being computed on; device residency is bounded by ``stage_depth +
         1`` chunks.  0 disables the overlap.  Staging counters are reported
         in ``EigenResult.partition["staging"]``.
+      staging: out-of-core staged-chunk encoding — "f32" (plain), "bf16" /
+        "fp8" (quantized values + delta-encoded columns, decompressed
+        in-kernel; multiplies effective staging bandwidth), or "auto" (pack
+        iff the policy's storage dtype is already narrow).  Bytes staged,
+        effective bandwidth, and compression ratio are reported in
+        ``EigenResult.partition["spmv"]["staging"]``.
       jacobi: phase-2 Jacobi placement ("host" = the paper's, or "jax").
       mesh: optional ``jax.sharding.Mesh``; passing one under
         ``backend="auto"`` is an explicit request for the distributed
@@ -306,6 +321,7 @@ def eigsh(
         format=format,
         chunk_nnz=chunk_nnz,
         stage_depth=stage_depth,
+        staging=staging,
         jacobi=jacobi,
         axis=axis,
         recovery=recovery,

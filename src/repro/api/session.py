@@ -66,6 +66,7 @@ from ..core.operators import (
 from ..core.precision import PrecisionPolicy, auto_ladder, phase_op_counts
 from ..core.restarted import solve_restarted
 from ..kernels.engine import FORMATS, SpmvEngine, make_engine, tuner_probe_count
+from ..sparse.diskcsr import DiskCSR, is_diskcsr
 from ..sparse.formats import CSR, conversion_count
 from .coerce import CoercedInput, coerce_input, matrix_fingerprint
 from .dispatch import select_backend
@@ -101,7 +102,12 @@ _UNSET = object()  # distinguishes "inherit the session default" from None
 # subspace, max_restarts, jacobi, policy) are deliberately excluded: the
 # session resolves them per query, and policies get per-dtype operator
 # caches inside the session.
-_LAYOUT_FIELDS = ("backend", "format", "chunk_nnz", "stage_depth", "axis")
+_LAYOUT_FIELDS = ("backend", "format", "chunk_nnz", "stage_depth", "axis", "staging")
+
+# Largest on-disk payload the auto ladder's f64 residual verification will
+# materialize: a bigger DiskCSR stays on disk and the ladder falls back to
+# the Ritz bound (verification must never defeat the out-of-core budget).
+_DISK_VERIFY_MAX_BYTES = 1 << 28
 
 
 def policy_key(policy: Union[str, PrecisionPolicy]) -> str:
@@ -457,6 +463,12 @@ class EigenSession:
         plan for byte-identical input, the exact thing the digest forbids."""
         from ..sparse.formats import CSR as _CSR
 
+        if isinstance(self.csr, DiskCSR):
+            # Disk-backed sessions keep the mapping, never a RAM snapshot —
+            # materializing would defeat the out-of-core budget, and the
+            # sampled fingerprint already keys the on-disk content.
+            self._verify_a = None
+            return
         if self.csr is not None:
             self.csr = _CSR(
                 indptr=np.array(self.csr.indptr, copy=True),
@@ -475,6 +487,10 @@ class EigenSession:
         problem data plus ~one converted (device) copy per built plan —
         lazily-built per-policy plans grow it, and the cache re-enforces its
         byte budget after each build.  An estimate, not an audit."""
+        if isinstance(self.csr, DiskCSR):
+            # Disk pages are the kernel's to cache and reclaim; the session
+            # pins only O(n) planning metadata per built plan.
+            return int(self.csr.indptr.nbytes) * (2 + len(self._prepared))
         if self.csr is not None:
             base = self.csr.indptr.nbytes + self.csr.indices.nbytes + self.csr.data.nbytes
         elif self._dense is not None:
@@ -493,6 +509,9 @@ class EigenSession:
             tol=tol,
             device_count=self.device_count,
             mesh_given=self.mesh is not None,
+            disk_bytes=(
+                self.csr.nbytes_on_disk() if isinstance(self.csr, DiskCSR) else None
+            ),
         )
 
     def _mesh_for_solve(self):
@@ -589,12 +608,18 @@ class EigenSession:
                     accum_dtype=pol.phase_dtype("spmv"),
                     storage_dtype=pol.storage,
                 )
+        # REPRO_CHUNK_STAGING pins the staged-chunk encoding for A/B runs,
+        # overriding the config (ChunkedOperator validates the value).
+        staging = envcfg.raw("REPRO_CHUNK_STAGING") or getattr(cfg, "staging", "f32")
         op = ChunkedOperator(
             csr,
             chunk_nnz=cfg.chunk_nnz,
             dtype=pol.storage,
             engine=engine,
             stage_depth=cfg.stage_depth,
+            staging=staging,
+            mesh=self.mesh,
+            axis=cfg.axis,
         )
         return _Prepared("chunked", op, None, engine.format, engine)
 
@@ -779,7 +804,7 @@ class EigenSession:
                     "arrays": arrays,
                 }
             )
-        return {
+        state = {
             "schema": _EXPORT_SCHEMA,
             "repro_version": __version__,
             "matrix_fingerprint": self.ensure_fingerprint(),
@@ -788,6 +813,16 @@ class EigenSession:
             "n": int(self.n),
             "plans": plans,
         }
+        if isinstance(self.csr, DiskCSR):
+            # Disk-backed sessions persist a POINTER to the matrix, never its
+            # payload: the store can revive the session by reopening the
+            # mapping and re-checking the sampled fingerprint.
+            state["matrix_ref"] = {
+                "kind": "diskcsr",
+                "path": self.csr.path,
+                "fingerprint": self.ensure_fingerprint(),
+            }
+        return state
 
     def import_plans(self, state: dict) -> int:
         """Install plans exported by :meth:`export_state` into this session;
@@ -981,14 +1016,20 @@ class EigenSession:
         reuses it — escalation pays solves, not O(nnz) rebuilds) and dropped
         when the cache snapshots the host data (``_own_data``)."""
         if self._verify_a is None:
+            if isinstance(self.csr, DiskCSR) and (
+                self.csr.nbytes_on_disk() > _DISK_VERIFY_MAX_BYTES
+            ):
+                # Too big to materialize: verification must not defeat the
+                # out-of-core budget — the ladder falls back to Ritz bounds.
+                return None
             if self.csr is not None:
                 import scipy.sparse as sp
 
                 self._verify_a = sp.csr_matrix(
                     (
                         np.asarray(self.csr.data, dtype=np.float64),
-                        self.csr.indices,
-                        self.csr.indptr,
+                        np.asarray(self.csr.indices),
+                        np.asarray(self.csr.indptr),
                     ),
                     shape=self.csr.shape,
                 )
@@ -1222,19 +1263,35 @@ class EigenSession:
         )
         return q.idx, res
 
-    def _chunked_partition(self, prep: _Prepared, transfers_before: int) -> dict:
+    def _chunked_partition(self, prep: _Prepared, staging_before: dict) -> dict:
         op = prep.operator
-        staging = dict(op.staging)
-        # transfers is the per-call cost (the operator's counter is
-        # cumulative across a reused session's queries); conversions stays
-        # the one-time pinning count and max_resident the residency bound —
-        # both are invariants of the plan, not per-call costs.
-        staging["transfers"] = staging["transfers"] - transfers_before
+        staging = op.staging_stats()
+        # transfers / bytes / stage seconds are per-call costs (the
+        # operator's counters are cumulative across a reused session's
+        # queries); conversions stays the one-time build count and
+        # max_resident the residency bound — both are invariants of the
+        # plan, not per-call costs.  Bandwidth and compression are derived
+        # from the per-call deltas.
+        for key in ("transfers", "bytes_staged", "bytes_plain", "stage_s"):
+            staging[key] = staging[key] - staging_before.get(key, 0)
+        staging["effective_bandwidth_gbps"] = (
+            staging["bytes_plain"] / staging["stage_s"] / 1e9
+            if staging["stage_s"] > 0
+            else 0.0
+        )
+        staging["compression_ratio"] = (
+            staging["bytes_plain"] / staging["bytes_staged"]
+            if staging["bytes_staged"]
+            else 1.0
+        )
+        spmv = op.engine.describe() if op.engine is not None else {"format": "coo"}
+        spmv["staging"] = staging  # ISSUE contract: partition["spmv"]["staging"]
         return {
             "num_chunks": op.num_chunks,
             "stage_depth": op.stage_depth,
-            "staging": staging,
-            "spmv": op.engine.describe() if op.engine is not None else {"format": "coo"},
+            "disk_backed": bool(getattr(op, "disk_backed", False)),
+            "staging": staging,  # legacy location, kept for existing readers
+            "spmv": spmv,
         }
 
     def _solve_checkpoint(self, q: _NormQuery, pol, backend: str, k: int, m: int):
@@ -1278,12 +1335,14 @@ class EigenSession:
         for qs in starts.values():
             k_max = max(q.k for q in qs)
             m = max(q.m for q in qs)
-            transfers0 = prep.operator.staging["transfers"] if backend == "chunked" else 0
+            staging0 = dict(prep.operator.staging) if backend == "chunked" else {}
             ckpt = None
             if backend == "chunked":  # only the host loop can snapshot
                 pair = self._solve_checkpoint(qs[0], pol, backend, k_max, m)
                 if pair is not None:
-                    ckpt = (*pair, qs[0].ckpt_every)
+                    # 4th element: the operator itself, so the host loop can
+                    # checkpoint/restore the chunk cursor *inside* a step.
+                    ckpt = (*pair, qs[0].ckpt_every, prep.operator)
             sweep = solve_fixed(
                 prep.operator,
                 k_max,
@@ -1299,7 +1358,7 @@ class EigenSession:
             )
             self.stats["sweeps"] += 1
             partition = (
-                self._chunked_partition(prep, transfers0) if backend == "chunked" else {}
+                self._chunked_partition(prep, staging0) if backend == "chunked" else {}
             )
             for q in qs:
                 out.append(
@@ -1620,6 +1679,7 @@ def prepare(
     seed: int = 0,
     chunk_nnz: int = 1 << 20,
     stage_depth: int = 1,
+    staging: Optional[str] = None,
     jacobi: str = "host",
     axis: str = "data",
     recovery: Optional[str] = None,
@@ -1650,6 +1710,7 @@ def prepare(
         format=format,
         chunk_nnz=chunk_nnz,
         stage_depth=stage_depth,
+        staging=staging if staging is not None else "f32",
         jacobi=jacobi,
         axis=axis,
         recovery=recovery,
@@ -1698,12 +1759,16 @@ def _session_key(matrix_fp: str, cfg: SolverConfig, mesh) -> str:
     else:
         ids = [int(d.id) for d in np.asarray(mesh.devices).flat]
         mesh_part = f"mesh:{tuple(mesh.axis_names)}:{ids}"
+    # The staging pin rebuilds the chunked operator, so it is part of the
+    # session identity — flipping it between calls must not serve the old plan.
+    staging_pin = envcfg.raw("REPRO_CHUNK_STAGING") or ""
     return "|".join(
         (
             matrix_fp,
             config_fingerprint(cfg, _LAYOUT_FIELDS),
             mesh_part,
             f"dev{len(jax.devices())}",
+            f"staging_pin:{staging_pin}",
         )
     )
 
@@ -1758,11 +1823,15 @@ def get_session(
     limit = _cache_limit()
     key = None
     fp = None
-    if limit > 0 and isinstance(A, (CSR, np.ndarray, jax.Array)):
+    if limit > 0 and (
+        isinstance(A, (CSR, np.ndarray, jax.Array, DiskCSR))
+        or (isinstance(A, (str, os.PathLike)) and is_diskcsr(A))
+    ):
         # Digest-first fast path: a hit must not pay coercion.  (Note: a
         # device-resident jax.Array still pays one device->host read here —
         # the digest is of the host bytes; keep host copies of matrices you
-        # re-submit in a hot loop.)
+        # re-submit in a hot loop.  Disk-backed inputs probe by the sampled
+        # fingerprint — O(1) I/O however large the mapping.)
         fp = matrix_fingerprint(A)
         if fp is not None:
             key = _session_key(fp, cfg, mesh)

@@ -141,6 +141,24 @@ _DECLARED: Iterable[EnvKnob] = (
         25_000_000,
         "nnz threshold above which eigsh routes to the out-of-core chunked engine.",
     ),
+    _k(
+        "REPRO_CHUNK_STAGING",
+        "str",
+        "f32",
+        "Out-of-core chunk staging mode: 'f32' (plain), 'bf16'/'fp8' (packed), or 'auto'.",
+    ),
+    _k(
+        "REPRO_CHUNK_CKPT_EVERY",
+        "int",
+        1,
+        "Chunks between mid-step chunk-cursor checkpoints in the out-of-core host loop (0 = end-of-step saves only).",
+    ),
+    _k(
+        "REPRO_DISKCSR_FP_BLOCKS",
+        "int",
+        16,
+        "Strided 64KiB sample blocks per array in the DiskCSR content fingerprint.",
+    ),
     # --- Serving -----------------------------------------------------------
     _k(
         "REPRO_SERVING_STORE",

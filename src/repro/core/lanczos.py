@@ -457,8 +457,15 @@ def _lanczos_loop(
         # defeat the bounded-residency staging).
         carry = init
         start = 0
+        ckpt_op = None
         if checkpoint is not None:
-            store, token, every = checkpoint
+            store, token, every, *rest = checkpoint
+            # Optional 4th element: a ChunkedOperator whose streamed matvec
+            # checkpoints its *chunk cursor* mid-step — a crash between chunk
+            # stagings inside one step no longer loses the whole step.
+            ckpt_op = rest[0] if rest else None
+            if ckpt_op is not None and not hasattr(ckpt_op, "set_resume"):
+                ckpt_op = None
             state = store.load(token)
             if (
                 state is not None
@@ -474,9 +481,53 @@ def _lanczos_loop(
                     jnp.asarray(state["w"], cdt),
                     jnp.asarray(state["beta_prev"], cdt),
                 )
-                start = int(state["i"]) + 1
+                if state.get("chunk") is not None and ckpt_op is not None:
+                    # Mid-step snapshot: the carry above is the STEP-START
+                    # carry of step i; re-enter step i with the matvec armed
+                    # to skip already-accumulated chunks.  Chunk order is
+                    # fixed, so the resumed sweep is bit-identical.
+                    start = int(state["i"])
+                    ckpt_op.set_resume(
+                        int(state["chunk"]) + 1, jnp.asarray(state["partial"])
+                    )
+                else:
+                    start = int(state["i"]) + 1
+        ck_chunk_every = 0
+        if ckpt_op is not None and getattr(ckpt_op, "num_chunks", 1) > 1:
+            from ..configs import env as _envcfg
+
+            ck_chunk_every = _envcfg.get_int("REPRO_CHUNK_CKPT_EVERY")
         for i in range(start, m):
-            carry = body(i, carry)
+            if ck_chunk_every > 0:
+                basis_s, alphas_s, betas_s, v_prev_s, w_s, beta_prev_s = carry
+
+                def _chunk_hook(c, partial, _i=i):
+                    if (c + 1) % ck_chunk_every or c + 1 >= ckpt_op.num_chunks:
+                        return  # end-of-step save covers the final chunk
+                    store.save(
+                        token,
+                        {
+                            "engine": "lanczos",
+                            "i": _i,
+                            "n": n,
+                            "m": m,
+                            "chunk": c,
+                            "partial": partial,
+                            "basis": basis_s,
+                            "alphas": alphas_s,
+                            "betas": betas_s,
+                            "v_prev": v_prev_s,
+                            "w": w_s,
+                            "beta_prev": beta_prev_s,
+                        },
+                    )
+
+                ckpt_op.set_step_hook(_chunk_hook)
+            try:
+                carry = body(i, carry)
+            finally:
+                if ck_chunk_every > 0:
+                    ckpt_op.set_step_hook(None)
             if checkpoint is not None and (i + 1) % every == 0 and i + 1 < m:
                 basis_c, alphas_c, betas_c, v_prev_c, w_c, beta_prev_c = carry
                 store.save(

@@ -63,16 +63,19 @@ def chunk_row_bounds(indptr: np.ndarray, n: int, chunk_nnz: int) -> list:
     return list(zip(starts[:-1], starts[1:]))
 
 
-def chunk_rows_pad(rows: int, block_r: int, storage_dtype) -> int:
+def chunk_rows_pad(rows: int, block_r: int, storage_dtype, row_multiple: int = 1) -> int:
     """Padded row count of one staged ELL chunk: rows round up to the chunk's
     own row tile — the kernel's ``block_r`` capped at the next power of two
-    of the row count (floored at the TPU sublane minimum), so a chunk with
-    FEW rows (e.g. a hub row chunked alone) never allocates the full global
-    row tile times its huge width.  ``ell_matvec`` adapts its row tile down
-    to whatever divides this."""
-    min_r = 16 if jnp.dtype(storage_dtype).itemsize == 2 else 8
+    of the row count (floored at the TPU sublane minimum: 8 for 4-byte
+    dtypes, 16 for bf16/f16, 32 for fp8), so a chunk with FEW rows (e.g. a
+    hub row chunked alone) never allocates the full global row tile times
+    its huge width.  ``ell_matvec`` adapts its row tile down to whatever
+    divides this.  ``row_multiple`` additionally aligns the padded count
+    (the chunk-resident sharded path needs rows divisible by the mesh)."""
+    itemsize = jnp.dtype(storage_dtype).itemsize
+    min_r = {1: 32, 2: 16}.get(itemsize, 8)
     np2 = 1 << max(0, max(rows, min_r) - 1).bit_length()  # next pow2 >= rows
-    tile = max(min_r, min(block_r, np2))
+    tile = max(min_r, min(block_r, np2)) * max(1, int(row_multiple))
     return -(-rows // tile) * tile
 
 
@@ -148,27 +151,43 @@ class SparseOperator(LinearOperator):
 
 
 class ChunkedOperator(LinearOperator):
-    """Out-of-core SpMV: matrix data stays in host NumPy; each matvec streams
-    fixed-size chunks to the device and accumulates partial products.
+    """Out-of-core SpMV: matrix data stays on the host (in-RAM CSR **or** an
+    ``np.memmap``-backed :class:`~repro.sparse.diskcsr.DiskCSR`); each matvec
+    streams fixed-size chunks to the device and accumulates partial products.
 
     This reproduces the paper's unified-memory out-of-core mode: at any moment
     at most ``stage_depth + 1`` chunks are device-resident.  On a real TPU the
     staging is host-DRAM -> HBM DMA; here the same code path exercises the
     chunking and double-buffering logic.
 
-    Staging is double-buffered: chunks are *pre-pinned* once at construction
-    (host buffers already in the on-device storage dtype, so the per-matvec
-    path is a pure ``jax.device_put`` transfer — no repeated dtype/layout
-    conversion), and the transfer of chunk ``i+1 .. i+stage_depth`` is issued
-    asynchronously while chunk ``i``'s partial SpMV is in flight.  Transfer /
-    conversion / residency counters live in ``self.staging`` (surfaced by
-    ``eigsh`` in ``EigenResult.partition``).
+    **Host residency contract.**  Chunk buffers are built *lazily per staged
+    window* from the source CSR/mapping and dropped as soon as the chunk's
+    transfer is issued, so peak host residency is the source matrix (disk
+    pages for a ``DiskCSR``) plus ``stage_depth + 1`` chunk windows — never a
+    second full pinned copy of the matrix.  ``own_data=True`` opts into the
+    legacy eager pre-pin (conversion paid once, fastest repeat sweeps) and in
+    exchange the operator *drops its source-CSR reference* after pinning: the
+    caller hands the arrays over, and host residency ends at one copy again.
+
+    **Compressed staging.**  ``staging="bf16" | "fp8"`` stages ELL chunk
+    values quantized to the narrow dtype with per-row-block scales and
+    delta-encoded int16/int32 columns, decompressed inside the Pallas kernel
+    (``kernels/spmv_ell_packed.py``) — 2-4x the effective staging bandwidth.
+    ``staging="auto"`` packs when the storage dtype is already narrow
+    (bf16/f16 policies) and ships plain buffers otherwise.  Byte / bandwidth
+    / compression counters accumulate in ``self.staging`` (surfaced by
+    ``eigsh`` in ``EigenResult.partition["spmv"]["staging"]``).
+
+    **Sharded chunk residency.**  With a ``mesh``, each staged ELL chunk is
+    placed row-sharded across the mesh and its partial SpMV runs *inside*
+    ``shard_map`` — out-of-core and multi-device compose instead of
+    excluding each other (the PR 3 open item).
 
     With an ELL-format :class:`SpmvEngine` attached, chunks are row ranges
     staged as per-chunk-width ELL tiles (a hub row inflates only its own
     chunk's padding, not every chunk's) and the partial SpMV runs the Pallas
     kernel; otherwise the COO ``segment_sum`` reference path streams
-    nnz-sized slices.
+    nnz-sized slices (plain staging only).
     """
 
     # The Lanczos loop must stay a host loop for this operator: tracing the
@@ -176,13 +195,19 @@ class ChunkedOperator(LinearOperator):
     # defeating the bounded-residency staging (see lanczos_tridiag(jit=...)).
     prefers_jit = False
 
+    STAGING_MODES = ("f32", "bf16", "fp8", "auto")
+
     def __init__(
         self,
-        csr: CSR,
+        csr,
         chunk_nnz: int = 1 << 20,
         dtype=jnp.float32,
         engine: Optional[SpmvEngine] = None,
         stage_depth: int = 1,
+        own_data: bool = False,
+        staging: str = "f32",
+        mesh=None,
+        axis: str = "data",
     ):
         self.n = csr.n
         self._dtype = dtype
@@ -194,30 +219,65 @@ class ChunkedOperator(LinearOperator):
                 "ChunkedOperator stages chunks as COO or ELL; per-chunk "
                 f"{self.spmv_format.upper()} is not supported (pick format='ell' or 'coo')"
             )
-        self.staging = {"conversions": 0, "transfers": 0, "max_resident": 0}
-        if self.spmv_format == "ell":
-            self._init_ell_chunks(csr, chunk_nnz, dtype, engine)
-        else:
-            self._init_coo_chunks(csr, chunk_nnz, dtype)
-
-    def _init_coo_chunks(self, csr: CSR, chunk_nnz: int, dtype):
-        row = np.repeat(np.arange(csr.n, dtype=np.int32), csr.row_nnz())
-        np_dtype = np.dtype(jnp.dtype(dtype))  # bf16 host buffers via ml_dtypes
-        self._chunks = []
-        nnz = csr.nnz
-        for lo in range(0, nnz, chunk_nnz):
-            hi = min(lo + chunk_nnz, nnz)
-            pad = chunk_nnz - (hi - lo)
-            self._chunks.append(
-                (
-                    np.pad(row[lo:hi], (0, pad)),
-                    np.pad(csr.indices[lo:hi], (0, pad)),
-                    np.pad(csr.data[lo:hi], (0, pad)).astype(np_dtype),
-                )
+        if staging not in self.STAGING_MODES:
+            raise ValueError(
+                f"unknown staging mode {staging!r}; expected one of {self.STAGING_MODES}"
             )
-            self.staging["conversions"] += 1  # host layout/dtype prep: once
-        self.num_chunks = len(self._chunks)
-        count_conversions(self.num_chunks)
+        if staging == "auto":
+            # Pack when the storage dtype is already narrow: the quantization
+            # the policy accepted is the quantization the staging ships.
+            itemsize = jnp.dtype(dtype).itemsize
+            staging = "bf16" if itemsize == 2 else ("fp8" if itemsize == 1 else "f32")
+        if staging != "f32" and self.spmv_format != "ell":
+            staging = "f32"  # packed staging is an ELL-kernel path
+        self.staging_mode = staging
+        self.mesh = mesh
+        self._axis = axis
+        self._mesh_size = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+        from ..sparse.diskcsr import DiskCSR  # local: sparse imports stay light
+
+        self.disk_backed = isinstance(csr, DiskCSR)
+        self.source_path = csr.path if self.disk_backed else None
+        self.staging = {
+            "conversions": 0,
+            "transfers": 0,
+            "max_resident": 0,
+            "bytes_staged": 0,
+            "bytes_plain": 0,
+            "stage_s": 0.0,
+            "mode": self.staging_mode,
+        }
+        self._csr = csr
+        self._row_nnz = np.asarray(csr.row_nnz())  # O(n), not O(nnz)
+        if self.spmv_format == "ell":
+            self._init_ell_meta(csr, chunk_nnz, dtype, engine)
+        else:
+            self._init_coo_meta(csr, chunk_nnz)
+        self._built = np.zeros(self.num_chunks, dtype=bool)
+        self._pinned = None
+        # Mid-step checkpoint bindings (see ``set_step_hook``/``set_resume``):
+        # the Lanczos host loop installs these so the ONE streamed matvec per
+        # step can persist/restore its chunk cursor without the loop having
+        # to thread extra arguments through the generic Ops.matvec closure.
+        self._step_hook = None
+        self._resume = None
+        if own_data and not self.disk_backed:
+            # Eager pre-pin (the legacy fast path), then release the source:
+            # the caller opted into handing the arrays over, so only ONE host
+            # copy (the pinned chunks) survives construction.
+            self._pinned = [self._build_chunk(j) for j in range(self.num_chunks)]
+            self._csr = None
+            self._row_nnz = None
+
+    # ------------------------------ chunk planning ------------------------------
+
+    def _init_coo_meta(self, csr, chunk_nnz: int):
+        nnz = csr.nnz
+        self._coo_chunk_nnz = int(chunk_nnz)
+        self._coo_bounds = [
+            (lo, min(lo + chunk_nnz, nnz)) for lo in range(0, max(nnz, 1), chunk_nnz)
+        ]
+        self.num_chunks = len(self._coo_bounds)
 
         # One jitted partial-SpMV per instance, keyed on the (static) accum
         # dtype: defining it inside matvec would retrace on every call.
@@ -228,40 +288,40 @@ class ChunkedOperator(LinearOperator):
 
         self._partial_spmv = _partial_spmv
 
-    def _init_ell_chunks(self, csr: CSR, chunk_nnz: int, dtype, engine: SpmvEngine):
+    def _init_ell_meta(self, csr, chunk_nnz: int, dtype, engine: SpmvEngine):
         indptr, n = csr.indptr, csr.n
         bounds = chunk_row_bounds(indptr, n, chunk_nnz)
-
-        row_nnz = csr.row_nnz()
-        np_dtype = np.dtype(jnp.dtype(dtype))  # bf16 host buffers via ml_dtypes
-
-        self._chunks = []
+        # TPU sublane minima follow the *staged* value dtype (fp8 tiles need
+        # 32 sublanes); the sharded path additionally needs rows divisible by
+        # the mesh extent.
+        staged_dtype = {"bf16": jnp.bfloat16, "fp8": "float8_e4m3fn"}.get(
+            self.staging_mode, dtype
+        )
+        self._bounds = []
+        self._widths = []
+        self._rows_pads = []
         self._r0s = []
         n_out_pad = 0
+        self.padded_slots = 0
         for r0, r1 in bounds:
-            lo, hi = int(indptr[r0]), int(indptr[r1])
-            local_nnz = row_nnz[r0:r1]
+            local_nnz = self._row_nnz[r0:r1]
             # Per-chunk width (128-lane aligned) AND per-chunk row padding:
             # a hub row pays for its own chunk only — neither its width nor
             # the global row tile inflates any other chunk, and a few-row
             # hub chunk never allocates block_r x hub_width zeros.
             width = int(max(1, local_nnz.max() if local_nnz.size else 1))
             width = -(-width // 128) * 128
-            rows_pad = chunk_rows_pad(r1 - r0, engine.tiles.block_r, dtype)
-            rix = np.repeat(np.arange(r1 - r0), local_nnz)
-            pos = np.arange(hi - lo) - np.repeat(indptr[r0:r1] - lo, local_nnz)
-            val = np.zeros((rows_pad, width), dtype=np_dtype)
-            col = np.zeros((rows_pad, width), dtype=np.int32)
-            val[rix, pos] = csr.data[lo:hi]
-            col[rix, pos] = csr.indices[lo:hi]
-            self._chunks.append((val, col))
+            rows_pad = chunk_rows_pad(
+                r1 - r0, engine.tiles.block_r, staged_dtype, row_multiple=self._mesh_size
+            )
+            self._bounds.append((r0, r1))
+            self._widths.append(width)
+            self._rows_pads.append(rows_pad)
             self._r0s.append(r0)
             n_out_pad = max(n_out_pad, r0 + rows_pad)
-            self.staging["conversions"] += 1  # host layout/dtype prep: once
-        self.num_chunks = len(self._chunks)
-        count_conversions(self.num_chunks)
+            self.padded_slots += rows_pad * width
+        self.num_chunks = len(self._bounds)
         self._n_out_pad = n_out_pad
-        self.padded_slots = sum(v.size for v, _ in self._chunks)
 
         # Jitted per-chunk kernel SpMV; static over the engine (hashable) so a
         # different accum dtype retraces once per distinct chunk width, not
@@ -272,29 +332,178 @@ class ChunkedOperator(LinearOperator):
             seg = jax.lax.dynamic_slice(y, (r0,), (yk.shape[0],))
             return jax.lax.dynamic_update_slice(y, seg + yk, (r0,))
 
-        self._partial_ell = _partial_ell
+        @partial(jax.jit, static_argnames=("eng",))
+        def _partial_ell_packed(val, scale, base, dcol, x, y, r0, *, eng):
+            yk = eng.packed_ell_matvec(val, scale, base, dcol, x).astype(y.dtype)
+            seg = jax.lax.dynamic_slice(y, (r0,), (yk.shape[0],))
+            return jax.lax.dynamic_update_slice(y, seg + yk, (r0,))
 
-    def _stream(self, consume):
-        """Double-buffered chunk stream: stage (device_put) up to
-        ``stage_depth`` chunks ahead of the one being consumed; references
-        are dropped as soon as a chunk's partial SpMV is dispatched, so at
-        most ``stage_depth + 1`` chunks are device-resident."""
+        self._partial_ell = _partial_ell
+        self._partial_ell_packed = _partial_ell_packed
+
+    # ------------------------------ chunk building ------------------------------
+
+    def _build_chunk(self, j: int):
+        """Materialize chunk ``j``'s host staging buffers from the source
+        CSR/mapping.  Called lazily per staged window (the headline host-
+        memory fix: buffers exist only while their window is staged) or once
+        per chunk from the eager ``own_data`` pre-pin."""
+        arrs = (
+            self._build_ell_chunk(j)
+            if self.spmv_format == "ell"
+            else self._build_coo_chunk(j)
+        )
+        if not self._built[j]:
+            # Conversion census ticks once per chunk per operator lifetime:
+            # rebuilding the same window on a later sweep is staging traffic
+            # (counted in bytes_staged), not a new layout conversion.
+            self._built[j] = True
+            self.staging["conversions"] += 1
+            count_conversions(1)
+        return arrs
+
+    def _build_coo_chunk(self, j: int):
+        lo, hi = self._coo_bounds[j]
+        indptr = self._csr.indptr
+        np_dtype = np.dtype(jnp.dtype(self._dtype))  # bf16 host buffers via ml_dtypes
+        # Rows overlapping [lo, hi): repeat each row id by its nnz inside the
+        # window — O(window), never the O(nnz) full row array.
+        r_lo = int(np.searchsorted(indptr, lo, side="right")) - 1
+        r_hi = int(np.searchsorted(indptr, hi, side="left"))
+        counts = np.minimum(indptr[r_lo + 1 : r_hi + 1], hi) - np.maximum(
+            indptr[r_lo:r_hi], lo
+        )
+        row = np.repeat(np.arange(r_lo, r_hi, dtype=np.int32), counts)
+        pad = self._coo_chunk_nnz - (hi - lo)
+        return (
+            np.pad(row, (0, pad)),
+            np.pad(np.asarray(self._csr.indices[lo:hi]), (0, pad)),
+            np.pad(np.asarray(self._csr.data[lo:hi], dtype=np.float64), (0, pad)).astype(
+                np_dtype
+            ),
+        )
+
+    def _build_ell_chunk(self, j: int):
+        r0, r1 = self._bounds[j]
+        indptr = self._csr.indptr
+        lo, hi = int(indptr[r0]), int(indptr[r1])
+        local_nnz = self._row_nnz[r0:r1]
+        width, rows_pad = self._widths[j], self._rows_pads[j]
+        rix = np.repeat(np.arange(r1 - r0), local_nnz)
+        pos = np.arange(hi - lo) - np.repeat(np.asarray(indptr[r0:r1]) - lo, local_nnz)
+        col = np.zeros((rows_pad, width), dtype=np.int32)
+        col[rix, pos] = self._csr.indices[lo:hi]
+        if self.staging_mode == "f32":
+            np_dtype = np.dtype(jnp.dtype(self._dtype))
+            val = np.zeros((rows_pad, width), dtype=np_dtype)
+            val[rix, pos] = np.asarray(self._csr.data[lo:hi], dtype=np.float64).astype(
+                np_dtype
+            )
+            return (val, col)
+        from ..kernels.spmv_ell_packed import pack_ell_chunk
+
+        val = np.zeros((rows_pad, width), dtype=np.float32)
+        val[rix, pos] = self._csr.data[lo:hi]
+        return pack_ell_chunk(val, col, self.staging_mode)
+
+    def _plain_chunk_bytes(self, j: int) -> int:
+        """Bytes plain (uncompressed) staging would ship for chunk ``j`` —
+        the numerator of the compression ratio."""
+        if self.spmv_format == "ell":
+            slots = self._rows_pads[j] * self._widths[j]
+            return slots * (jnp.dtype(self._dtype).itemsize + 4)  # val + int32 col
+        return self._coo_chunk_nnz * (8 + jnp.dtype(self._dtype).itemsize)
+
+    # ------------------------------- staging loop -------------------------------
+
+    def _device_put_chunk(self, arrs):
+        if self.mesh is None or self.spmv_format != "ell":
+            return tuple(jax.device_put(a) for a in arrs)
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        # Chunk-resident sharding: rows of the staged window split across the
+        # mesh (rows_pad is padded to a mesh multiple), columns replicated.
+        sh = NamedSharding(self.mesh, PartitionSpec(self._axis, None))
+        return tuple(jax.device_put(a, sh) for a in arrs)
+
+    def _stream(self, consume, start: int = 0):
+        """Double-buffered chunk stream: build + stage (device_put) up to
+        ``stage_depth`` chunks ahead of the one being consumed; host buffers
+        are dropped once their transfer is issued and device references as
+        soon as the chunk's partial SpMV is dispatched, so at most
+        ``stage_depth + 1`` chunks are resident on either side.  ``start``
+        skips already-consumed chunks (mid-step checkpoint resume)."""
+        import time as _time
+
         staged = {}
 
         def stage(j):
             if j < self.num_chunks and j not in staged:
                 _faults.check_chunk_io(j)
-                staged[j] = tuple(jax.device_put(a) for a in self._chunks[j])
+                t0 = _time.perf_counter()
+                arrs = self._pinned[j] if self._pinned is not None else self._build_chunk(j)
+                staged[j] = self._device_put_chunk(arrs)
+                self.staging["stage_s"] += _time.perf_counter() - t0
                 self.staging["transfers"] += 1
+                self.staging["bytes_staged"] += sum(int(a.nbytes) for a in arrs)
+                self.staging["bytes_plain"] += self._plain_chunk_bytes(j)
 
-        for i in range(self.num_chunks):
+        for i in range(start, self.num_chunks):
             stage(i)
             for j in range(i + 1, min(i + 1 + self.stage_depth, self.num_chunks)):
                 stage(j)  # issued while chunk i's compute is in flight
             self.staging["max_resident"] = max(self.staging["max_resident"], len(staged))
             consume(i, staged.pop(i))
 
-    def matvec(self, x, accum_dtype=None):
+    def staging_stats(self) -> dict:
+        """Staging counters + derived bandwidth/compression metrics (what
+        ``partition["spmv"]["staging"]`` reports)."""
+        out = dict(self.staging)
+        staged = out["bytes_staged"]
+        out["effective_bandwidth_gbps"] = (
+            out["bytes_plain"] / out["stage_s"] / 1e9 if out["stage_s"] > 0 else 0.0
+        )
+        out["compression_ratio"] = out["bytes_plain"] / staged if staged else 1.0
+        return out
+
+    # --------------------------------- matvec -----------------------------------
+
+    def _throttle(self, i: int, y) -> None:
+        """Bound the async dispatch queue to the staging window.  The host
+        loop builds and dispatches chunks far faster than the device drains
+        them; without a periodic sync the executor's queue pins EVERY
+        dispatched chunk's buffers at once and the ``stage_depth + 1``
+        residency contract only holds for the host-side windows.  Blocking
+        on the running accumulator once per window retires the chunks behind
+        it while the window ahead still overlaps build/transfer/compute."""
+        if (i + 1) % (self.stage_depth + 1) == 0:
+            jax.block_until_ready(y)
+
+    def set_step_hook(self, hook):
+        """Install ``hook(chunk_index, partial_accumulator)`` to observe the
+        running accumulator of the *next* matvec after each consumed chunk
+        (the chunk-cursor checkpoint writer).  One-per-step: the caller
+        reinstalls before each step."""
+        self._step_hook = hook
+
+    def set_resume(self, start_chunk: int, partial_y):
+        """Arm the next matvec to skip chunks ``< start_chunk`` and seed its
+        accumulator from ``partial_y`` (chunk-cursor checkpoint restore).
+        Consumed by exactly one matvec call."""
+        self._resume = (int(start_chunk), partial_y)
+
+    def matvec(self, x, accum_dtype=None, *, start_chunk: int = 0, partial_y=None,
+               on_chunk=None):
+        """Streamed SpMV.  ``start_chunk``/``partial_y`` resume a partially
+        accumulated product from a mid-step checkpoint (chunks are consumed
+        in a fixed order, so resuming from the saved partial is bit-identical
+        to an uninterrupted sweep); ``on_chunk(i, y)`` observes the running
+        accumulator after each chunk (the checkpoint writer hook)."""
+        if start_chunk == 0 and partial_y is None and self._resume is not None:
+            start_chunk, partial_y = self._resume
+            self._resume = None
+        if on_chunk is None:
+            on_chunk = self._step_hook
         acc = jnp.dtype(accum_dtype or self._dtype)
         if self.spmv_format == "ell":
             import dataclasses as _dc
@@ -302,24 +511,98 @@ class ChunkedOperator(LinearOperator):
             eng = self.engine
             if jnp.dtype(eng.accum_dtype) != acc:
                 eng = _dc.replace(eng, accum_dtype=acc)
-            y = [jnp.zeros((self._n_out_pad,), acc)]
+            if partial_y is not None:
+                y = [jnp.asarray(partial_y, acc)]
+            else:
+                y = [jnp.zeros((self._n_out_pad,), acc)]
+
+            packed = self.staging_mode != "f32"
 
             def consume(i, arrs):
-                val, col = arrs
-                y[0] = self._partial_ell(
-                    val, col, x, y[0], jnp.asarray(self._r0s[i], jnp.int32), eng=eng
-                )
+                r0 = jnp.asarray(self._r0s[i], jnp.int32)
+                if packed:
+                    val, scale, base, dcol = arrs
+                    y[0] = self._sharded_or_local_packed(
+                        val, scale, base, dcol, x, y[0], r0, eng
+                    )
+                else:
+                    val, col = arrs
+                    y[0] = self._sharded_or_local_plain(val, col, x, y[0], r0, eng)
+                self._throttle(i, y[0])
+                if on_chunk is not None:
+                    on_chunk(i, y[0])
 
-            self._stream(consume)
+            self._stream(consume, start=start_chunk)
             return y[0][: self.n]
-        y = [jnp.zeros((self.n,), acc)]
+        y = [
+            jnp.asarray(partial_y, acc)
+            if partial_y is not None
+            else jnp.zeros((self.n,), acc)
+        ]
 
         def consume(i, arrs):
             row, col, val = arrs
             y[0] = self._partial_spmv(row, col, val, x, y[0], acc=acc)
+            self._throttle(i, y[0])
+            if on_chunk is not None:
+                on_chunk(i, y[0])
 
-        self._stream(consume)
+        self._stream(consume, start=start_chunk)
         return y[0]
+
+    # ------------------------- sharded partial dispatch -------------------------
+
+    def _shard_fn(self, eng, packed: bool):
+        """shard_map-wrapped per-chunk partial SpMV: the kernel runs on each
+        device's row slice of the staged chunk, with ``x`` replicated — the
+        composition of out-of-core staging and the paper's multi-device
+        partition.  Cached per (engine, kind) since shard_map closures are
+        rebuilt otherwise."""
+        key = (eng, packed)
+        cache = getattr(self, "_shard_fns", None)
+        if cache is None:
+            cache = self._shard_fns = {}
+        if key not in cache:
+            from jax.sharding import PartitionSpec as P
+
+            # lazy: avoids an import cycle (check_vma/check_rep off: the
+            # replicated-x rule for pallas_call is unimplemented upstream)
+            from .distributed import _SHARD_MAP_KW, _shard_map
+
+            ax = self._axis
+            if packed:
+
+                def local(val, scale, base, dcol, x):
+                    return eng.packed_ell_matvec(val, scale, base, dcol, x)
+
+                in_specs = (P(ax, None),) * 4 + (P(),)
+            else:
+
+                def local(val, col, x):
+                    return eng.ell_matvec(val, col, x)
+
+                in_specs = (P(ax, None), P(ax, None), P())
+            cache[key] = jax.jit(
+                _shard_map(
+                    local, mesh=self.mesh, in_specs=in_specs, out_specs=P(ax),
+                    **_SHARD_MAP_KW,
+                )
+            )
+        return cache[key]
+
+    def _sharded_or_local_plain(self, val, col, x, y, r0, eng):
+        if self.mesh is None:
+            return self._partial_ell(val, col, x, y, r0, eng=eng)
+        yk = self._shard_fn(eng, packed=False)(val, col, x).astype(y.dtype)
+        seg = jax.lax.dynamic_slice(y, (r0,), (yk.shape[0],))
+        return jax.lax.dynamic_update_slice(y, seg + yk, (r0,))
+
+    def _sharded_or_local_packed(self, val, scale, base, dcol, x, y, r0, eng):
+        if self.mesh is None:
+            return self._partial_ell_packed(val, scale, base, dcol, x, y, r0, eng=eng)
+        yk = self._shard_fn(eng, packed=True)(val, scale, base, dcol, x).astype(y.dtype)
+        seg = jax.lax.dynamic_slice(y, (r0,), (yk.shape[0],))
+        return jax.lax.dynamic_update_slice(y, seg + yk, (r0,))
 
 
 @dataclasses.dataclass

@@ -1037,6 +1037,39 @@ class SpmvEngine:
             interpret=self.interpret,
         )
 
+    def packed_ell_matvec(
+        self,
+        val: jax.Array,
+        scale: jax.Array,
+        base: jax.Array,
+        dcol: jax.Array,
+        x: jax.Array,
+    ) -> jax.Array:
+        """y = dequant(val, scale) @ x over delta-encoded columns (compressed
+        out-of-core staging; see ``kernels/spmv_ell_packed.py``).  Returns
+        (rows_padded,) in the accum dtype."""
+        acc = jnp.dtype(self.accum_dtype)
+        if not self._use_kernel():
+            vals = val.astype(acc) * scale.astype(acc)
+            cols = base + jnp.cumsum(dcol.astype(jnp.int32), axis=1)
+            return jnp.sum(vals * jnp.take(x, cols).astype(acc), axis=1)
+        from .spmv_ell_packed import spmv_ell_packed_kernel_call
+
+        # Row tile adapts to the per-chunk padded row count (same contract
+        # as ell_matvec); the width is one tile — the in-kernel delta cumsum
+        # needs the whole row.
+        block_r = _fit_tile(self.tiles.block_r, val.shape[0])
+        return spmv_ell_packed_kernel_call(
+            val,
+            scale,
+            base,
+            dcol,
+            x,
+            block_r=block_r,
+            accum_dtype=acc,
+            interpret=self.interpret,
+        )
+
     def bsr_matvec(self, val: jax.Array, bcol: jax.Array, x: jax.Array) -> jax.Array:
         """y = BSR(val, bcol) @ x -> (nbr * BS,) in the accum dtype."""
         acc = jnp.dtype(self.accum_dtype)

@@ -15,11 +15,13 @@ from .lanczos_update import lanczos_update_kernel_call
 from .mixed_dot import mixed_dot_kernel_call
 from .spmv_bsr import blocked_ell_from_csr, spmv_bsr_kernel_call
 from .spmv_ell import spmv_ell_kernel_call
+from .spmv_ell_packed import spmv_ell_packed_kernel_call
 
 __all__ = [
     "default_interpret",
     "spmv_ell",
     "spmv_ell_alpha",
+    "spmv_ell_packed",
     "spmv_bsr",
     "mixed_dot",
     "lanczos_update",
@@ -60,6 +62,31 @@ def spmv_ell_alpha(mat: DeviceELL, x: jax.Array, v: jax.Array, accum_dtype=None,
     vpad = jnp.pad(v, (0, rows - v.shape[0])) if v.shape[0] < rows else v
     w, alpha = spmv_ell_alpha_kernel_call(mat.val, mat.col, x, vpad, accum_dtype=acc, **kw)
     return w[: mat.n_rows], alpha[0]
+
+
+def spmv_ell_packed(
+    val: jax.Array,
+    scale: jax.Array,
+    base: jax.Array,
+    dcol: jax.Array,
+    x: jax.Array,
+    n_rows: int,
+    accum_dtype=None,
+    **kw,
+) -> jax.Array:
+    """SpMV over one compressed staged chunk (see ``spmv_ell_packed.py``):
+    dequantizes bf16/fp8 values by the row-block scales and cumsums the
+    delta-encoded columns in-kernel.  Returns (n_rows,) in accum dtype."""
+    acc = jnp.dtype(accum_dtype or jnp.float32)
+    if acc == jnp.dtype(jnp.float64):
+        # jnp reference for CPU f64 validation (same decompress arithmetic).
+        vals = val.astype(acc) * scale.astype(acc)
+        cols = base + jnp.cumsum(dcol.astype(jnp.int32), axis=1)
+        y = jnp.sum(vals * jnp.take(x, cols).astype(acc), axis=1)
+        return y[:n_rows]
+    kw.setdefault("interpret", default_interpret())
+    y = spmv_ell_packed_kernel_call(val, scale, base, dcol, x, accum_dtype=acc, **kw)
+    return y[:n_rows]
 
 
 def spmv_bsr(blocked, x: jax.Array, accum_dtype=None, **kw) -> jax.Array:

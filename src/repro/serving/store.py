@@ -96,7 +96,11 @@ class SessionStore:
         if path is None:
             return None
         state = session.export_state()
-        if not state["plans"]:
+        if not state["plans"] and not state.get("matrix_ref"):
+            # Nothing persistable.  Disk-backed sessions ARE persistable even
+            # with zero exportable plans: their entry is a header-only
+            # POINTER (path + sampled fingerprint) to the on-disk matrix —
+            # never a copy of an out-of-core payload into plans.npz.
             return None
         arrays = {}
         plan_headers = []
@@ -167,6 +171,37 @@ class SessionStore:
         if state is None:
             return 0
         return session.import_plans(state)
+
+    @staticmethod
+    def revive_matrix(state: dict):
+        """Reopen the on-disk matrix a persisted entry's ``matrix_ref``
+        points at, verifying the sampled content fingerprint — a moved,
+        rewritten, or deleted mapping warns and reads as absent (None), so a
+        revived server never serves plans for bytes that changed under it.
+        Returns a :class:`~repro.sparse.diskcsr.DiskCSR` or None."""
+        import warnings
+
+        ref = (state or {}).get("matrix_ref")
+        if not ref or ref.get("kind") != "diskcsr":
+            return None
+        from ..sparse.diskcsr import diskcsr_fingerprint, is_diskcsr, open_diskcsr
+
+        path = ref.get("path")
+        if not path or not is_diskcsr(path):
+            warnings.warn(
+                f"persisted matrix_ref points at {path!r}, which is no longer "
+                "a diskcsr directory; the entry reads as absent",
+                stacklevel=2,
+            )
+            return None
+        if diskcsr_fingerprint(path) != ref.get("fingerprint"):
+            warnings.warn(
+                f"on-disk matrix at {path!r} changed since this entry was "
+                "persisted (sampled fingerprint mismatch); refusing to revive",
+                stacklevel=2,
+            )
+            return None
+        return open_diskcsr(path)
 
 
 def default_checkpoint_root() -> str:

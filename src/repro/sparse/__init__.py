@@ -1,3 +1,10 @@
+from .diskcsr import (
+    DiskCSR,
+    diskcsr_fingerprint,
+    is_diskcsr,
+    open_diskcsr,
+    save_diskcsr,
+)
 from .formats import (
     CSR,
     DeviceBSR,
@@ -17,7 +24,12 @@ __all__ = [
     "DeviceBSR",
     "DeviceCOO",
     "DeviceELL",
+    "DiskCSR",
     "csr_from_coo",
+    "diskcsr_fingerprint",
+    "is_diskcsr",
+    "open_diskcsr",
+    "save_diskcsr",
     "shard_to_blocked_ell",
     "shard_to_ell",
     "to_device_bsr",

@@ -598,17 +598,18 @@ def test_autotuner_solve_end_to_end(tune_env):
 
 
 def test_chunked_stages_each_chunk_once_per_instance():
-    """Acceptance: host->device *conversion* happens once per instance (at
-    construction), never per matvec; per-matvec work is pure transfers."""
+    """Acceptance: host->device *conversion* happens once per chunk lifetime
+    (lazily, on the first sweep — nothing is pre-pinned at construction),
+    never per matvec; repeat matvecs are pure transfers."""
     road = generate("road", 900, 3.0, seed=2, values="normalized")
     engine = make_engine(road, "ell", accum_dtype=jnp.float64)
     op = ChunkedOperator(road, chunk_nnz=800, dtype=jnp.float64, engine=engine)
     assert op.num_chunks > 1
-    assert op.staging["conversions"] == op.num_chunks
+    assert op.staging["conversions"] == 0  # lazy: construction stages nothing
     x = jnp.asarray(np.random.default_rng(0).standard_normal(road.n))
     for _ in range(3):
         op.matvec(x, accum_dtype=jnp.float64).block_until_ready()
-    assert op.staging["conversions"] == op.num_chunks  # unchanged by matvecs
+    assert op.staging["conversions"] == op.num_chunks  # first sweep only
     assert op.staging["transfers"] == 3 * op.num_chunks
 
 
@@ -632,12 +633,11 @@ def test_chunked_per_chunk_widths_cut_hub_padding():
     engine = make_engine(web, "ell", accum_dtype=jnp.float32)
     op = ChunkedOperator(web, chunk_nnz=400, dtype=jnp.float32, engine=engine)
     assert op.num_chunks > 2
-    rows_pad = op._chunks[0][0].shape[0]
+    rows_pad = op._rows_pads[0]
     global_width = -(-int(web.row_nnz().max()) // 128) * 128
     global_slots = op.num_chunks * rows_pad * global_width
     assert op.padded_slots < global_slots
-    widths = {v.shape[1] for v, _ in op._chunks}
-    assert len(widths) > 1  # hub chunk is wide, the rest stay narrow
+    assert len(set(op._widths)) > 1  # hub chunk is wide, the rest stay narrow
     x = np.random.default_rng(5).standard_normal(web.n)
     y = np.asarray(op.matvec(jnp.asarray(x, jnp.float64), accum_dtype=jnp.float64))
     np.testing.assert_allclose(y, web.toarray() @ x, rtol=1e-5, atol=1e-5)
